@@ -1,0 +1,190 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    concordance   — Fig. 2 left: engine vs per-trait OLS (Pearson of -log10 p)
+    throughput    — Fig. 2 right / §3.2: wall time vs panel width P, panel
+                    engine vs per-trait loop (the fastGWA-usage analogue)
+    engines       — dense (paper-faithful) vs fused 2-bit path, equal stats
+    kernels       — us/call of the association GEMM across batch geometries
+    scaling_n     — runtime vs cohort size N (linear, §2.2)
+
+Prints ``name,us_per_call,derived`` CSV rows.  CPU numbers contextualize the
+*shape* of the paper's claims (sub-linear P scaling, engine equivalence);
+absolute TPU throughput comes from the dry-run roofline (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy import stats as sps
+
+from repro.core import association as A
+from repro.core import residualize as Rz
+from repro.core.screening import GenomeScan, ScanConfig
+from repro.io import plink, synth
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, repeats=3):
+    out = fn(*args)  # compile / warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6, out
+
+
+def bench_concordance() -> None:
+    """Paper Fig. 2 left: near-perfect agreement with per-trait OLS."""
+    co = synth.make_cohort(n_samples=500, n_markers=300, n_traits=8,
+                           n_causal=6, effect_size=0.5, seed=1)
+    n, q = 500, co.covariates.shape[1]
+    qb = Rz.covariate_basis(jnp.asarray(co.covariates), n)
+    panel = Rz.residualize_and_standardize(jnp.asarray(co.phenotypes), qb)
+    res, _ = A.assoc_batch(
+        jnp.asarray(co.dosages.astype(np.float32)), panel.y,
+        n_samples=n, n_covariates=q,
+    )
+    g_std, _ = A.standardize_genotype_batch(jnp.asarray(co.dosages.astype(np.float32)))
+    g_std = np.asarray(g_std)
+    yr = np.asarray(panel.y)
+    ref = np.empty((300, 8), np.float64)
+    for m in range(300):
+        for p in range(8):
+            ref[m, p] = sps.linregress(g_std[m], yr[:, p]).rvalue
+    r_pearson = np.corrcoef(np.asarray(res.r).ravel(), ref.ravel())[0, 1]
+    emit("concordance_fig2_left", 0.0, f"pearson_r={r_pearson:.6f}")
+
+
+def bench_throughput() -> None:
+    """Paper Fig. 2 right: runtime vs phenotype count, panel vs per-trait.
+
+    Two pipelines are timed: the scan core (GEMM + t statistics — on the
+    paper's GPU/our TPU target this is the whole cost) and the full pipeline
+    including -log10 p.  On this single CPU core the special-function
+    epilogue (128-trip continued fraction per cell) dominates and scales
+    linearly in P, masking the amortization; the core rows reproduce the
+    paper's sub-linear claim, and the full rows document the artifact
+    honestly (on TPU the epilogue is <0.1 % of the GEMM — §Roofline)."""
+    n, m = 2_000, 4_096
+    rng = np.random.default_rng(0)
+    g = rng.binomial(2, 0.3, size=(m, n)).astype(np.float32)
+    g_dev, _ = A.standardize_genotype_batch(jnp.asarray(g))
+    g_dev = jax.block_until_ready(g_dev)
+
+    core_opts = A.AssocOptions(compute_neglog10p=False)
+
+    @jax.jit
+    def core_scan(g_std, y_std):
+        return A.assoc_from_standardized(
+            g_std, y_std, n_samples=n, n_covariates=0, options=core_opts
+        )
+
+    @jax.jit
+    def full_scan(g_std, y_std):
+        return A.assoc_from_standardized(g_std, y_std, n_samples=n, n_covariates=0)
+
+    qb = Rz.covariate_basis(None, n)
+    base_us = base_p = None
+    us_core = 0.0
+    for p in [64, 256, 1024, 2048]:
+        y = rng.normal(size=(n, p)).astype(np.float32)
+        panel = Rz.residualize_and_standardize(jnp.asarray(y), qb)
+        us_core, _ = _timeit(core_scan, g_dev, panel.y)
+        us_full, _ = _timeit(full_scan, g_dev, panel.y, repeats=1)
+        if base_us is None:
+            base_us, base_p = us_core, p
+        emit(f"throughput_core_P{p}", us_core, f"us_per_phenotype={us_core / p:.2f}")
+        emit(f"throughput_full_P{p}", us_full, f"pvalue_epilogue_share={1 - us_core / max(us_full, 1):.2f}")
+    emit("throughput_sublinearity_core", 0.0,
+         f"grew_{us_core / base_us:.1f}x_for_{2048 // base_p}x_phenotypes")
+
+    # per-trait loop (fastGWA usage pattern): one trait per scan
+    y1 = rng.normal(size=(n, 1)).astype(np.float32)
+    panel1 = Rz.residualize_and_standardize(jnp.asarray(y1), qb)
+    us1, _ = _timeit(core_scan, g_dev, panel1.y)
+    emit("per_trait_loop_core", us1,
+         f"panel_speedup_at_P2048={us1 * 2048 / us_core:.0f}x")
+
+
+def bench_engines() -> None:
+    """dense vs fused engine on the same cohort: identical statistics.
+    (CPU wall-time of the fused path runs the Pallas interpreter and is not
+    indicative of TPU perf — see EXPERIMENTS.md §Roofline for the real
+    comparison; here we verify equivalence and report timings for record.)"""
+    import os
+    import tempfile
+
+    co = synth.make_cohort(n_samples=512, n_markers=1024, n_traits=64, seed=3)
+    d = tempfile.mkdtemp()
+    paths = synth.write_cohort_files(co, os.path.join(d, "bench"))
+    src = plink.PlinkBed(paths["bed"])
+    results = {}
+    for engine in ("dense", "fused"):
+        cfg = ScanConfig(batch_markers=512, engine=engine,
+                         block_m=64, block_n=128, block_p=64)
+        t0 = time.perf_counter()
+        res = GenomeScan(src, co.phenotypes, co.covariates, config=cfg).run()
+        dt = time.perf_counter() - t0
+        results[engine] = res
+        emit(f"engine_{engine}_scan", dt * 1e6,
+             f"markers_per_s={co.dosages.shape[0] / dt:.0f}")
+    agree = np.abs(results["dense"].best_nlp - results["fused"].best_nlp).max()
+    emit("engine_agreement", 0.0, f"max_abs_dnlp={agree:.2e}")
+
+
+def bench_kernels() -> None:
+    """Association GEMM across geometries (us/call + achieved GFLOP/s)."""
+    rng = np.random.default_rng(0)
+    n = 2_000
+    for m, p in [(1024, 256), (4096, 256), (1024, 2048)]:
+        g = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+
+        @jax.jit
+        def corr(g, y):
+            return A.correlation(g, y, n)
+
+        us, _ = _timeit(corr, g, y)
+        gflops = 2.0 * m * n * p / (us * 1e-6) / 1e9
+        emit(f"gemm_M{m}_P{p}", us, f"gflops={gflops:.1f}")
+
+
+def bench_scaling_n() -> None:
+    rng = np.random.default_rng(0)
+    m, p = 2048, 256
+    core_opts = A.AssocOptions(compute_neglog10p=False)
+    for n in [500, 1000, 2000, 4000]:
+        g = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+
+        def step(g, y, n=n):
+            return A.assoc_from_standardized(
+                g, y, n_samples=n, n_covariates=0, options=core_opts
+            )
+
+        step_j = jax.jit(step)
+        us, _ = _timeit(step_j, g, y)
+        emit(f"scaling_N{n}", us, f"us_per_sample={us / n:.2f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_concordance()
+    bench_throughput()
+    bench_engines()
+    bench_kernels()
+    bench_scaling_n()
+
+
+if __name__ == "__main__":
+    main()

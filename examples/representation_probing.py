@@ -1,0 +1,72 @@
+"""The paper's motivating use case (§1): representation-learning phenotypes.
+
+A zoo model (reduced rwkv6) embeds token sequences per "individual"; its
+hidden-state features become a quantitative phenotype panel screened against
+genotypes with the GWAS engine — thousands of derived traits, one shared
+genotype matrix, exactly the workload TorchGWAS amortizes.  A planted
+genotype->sequence coupling validates that the screen finds real structure.
+
+    PYTHONPATH=src python examples/representation_probing.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.screening import GenomeScan, ScanConfig
+from repro.models import transformer as T
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n_samples, n_markers, seq = 400, 1_500, 32
+
+    # 1. Genotypes, with marker 7 coupled to the "expression" sequences below.
+    maf = rng.uniform(0.1, 0.5, n_markers).astype(np.float32)
+    dosages = rng.binomial(2, maf[:, None], size=(n_markers, n_samples)).astype(np.int8)
+    causal = dosages[7].astype(np.int32)
+
+    # 2. Per-individual token sequences whose composition depends on the
+    #    causal dosage (a crude stand-in for genotype-driven biology).
+    cfg = get_config("rwkv6-3b").reduced()
+    tokens = rng.integers(0, cfg.vocab, size=(n_samples, seq), dtype=np.int32)
+    biased = 11 + causal  # dosage shifts a marker token's identity
+    tokens[:, ::4] = biased[:, None]
+
+    # 3. Embed with the LM; mean-pooled hidden features = phenotype panel.
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    positions = jnp.broadcast_to(jnp.arange(seq), (n_samples, seq))
+
+    @jax.jit
+    def embed(tok):
+        logits, _ = T.forward_train(cfg, params, tok, positions)
+        return logits.mean(axis=1)  # (N, vocab) features
+
+    feats = np.asarray(embed(jnp.asarray(tokens)))[:, :256]  # panel: 256 traits
+    print(f"embedded {n_samples} individuals -> {feats.shape[1]}-trait panel")
+
+    # 4. GWAS screen of the derived panel.
+    class ArraySource:
+        def __init__(self, d):
+            self._d = d
+            self.n_markers, self.n_samples = d.shape
+            self.sample_ids = [f"S{i}" for i in range(self.n_samples)]
+            self.marker_ids = [f"rs{i}" for i in range(self.n_markers)]
+        def read_dosages(self, lo, hi):
+            return self._d[lo:hi]
+
+    config = ScanConfig(batch_markers=512, engine="dense", multivariate=True,
+                        block_m=64, block_n=128, block_p=64)
+    res = GenomeScan(ArraySource(dosages), feats, None, config=config).run()
+    best = int(np.argmax(res.omnibus_nlp))
+    print(f"omnibus peak at marker {best} (-log10p={res.omnibus_nlp[best]:.1f}); "
+          f"planted causal marker = 7")
+    top5 = np.argsort(-res.omnibus_nlp)[:5]
+    for m in top5:
+        print(f"  marker {m:5d} omnibus -log10p = {res.omnibus_nlp[m]:7.2f}")
+    assert best == 7, "screen failed to localize the planted coupling"
+    print("representation screen localized the planted signal.")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end phenotype-rich screening workflow (the paper's production
+scenario, scaled to run on CPU): BGEN input, covariate adjustment,
+relatedness-aware exclusion, fault-tolerant batched scan with a simulated
+mid-scan crash + restart, multivariate omnibus, BH q-values, TSV report.
+
+    PYTHONPATH=src python examples/ukb_screening.py [--traits 256]
+"""
+import argparse
+import json
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats as S
+from repro.core.screening import GenomeScan, ScanConfig
+from repro.io import bgen, pheno, synth
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--traits", type=int, default=128)
+    ap.add_argument("--markers", type=int, default=4_000)
+    ap.add_argument("--samples", type=int, default=800)
+    args = ap.parse_args()
+
+    workdir = tempfile.mkdtemp(prefix="ukb_screening_")
+    cohort = synth.make_cohort(
+        n_samples=args.samples, n_markers=args.markers, n_traits=args.traits,
+        n_causal=12, effect_size=0.45, missing_rate=0.015,
+        n_related_pairs=6, seed=7,
+    )
+    paths = synth.write_cohort_files(cohort, os.path.join(workdir, "ukb"))
+    print(f"[1/4] cohort: {args.markers} markers x {args.samples} samples x "
+          f"{args.traits} traits (BGEN: {paths['bgen']})")
+
+    # Align tables by sample id (the BGEN reader carries ids).
+    source = bgen.BgenFile(paths["bgen"])
+    pt = pheno.read_table(paths["pheno"])
+    ct = pheno.read_table(paths["cov"])
+    y, c, keep = pheno.align_tables(source.sample_ids, pt, ct)
+    assert keep.all()
+
+    ckdir = os.path.join(workdir, "checkpoints")
+    config = ScanConfig(
+        batch_markers=512, engine="dense", exclude_related=True,
+        multivariate=True, checkpoint_dir=ckdir,
+        block_m=64, block_n=128, block_p=64,
+    )
+
+    # [2/4] First pass; then simulate a node crash losing two batches.
+    scan = GenomeScan(source, y, c, config=config)
+    print(f"[2/4] relatedness exclusion dropped {scan.excluded_samples} samples; "
+          f"{scan.n_batches} batches")
+    scan.run()
+    mani_path = os.path.join(ckdir, "manifest.json")
+    mani = json.load(open(mani_path))
+    for k in list(mani["completed"])[1:3]:
+        mani["completed"].pop(k)
+    json.dump(mani, open(mani_path, "w"))
+    print("[3/4] simulated crash: dropped 2 committed batches; restarting...")
+    result = GenomeScan(source, y, c, config=config).run(resume=True)
+
+    # [4/4] Report with BH q-values.
+    out_tsv = os.path.join(workdir, "hits.tsv")
+    with open(out_tsv, "w") as f:
+        f.write("marker\ttrait\tr\tt\tneglog10p\tneglog10q\n")
+        if len(result.hits):
+            nlq = np.asarray(S.bh_qvalues(jnp.asarray(result.hit_stats[:, 2])))
+            for (m, t), (r, tt, nlp), q in zip(result.hits, result.hit_stats, nlq):
+                f.write(f"{source.marker_ids[m]}\t{t}\t{r:.4f}\t{tt:.3f}\t{nlp:.2f}\t{q:.2f}\n")
+    planted = {(m, t) for m, t, _ in cohort.effects}
+    found = {(int(m), int(t)) for m, t in result.hits}
+    print(f"[4/4] lambda_GC={result.lambda_gc:.3f}  hits={len(result.hits)}  "
+          f"recovered {len(planted & found)}/{len(planted)} planted effects")
+    print(f"      report: {out_tsv}")
+
+if __name__ == "__main__":
+    main()

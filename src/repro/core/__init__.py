@@ -1,0 +1,39 @@
+"""The paper's primary contribution: a phenotype-panel association engine.
+
+Public surface:
+    AssocOptions, assoc_batch, assoc_from_standardized  — the kernel (Eq. 2-3)
+    covariate_basis, residualize_and_standardize        — Eq. 1
+    stats                                               — t/p epilogue, BH, lambda_GC
+    multivariate                                        — panel-level screens
+    kinship                                             — relatedness exclusion
+    screening                                           — the streaming genome-scan driver
+"""
+from repro.core.association import (
+    AssocOptions,
+    AssocResult,
+    MarkerStats,
+    assoc_batch,
+    assoc_from_standardized,
+    correlation,
+    standardize_genotype_batch,
+)
+from repro.core.residualize import (
+    StandardizedPanel,
+    covariate_basis,
+    residualize_and_standardize,
+    residualize_genotypes,
+)
+
+__all__ = [
+    "AssocOptions",
+    "AssocResult",
+    "MarkerStats",
+    "assoc_batch",
+    "assoc_from_standardized",
+    "correlation",
+    "standardize_genotype_batch",
+    "StandardizedPanel",
+    "covariate_basis",
+    "residualize_and_standardize",
+    "residualize_genotypes",
+]

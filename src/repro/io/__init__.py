@@ -1,0 +1,44 @@
+"""Genotype / phenotype IO substrate.
+
+Three genotype backends (paper §2.1: "supports NumPy, PLINK, and BGEN
+genotype inputs") behind one streaming interface, plus phenotype/covariate
+table alignment and synthetic-cohort generation for tests and examples.
+
+All backends expose the same protocol (``GenotypeSource``):
+
+    n_samples, n_markers, sample_ids, marker_ids
+    read_dosages(lo, hi)  -> int8 (markers, samples), -9 missing
+    read_packed(lo, hi)   -> uint8 2-bit packed slab for the fused kernel
+                             (PLINK only; others raise)
+"""
+from repro.io.plink import PlinkBed, write_plink
+from repro.io.bgen import BgenFile, write_bgen
+from repro.io.numpy_io import NumpyGenotypes
+from repro.io.pheno import PhenotypeTable, align_tables
+from repro.io.synth import SyntheticCohort, make_cohort
+
+__all__ = [
+    "PlinkBed",
+    "write_plink",
+    "BgenFile",
+    "write_bgen",
+    "NumpyGenotypes",
+    "PhenotypeTable",
+    "align_tables",
+    "SyntheticCohort",
+    "make_cohort",
+    "open_genotypes",
+]
+
+
+def open_genotypes(path: str):
+    """Dispatch on file suffix: ``.bed`` -> PLINK, ``.bgen`` -> BGEN,
+    ``.npy``/``.npz`` -> NumPy."""
+    p = str(path)
+    if p.endswith(".bed"):
+        return PlinkBed(p)
+    if p.endswith(".bgen"):
+        return BgenFile(p)
+    if p.endswith((".npy", ".npz")):
+        return NumpyGenotypes(p)
+    raise ValueError(f"unrecognized genotype container: {p}")

@@ -1,0 +1,18 @@
+from repro.kernels.gwas_dot.ops import (
+    gwas_dot,
+    marker_stats_from_codes,
+    pack_tiled,
+    repack_plink_tiled,
+    unpack_plink_to_codes,
+)
+from repro.kernels.gwas_dot.ref import decode_standardize_ref, gwas_dot_ref
+
+__all__ = [
+    "gwas_dot",
+    "gwas_dot_ref",
+    "decode_standardize_ref",
+    "marker_stats_from_codes",
+    "pack_tiled",
+    "repack_plink_tiled",
+    "unpack_plink_to_codes",
+]

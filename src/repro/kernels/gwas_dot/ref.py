@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused gwas_dot kernel.
+
+Implements the identical mathematical contract (decode -> standardize ->
+missing->0 -> GEMM/N -> clip -> t) with no tiling, no packing and fp32
+everywhere.  Tests assert the kernel matches this to float tolerance across
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gwas_dot_ref", "decode_standardize_ref"]
+
+
+def decode_standardize_ref(
+    codes: jax.Array,      # (M, N) int32 PLINK 2-bit codes {0,1,2,3}
+    mean: jax.Array,       # (M,)
+    inv_std: jax.Array,    # (M,)
+) -> jax.Array:
+    """Code -> standardized dosage; missing (code 1) -> 0."""
+    dosage = (2 - codes + (codes >> 1)).astype(jnp.float32)
+    g = (dosage - mean[:, None]) * inv_std[:, None]
+    return jnp.where(codes == 1, 0.0, g)
+
+
+def gwas_dot_ref(
+    codes: jax.Array,      # (M, N) int32 codes
+    mean: jax.Array,
+    inv_std: jax.Array,
+    y: jax.Array,          # (N, P) f32
+    *,
+    n_samples: float,
+    dof: float,
+    eps: float = 1e-12,
+) -> tuple[jax.Array, jax.Array]:
+    g = decode_standardize_ref(codes, mean, inv_std)
+    r = jax.lax.dot(g, y.astype(jnp.float32), preferred_element_type=jnp.float32)
+    r = jnp.clip(r / n_samples, -1.0, 1.0)
+    t = r * jax.lax.rsqrt(jnp.maximum(1.0 - r * r, eps) / dof)
+    return r, t

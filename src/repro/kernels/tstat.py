@@ -1,0 +1,62 @@
+"""Standalone elementwise t-statistic Pallas kernel (paper Eq. 3).
+
+The production scan uses the epilogue fused inside ``gwas_dot``; this kernel
+serves the non-fused path (e.g. BGEN float dosages where the GEMM runs in
+plain XLA) and doubles as the minimal worked example of the repo's kernel
+conventions: kernel body + jit'd wrapper + pure-jnp ``ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tstat", "tstat_ref"]
+
+
+def _tstat_kernel(r_ref, t_ref, *, dof: float, eps: float):
+    r = jnp.clip(r_ref[...], -1.0, 1.0)
+    denom = jnp.maximum(1.0 - r * r, eps)
+    t_ref[...] = r * jax.lax.rsqrt(denom / dof)
+
+
+def tstat_ref(r: jax.Array, dof: float, *, eps: float = 1e-12) -> jax.Array:
+    r = jnp.clip(jnp.asarray(r, jnp.float32), -1.0, 1.0)
+    return r * jnp.sqrt(dof / jnp.maximum(1.0 - r * r, eps))
+
+
+@functools.partial(jax.jit, static_argnames=("dof", "block_m", "block_p", "interpret"))
+def _tstat_padded(r, *, dof, block_m, block_p, interpret):
+    m, p = r.shape
+    return pl.pallas_call(
+        functools.partial(_tstat_kernel, dof=float(dof), eps=1e-12),
+        grid=(m // block_m, p // block_p),
+        in_specs=[pl.BlockSpec((block_m, block_p), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_m, block_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p), jnp.float32),
+        interpret=interpret,
+    )(r)
+
+
+def tstat(
+    r: jax.Array,
+    dof: float,
+    *,
+    block_m: int = 256,
+    block_p: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Elementwise ``T = R * sqrt(dof / (1 - R^2))`` over an ``(M, P)`` tile."""
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    r = jnp.asarray(r, jnp.float32)
+    m_true, p_true = r.shape
+    pad_m = (-m_true) % block_m
+    pad_p = (-p_true) % block_p
+    r_pad = jnp.pad(r, ((0, pad_m), (0, pad_p)))
+    t = _tstat_padded(
+        r_pad, dof=float(dof), block_m=block_m, block_p=block_p, interpret=bool(interpret)
+    )
+    return t[:m_true, :p_true]

@@ -1,0 +1,401 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with abstract inputs, print memory/cost analysis, derive roofline
+terms.  THE proof that the distribution config is coherent without hardware.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all [--mesh both] [--out-dir experiments/dryrun]
+
+Orchestrator mode (--all) runs each cell in a subprocess (isolation: one
+cell's OOM/compile bug cannot take down the sweep) and skips cells whose
+JSON record already exists.
+"""
+# The 512 placeholder devices MUST be configured before jax initializes —
+# keep these two lines first, before any other import.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import LM_ARCHS, SHAPES, get_config, supported_shapes
+from repro.configs.base import GwasWorkloadConfig, ModelConfig, ShapeConfig
+from repro.launch import roofline as RL
+from repro.launch.mesh import describe, make_production_mesh
+from repro.models import api as M
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.serve_step import build_decode_step, build_prefill_step
+from repro.train.train_step import TrainStepConfig, build_train_step
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+# Per-arch training memory knobs (microbatching + remat + optimizer dtype).
+# Chosen against the 16 GB/chip budget; EXPERIMENTS.md §Dry-run records the
+# resulting hbm_util per cell.  arctic-480b genuinely cannot train on one
+# 256-chip pod (params+grads+opt state > 4 TB aggregate) — that cell records
+# fits_hbm=False by design and fits on the 512-chip multi-pod mesh.
+TRAIN_OVERRIDES: dict[str, dict] = {
+    "arctic-480b": dict(n_microbatches=16, remat="full", state_dtype="bfloat16",
+                        accum_dtype="bfloat16", loss_chunk=512),
+    "deepseek-coder-33b": dict(n_microbatches=8, remat="full"),
+    "qwen1.5-32b": dict(n_microbatches=8, remat="full", loss_chunk=512),
+    "gemma-7b": dict(n_microbatches=4, remat="full", loss_chunk=512),
+    "gemma2-9b": dict(n_microbatches=4, remat="full", loss_chunk=512),
+    "qwen2-vl-7b": dict(n_microbatches=4, remat="full", loss_chunk=512),
+    "rwkv6-3b": dict(n_microbatches=4, remat="full", loss_chunk=512),
+    "recurrentgemma-2b": dict(n_microbatches=4, remat="full", loss_chunk=512),
+    "granite-moe-1b-a400m": dict(loss_chunk=512),
+    "whisper-small": dict(n_microbatches=4, loss_chunk=512),
+}
+
+
+def _tcfg_for(arch: str, *, accounting: bool = False) -> TrainStepConfig:
+    ov = TRAIN_OVERRIDES.get(arch, {})
+    return TrainStepConfig(
+        n_microbatches=1 if accounting else ov.get("n_microbatches", 1),
+        # chunked loss runs inside a lax.scan; accounting lowers disable it
+        # (identical math, exact flop counting)
+        loss_chunk=0 if accounting else ov.get("loss_chunk", 0),
+        remat=ov.get("remat", "dots"),
+        accum_dtype=ov.get("accum_dtype", "float32"),
+        optimizer=AdamWConfig(state_dtype=ov.get("state_dtype", "float32")),
+    )
+
+
+# Hillclimb variants: "--arch <base>+<flag>" applies a config patch on top of
+# the registered architecture (records land beside the baselines for §Perf).
+VARIANT_FLAGS = {
+    "kvint8": dict(kv_cache_dtype="int8"),
+    "attnchunk": dict(attn_chunk=1024),
+    "moea2a": dict(moe_impl="manual"),
+}
+
+
+def _resolve_arch(arch: str):
+    base, *flags = arch.split("+")
+    cfg = get_config(base)
+    for f in flags:
+        cfg = dataclasses.replace(cfg, **VARIANT_FLAGS[f])
+    return base, cfg, flags
+
+
+def lower_lm_cell(arch: str, shape_name: str, mesh, *, accounting_reps: int | None = None):
+    """Lower one LM cell.
+
+    ``accounting_reps=None`` -> the production config (layers scanned): the
+    record of truth for memory analysis, collectives and compile time.
+    ``accounting_reps=r`` -> an UNROLLED variant with ``r`` pattern repeats
+    (and microbatching off): XLA's cost analysis counts loop bodies once, so
+    exact FLOPs/bytes come from differencing two small unrolled lowers and
+    extrapolating to the full depth (see run_cell).
+    """
+    base, cfg, _flags = _resolve_arch(arch)
+    shape = SHAPES[shape_name]
+    if accounting_reps is not None:
+        k = len(cfg.block_pattern)
+        # chunked attention runs in a lax.scan; accounting lowers use the
+        # dense-equivalent math for exact flop counting
+        overrides = dict(scan_layers=False, n_layers=accounting_reps * k, attn_chunk=0)
+        if cfg.family == "encdec":
+            overrides["encoder_layers"] = accounting_reps
+            overrides["n_layers"] = accounting_reps
+        cfg = dataclasses.replace(cfg, **overrides)
+    max_pos = shape.seq_len if cfg.family == "encdec" else 4096
+    params_abs = M.abstract_params(cfg, max_positions=max_pos)
+    specs = M.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = _tcfg_for(base, accounting=accounting_reps is not None)
+        step = build_train_step(cfg, tcfg=tcfg, mesh=mesh, donate=True)
+        opt_abs = jax.eval_shape(lambda p: adamw_init(tcfg.optimizer, p), params_abs)
+        lowered = step.lower(params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(cfg, shape, mesh=mesh)
+        lowered = step.lower(params_abs, specs)
+    else:  # decode
+        step = build_decode_step(cfg, shape, mesh=mesh)
+        caches_abs = M.abstract_caches(cfg, shape)
+        lowered = step.lower(params_abs, specs["token"], specs["pos"], caches_abs)
+    return lowered
+
+
+def lower_gwas_cell(engine: str, mesh) -> tuple:
+    from repro.core.association import AssocOptions
+    from repro.core.screening import build_dense_step, build_fused_step
+
+    g: GwasWorkloadConfig = get_config("gwas_ukb")
+    if engine.endswith("_p2k"):
+        # The paper's second benchmark point: 2,048 phenotypes.
+        g = dataclasses.replace(g, n_traits=2_048)
+        engine = engine[: -len("_p2k")]
+    n_pad = -(-g.n_samples // g.block_n) * g.block_n
+    mf = RL.gwas_flops(g)
+    if engine.startswith("fused"):
+        precision = "bf16" if engine == "fused_bf16" else "fp32"
+        # bf16 engine also stores the phenotype panel replica in bf16 —
+        # halving the one HBM stream that survives the 2-bit genotype fusion
+        # (§Perf A4).
+        y_dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+        block_p = min(g.block_p, g.n_traits // 16)  # per-device tile must divide
+        step = build_fused_step(
+            n_samples=g.n_samples, n_covariates=12,
+            options=AssocOptions(precision=precision),
+            mesh=mesh, block_m=g.block_m, block_n=g.block_n, block_p=block_p,
+        )
+        args = (
+            jax.ShapeDtypeStruct((g.batch_markers, n_pad // 4), jnp.uint8),
+            jax.ShapeDtypeStruct((g.batch_markers, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g.batch_markers, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g.batch_markers,), jnp.bool_),
+            jax.ShapeDtypeStruct((g.n_samples, g.n_traits), y_dtype),
+        )
+    else:
+        step = build_dense_step(
+            n_samples=g.n_samples, n_covariates=12, options=AssocOptions(),
+            mesh=mesh, mode=g.mode,
+        )
+        args = (
+            jax.ShapeDtypeStruct((g.batch_markers, g.n_samples), jnp.float32),
+            jax.ShapeDtypeStruct((g.n_samples, g.n_traits), jnp.float32),
+        )
+    lowered = step.lower(*args)
+    # The fused kernel's grid loop bodies are counted once by cost analysis;
+    # its true math equals the dense engine's GEMM.
+    corr = mf if engine.startswith("fused") else 0.0
+    return lowered, mf, 0, 0, {"recurrence_flops_correction": corr}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    multi_pod = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": describe(mesh),
+        "mesh_kind": mesh_kind,
+        "n_devices": mesh.size,
+    }
+    hw = RL.HW()
+
+    # ---- pass 1: production (scanned) config — memory, collectives, compile.
+    t0 = time.time()
+    if arch == "gwas_ukb":
+        lowered, mf, total, active, extras = lower_gwas_cell(shape_name, mesh)
+    else:
+        _, cfg, _fl = _resolve_arch(arch)
+        shape = SHAPES[shape_name]
+        total, active = RL.param_count(cfg)
+        mf = RL.model_flops(cfg, shape)
+        extras = {"recurrence_flops_correction": RL.recurrence_flops(cfg, shape)}
+        lowered = lower_lm_cell(arch, shape_name, mesh)
+    record["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 1)
+    roof = RL.roofline_from_compiled(compiled, n_devices=mesh.size)
+    record.update(roof)
+
+    # ---- pass 2: FLOP/byte accounting (XLA counts loop bodies once, so the
+    # scanned numbers undercount by the trip count).  Two small UNROLLED
+    # lowers give exact per-repeat costs; extrapolate to full depth.
+    if arch == "gwas_ukb":
+        flops_exact = roof["flops_per_device"] + extras["recurrence_flops_correction"] / mesh.size
+        bytes_exact = roof["bytes_per_device"]
+        if shape_name.startswith("fused"):
+            # interpret-mode grid loop: bytes dominated by the packed stream;
+            # account analytically (2-bit genotypes + Y replica + R/T out).
+            g: GwasWorkloadConfig = get_config("gwas_ukb")
+            dp = mesh.size // 16
+            bytes_exact = (
+                g.batch_markers * g.n_samples / 4 / dp
+                + g.n_samples * g.n_traits * 4 / 16
+                + 2 * g.batch_markers * g.n_traits * 4 / mesh.size
+            )
+    else:
+        _, cfg, _fl = _resolve_arch(arch)
+        k = len(cfg.block_pattern)
+        equiv_reps = cfg.n_layers / k
+        accounting = []
+        for reps in (1, 2):
+            t0 = time.time()
+            small = lower_lm_cell(arch, shape_name, mesh, accounting_reps=reps).compile()
+            ca = small.cost_analysis()
+            accounting.append(
+                (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)))
+            )
+            del small
+        (f1, b1), (f2, b2) = accounting
+        flops_exact = f1 + (equiv_reps - 1.0) * (f2 - f1)
+        bytes_exact = b1 + (equiv_reps - 1.0) * (b2 - b1)
+        flops_exact += extras["recurrence_flops_correction"] / mesh.size
+        record["accounting"] = {
+            "reps1": {"flops": f1, "bytes": b1},
+            "reps2": {"flops": f2, "bytes": b2},
+            "equiv_repeats": equiv_reps,
+        }
+
+    # GWAS runs fp32 GEMMs unless the bf16 variant is selected; the MXU's
+    # fp32 rate is half its bf16 rate.  LM cells are bf16 throughout.
+    peak = hw.peak_flops
+    if arch == "gwas_ukb" and shape_name != "fused_bf16":
+        peak = hw.peak_flops_f32
+    record["peak_flops_used"] = peak
+    record["flops_per_device_exact"] = flops_exact
+    record["bytes_per_device_exact"] = bytes_exact
+    record["compute_s"] = flops_exact / peak
+    record["memory_s"] = bytes_exact / hw.hbm_bw  # CPU-fusion upper bound
+    if arch == "gwas_ukb":
+        g = get_config("gwas_ukb")
+        dp = mesh.size // 16
+        floor = (
+            g.batch_markers * g.n_samples * (0.25 if shape_name.startswith("fused") else 4.0) / dp
+            + g.n_samples * g.n_traits * 4 / 16
+            + 2 * g.batch_markers * g.n_traits * 4 / mesh.size
+        )
+    else:
+        base_name, vcfg, vflags = _resolve_arch(arch)
+        ov = TRAIN_OVERRIDES.get(base_name, {})
+        sd = 2 if ov.get("state_dtype") == "bfloat16" else 4
+        floor = RL.memory_floor_bytes(
+            vcfg, SHAPES[shape_name], mesh.size, state_dtype_bytes=sd,
+            kv_bytes=1 if vcfg.kv_cache_dtype == "int8" else 2,
+        )
+    record["memory_floor_bytes"] = floor
+    record["memory_floor_s"] = floor / hw.hbm_bw
+    record["dominant"] = max(
+        ("compute_s", "memory_floor_s", "collective_s"), key=lambda kk: record[kk]
+    )
+    record["model_flops_global"] = mf
+    record["model_flops_per_device"] = mf / mesh.size
+    record["useful_flops_ratio"] = (mf / mesh.size) / flops_exact if flops_exact else None
+    # Headline score: useful compute time over the dominant bound.
+    useful_s = (mf / mesh.size) / peak
+    record["roofline_fraction"] = useful_s / max(
+        record["compute_s"], record["memory_floor_s"], record["collective_s"], 1e-30
+    )
+    record["params_total"] = total
+    record["params_active"] = active
+    if roof.get("memory"):
+        peak = roof["memory"]["peak_bytes"]
+        record["fits_hbm"] = bool(peak <= HBM_PER_CHIP)
+        record["hbm_util"] = round(peak / HBM_PER_CHIP, 3)
+    record["status"] = "ok"
+    # The console proof the assignment asks for:
+    print(f"[{arch} x {shape_name} x {describe(mesh)}]")
+    try:
+        print(compiled.memory_analysis())
+    except Exception as e:  # noqa: BLE001
+        print("memory_analysis unavailable:", e)
+    ca = compiled.cost_analysis()
+    print({kk: ca[kk] for kk in sorted(ca) if kk in ("flops", "bytes accessed")})
+    return record
+
+
+def cell_inventory() -> list[tuple[str, str, str | None]]:
+    """All (arch, shape, skip_reason) cells, GWAS engines included."""
+    cells: list[tuple[str, str, str | None]] = []
+    for arch in LM_ARCHS:
+        cfg = get_config(arch)
+        for name, shape in supported_shapes(cfg).items():
+            if shape is None:
+                reason = (
+                    "long_500k needs sub-quadratic attention; "
+                    f"{arch} has unbounded-context layers (DESIGN.md §Arch-applicability)"
+                )
+                cells.append((arch, name, reason))
+            else:
+                cells.append((arch, name, None))
+    cells.append(("gwas_ukb", "dense", None))       # paper-faithful fp32 baseline
+    cells.append(("gwas_ukb", "fused", None))       # beyond-paper 2-bit Pallas, fp32 GEMM
+    cells.append(("gwas_ukb", "fused_bf16", None))  # + bf16 MXU inputs (fp32 accum)
+    # the paper's second benchmark point (2,048 phenotypes)
+    cells.append(("gwas_ukb", "dense_p2k", None))
+    cells.append(("gwas_ukb", "fused_p2k", None))
+    cells.append(("gwas_ukb", "fused_bf16_p2k", None))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    if not args.all:
+        for mesh_kind in meshes:
+            record = run_cell(args.arch, args.shape, mesh_kind)
+            path = os.path.join(
+                args.out_dir, f"{args.arch}__{args.shape}__{mesh_kind}.json"
+            )
+            with open(path, "w") as f:
+                json.dump(record, f, indent=1)
+            print("->", path)
+        return
+
+    # Orchestrator: subprocess per cell, resumable, failures recorded.
+    todo = []
+    for arch, shape, skip in cell_inventory():
+        for mesh_kind in meshes:
+            path = os.path.join(args.out_dir, f"{arch}__{shape}__{mesh_kind}.json")
+            if os.path.exists(path):
+                continue
+            if skip is not None:
+                with open(path, "w") as f:
+                    json.dump(
+                        {"arch": arch, "shape": shape, "mesh_kind": mesh_kind,
+                         "status": "skip", "skip_reason": skip},
+                        f, indent=1,
+                    )
+                continue
+            todo.append((arch, shape, mesh_kind, path))
+
+    print(f"{len(todo)} cells to run")
+    for i, (arch, shape, mesh_kind, path) in enumerate(todo):
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+            "--out-dir", args.out_dir,
+        ]
+        print(f"[{i + 1}/{len(todo)}] {arch} x {shape} x {mesh_kind}", flush=True)
+        try:
+            proc = subprocess.run(
+                cmd, timeout=args.timeout, capture_output=True, text=True
+            )
+            if proc.returncode != 0:
+                with open(path, "w") as f:
+                    json.dump(
+                        {"arch": arch, "shape": shape, "mesh_kind": mesh_kind,
+                         "status": "error",
+                         "error": (proc.stderr or "")[-3000:]},
+                        f, indent=1,
+                    )
+                print("   ERROR (recorded)")
+        except subprocess.TimeoutExpired:
+            with open(path, "w") as f:
+                json.dump(
+                    {"arch": arch, "shape": shape, "mesh_kind": mesh_kind,
+                     "status": "timeout", "timeout_s": args.timeout},
+                    f, indent=1,
+                )
+            print("   TIMEOUT (recorded)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,299 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = sum over collectives of wire_bytes / link_bandwidth
+
+``cost_analysis()`` is per-device on an SPMD-partitioned module (calibrated
+in tests/test_roofline.py), so no division by chip count is applied.
+Collective wire bytes use ring formulas on the participating group size k:
+
+    all-reduce        2 (k-1)/k * bytes
+    all-gather        (k-1)/k   * bytes   (bytes = full output buffer)
+    reduce-scatter    (k-1)/k   * bytes   (bytes = full input buffer)
+    all-to-all        (k-1)/k   * bytes
+    collective-permute            bytes
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+The pod axis crosses DCN; we model it at 6.25 GB/s/host-link and flag any
+cell whose collective term is DCN-dominated.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.configs.base import GwasWorkloadConfig, ModelConfig, ShapeConfig
+
+__all__ = [
+    "HW",
+    "parse_collectives",
+    "roofline_from_compiled",
+    "model_flops",
+    "param_count",
+]
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 per chip
+    peak_flops_f32: float = 98.5e12   # fp32 ~ half MXU rate
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link (intra-pod)
+    dcn_bw: float = 6.25e9            # bytes/s per host (pod axis)
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# Real XLA text carries layout annotations: ``f32[512,64]{1,0} all-reduce(...``
+_SHAPE_ITEM = r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?"
+_COLL_RE = re.compile(
+    r"=\s*\(?\s*((?:" + _SHAPE_ITEM + r"(?:,\s*)?)+)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclass
+class Collective:
+    kind: str
+    out_bytes: int
+    group_size: int
+    wire_bytes: float = 0.0
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    """Scan optimized HLO for collective ops with their buffer sizes and
+    participating group sizes."""
+    out: list[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shapes_str)
+        k = 1
+        gm = _GROUPS_LIST_RE.search(line)
+        if gm:
+            k = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                k = int(gi.group(2))  # [groups, group_size]
+        if kind == "all-reduce":
+            wire = 2.0 * nbytes * (k - 1) / max(k, 1)
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = nbytes * (k - 1) / max(k, 1)
+        else:  # collective-permute
+            wire = float(nbytes)
+        out.append(Collective(kind=kind, out_bytes=nbytes, group_size=k, wire_bytes=wire))
+    return out
+
+
+def roofline_from_compiled(compiled, *, n_devices: int, hw: HW = HW()) -> dict:
+    """All three terms + provenance from one compiled executable."""
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    coll_bytes = sum(c.wire_bytes for c in colls)
+    by_kind: dict[str, float] = {}
+    for c in colls:
+        by_kind[c.kind] = by_kind.get(c.kind, 0.0) + c.wire_bytes
+
+    terms = {
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_accessed / hw.hbm_bw,
+        "collective_s": coll_bytes / hw.ici_bw,
+    }
+    dominant = max(terms, key=terms.get)
+    mem = None
+    try:
+        ms = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ms.argument_size_in_bytes),
+            "output_bytes": int(ms.output_size_in_bytes),
+            "temp_bytes": int(ms.temp_size_in_bytes),
+            "alias_bytes": int(ms.alias_size_in_bytes),
+        }
+        mem["peak_bytes"] = (
+            mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"] - mem["alias_bytes"]
+        )
+    except Exception:  # noqa: BLE001 — backend without memory analysis
+        pass
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_wire_bytes": coll_bytes,
+        "collectives_by_kind": by_kind,
+        "n_collectives": len(colls),
+        **terms,
+        "dominant": dominant,
+        "memory": mem,
+    }
+
+
+# ------------------------------------------------------- analytic model FLOPs
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts from the config (no allocation)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    mlp = (3 if cfg.activation in ("silu", "geglu") else 2) * d * cfg.d_ff
+    embed = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+
+    if cfg.family == "encdec":
+        enc = cfg.encoder_layers * (attn + mlp)
+        dec = cfg.n_layers * (2 * attn + mlp)   # self + cross attention
+        total = enc + dec + embed
+        return total, total
+
+    total = active = 0
+    for kind in _kinds(cfg):
+        if kind in ("attn", "local"):
+            if cfg.moe is not None:
+                e = cfg.moe
+                moe_p = e.n_experts * 3 * d * e.d_ff_expert + d * e.n_experts
+                moe_a = e.top_k * 3 * d * e.d_ff_expert + d * e.n_experts
+                dense = 3 * d * e.dense_d_ff if e.dense_d_ff else 0
+                total += attn + moe_p + dense
+                active += attn + moe_a + dense
+            else:
+                total += attn + mlp
+                active += attn + mlp
+        elif kind == "rwkv":
+            layer = 5 * d * d + (2 * d * cfg.d_ff + d * d)  # time-mix + channel-mix
+            total += layer
+            active += layer
+        elif kind == "rec":
+            w = cfg.lru_width
+            layer = (2 * d * w + 2 * w * w + w * d) + mlp
+            total += layer
+            active += layer
+    return total + embed, active + embed
+
+
+def _kinds(cfg: ModelConfig) -> list[str]:
+    k = len(cfg.block_pattern)
+    reps, tail = cfg.n_layers // k, cfg.n_layers % k
+    return list(cfg.block_pattern) * reps + list(cfg.block_pattern[:tail])
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs: 6 N_active D for train, 2 N_active per served token,
+    plus the quadratic attention term where applicable, plus the intrinsic
+    recurrence state work for SSM/hybrid families (the WKV outer-product
+    updates are the architecture's compute, not overhead)."""
+    _, active = param_count(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    attn_flops = 0.0
+    for kind in _kinds(cfg):
+        if kind == "attn":
+            attn_flops += 2 * 2 * b * cfg.n_heads * cfg.resolved_head_dim * s * s / 2
+        elif kind == "local":
+            w = min(cfg.local_window, s)
+            attn_flops += 2 * 2 * b * cfg.n_heads * cfg.resolved_head_dim * s * w
+    rec = recurrence_flops(cfg, shape)
+    if shape.kind == "train":
+        return 6.0 * active * b * s + 3.0 * attn_flops + rec
+    if shape.kind == "prefill":
+        return 2.0 * active * b * s + attn_flops + rec
+    # decode: one token against a seq_len-deep cache
+    per_tok_attn = 0.0
+    for kind in _kinds(cfg):
+        if kind == "attn":
+            per_tok_attn += 2 * 2 * cfg.n_heads * cfg.resolved_head_dim * s
+        elif kind == "local":
+            per_tok_attn += 2 * 2 * cfg.n_heads * cfg.resolved_head_dim * min(cfg.local_window, s)
+    return 2.0 * active * b + per_tok_attn * b + rec
+
+
+def gwas_flops(g: GwasWorkloadConfig, *, batch_only: bool = True) -> float:
+    """Useful FLOPs of one marker-batch step: 2 M N P (Eq. 2's GEMM)."""
+    m = g.batch_markers if batch_only else g.n_markers
+    return 2.0 * m * g.n_samples * g.n_traits
+
+
+def memory_floor_bytes(
+    cfg: ModelConfig, shape: ShapeConfig, n_devices: int, *,
+    state_dtype_bytes: int = 4, kv_bytes: int = 2,
+) -> float:
+    """Analytic per-device HBM-traffic floor for one step.
+
+    The CPU backend's ``bytes accessed`` is an upper bound (its fusion is far
+    weaker than TPU's), so the roofline memory term is bracketed:
+    ``floor <= true <= hlo``.  The floor counts only unavoidable traffic:
+
+      train:   params read fwd+bwd + grads written/read + opt state r/w
+               + ~6 activation-sized transfers per layer (bf16)
+      prefill: params once + ~4 activation transfers per layer + KV write
+      decode:  params once + full KV/state read + cache write
+    """
+    total, _ = param_count(cfg)
+    p_bytes = 2 * total / n_devices               # bf16 params, fully sharded
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    dp = max(n_devices / 16, 1)                   # data-parallel ways
+    act_unit = (b / dp) * s * d * 2               # one bf16 activation pass
+    if shape.kind == "train":
+        # params fwd + bwd + grads w/r + opt m,v r/w (state dtype)
+        params_io = 3 * p_bytes + 2 * (4 * total / n_devices) + 4 * (
+            state_dtype_bytes * total / n_devices
+        )
+        act_io = 6.0 * act_unit * cfg.n_layers
+        return params_io + act_io
+    if shape.kind == "prefill":
+        return p_bytes + 4.0 * act_unit * cfg.n_layers
+    # decode: params once + full cache/state read (+ small write).
+    kv_bytes_total = 0.0
+    for kind in _kinds(cfg):
+        if kind == "attn":
+            kv_bytes_total += 2 * b * s * cfg.n_kv_heads * cfg.resolved_head_dim * kv_bytes
+        elif kind == "local":
+            kv_bytes_total += 2 * b * min(cfg.local_window, s) * cfg.n_kv_heads * cfg.resolved_head_dim * kv_bytes
+        elif kind == "rwkv":
+            h = cfg.d_model // cfg.rwkv_head_dim
+            kv_bytes_total += b * h * cfg.rwkv_head_dim**2 * 4
+        elif kind == "rec":
+            kv_bytes_total += b * cfg.lru_width * 4
+    return p_bytes + kv_bytes_total / n_devices
+
+
+def recurrence_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic FLOPs of the *time-scan* inner loops (WKV / RG-LRU), which
+    XLA's cost analysis counts only once per while body.  Added to HLO FLOPs
+    as ``corrected`` in the dry-run records (the multiplier is the scan trip
+    count minus the one counted body)."""
+    b = shape.global_batch
+    steps = 1 if shape.kind == "decode" else shape.seq_len
+    fwd_mult = 3.0 if shape.kind == "train" else 1.0
+    per_step = 0.0
+    for kind in _kinds(cfg):
+        if kind == "rwkv":
+            h = cfg.d_model // cfg.rwkv_head_dim
+            per_step += 7.0 * b * h * cfg.rwkv_head_dim**2
+        elif kind == "rec":
+            per_step += 3.0 * b * cfg.lru_width
+    return per_step * max(steps - 1, 0) * fwd_mult

@@ -1,0 +1,115 @@
+"""LM-wing training driver.
+
+    python -m repro.launch.train --arch gemma-7b --shape train_4k \
+        [--steps 200] [--reduced] [--checkpoint-dir ckpt/] [--mesh pod|multipod|none]
+
+With ``--reduced`` the family-preserving smoke config runs on one CPU device
+(CI / laptop); without it, the full config expects a real TPU slice whose
+topology matches ``launch.mesh.make_production_mesh`` (on multi-host, run one
+process per host under the same arguments — jax.distributed picks up the
+cluster env).  Checkpoints restore-by-step; data is a deterministic
+function of step, so restarts are exactly resumable.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.models import api as M
+from repro.runtime.checkpoint import TrainCheckpoint
+from repro.train.data import make_batch
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import TrainStepConfig, build_train_step, init_train_state
+
+
+def flatten_state(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(e, "key", getattr(e, "name", e))) for e in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def unflatten_like(tree, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(e, "key", getattr(e, "name", e))) for e in path)
+        leaves.append(jnp.asarray(flat[key], leaf.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(tree), leaves)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="none", choices=["none", "pod", "multipod"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="dots", choices=["none", "dots", "full"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        cfg = cfg.reduced()
+        shape = ShapeConfig(shape.name, seq_len=64, global_batch=4, kind="train")
+
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    tcfg = TrainStepConfig(
+        n_microbatches=args.microbatches,
+        remat=args.remat,
+        optimizer=AdamWConfig(lr=args.lr, total_steps=max(args.steps, 100)),
+    )
+    params, opt = init_train_state(
+        cfg, tcfg, jax.random.PRNGKey(0), max_positions=shape.seq_len
+    )
+    step_fn = build_train_step(cfg, tcfg=tcfg, mesh=mesh, donate=True)
+
+    start = 0
+    ckpt = TrainCheckpoint(args.checkpoint_dir) if args.checkpoint_dir else None
+    if ckpt and ckpt.latest_step() is not None:
+        start, flat = ckpt.restore()
+        params = unflatten_like(params, {k[2:]: v for k, v in flat.items() if k.startswith("p/")})
+        opt = unflatten_like(opt, {k[2:]: v for k, v in flat.items() if k.startswith("o/")})
+        print(f"resumed from step {start}")
+
+    t_last, tok_count = time.time(), 0
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, shape, step).items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        tok_count += shape.global_batch * shape.seq_len
+        if (step + 1) % args.log_every == 0:
+            dt = time.time() - t_last
+            print(
+                f"step {step + 1:5d}  loss {float(metrics['loss']):.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.2f}  "
+                f"lr {float(metrics['lr']):.2e}  tok/s {tok_count / dt:,.0f}",
+                flush=True,
+            )
+            t_last, tok_count = time.time(), 0
+        if ckpt and (step + 1) % args.checkpoint_every == 0:
+            flat = {**{f"p/{k}": v for k, v in flatten_state(params).items()},
+                    **{f"o/{k}": v for k, v in flatten_state(opt).items()}}
+            ckpt.save(step + 1, flat)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Architecture zoo: one functional implementation per family, one dispatch
+surface (``repro.models.api``) for steps, smoke tests and the dry-run."""
+from repro.models import api
+
+__all__ = ["api"]

@@ -1,0 +1,170 @@
+"""Family dispatch + input specs: the single surface the steps, smoke tests
+and the dry-run all build against.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStructs for every model input
+of the (arch x shape) cell — including the modality-stub embeddings for
+[vlm]/[audio] per the assignment — so the dry-run lowers with zero
+allocation and the smoke tests materialize the same specs at reduced size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = [
+    "init_model",
+    "abstract_params",
+    "train_logits",
+    "serve_prefill",
+    "serve_decode",
+    "input_specs",
+    "abstract_caches",
+]
+
+
+def init_model(cfg: ModelConfig, key: jax.Array, *, max_positions: int = 4096):
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        return E.init_encdec_params(cfg, key, max_positions=max_positions)
+    from repro.models import transformer as T
+
+    return T.init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig, *, max_positions: int = 4096):
+    """Parameter ShapeDtypeStructs without touching device memory."""
+    return jax.eval_shape(
+        lambda k: init_model(cfg, k, max_positions=max_positions), jax.random.PRNGKey(0)
+    )
+
+
+def train_logits(cfg: ModelConfig, params, batch: dict, *, remat_policy=None):
+    """-> (logits (B, S, V), moe_aux)."""
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        return E.forward_train(cfg, params, batch["frames"], batch["tokens"]), jnp.zeros((), jnp.float32)
+    from repro.models import transformer as T
+
+    return T.forward_train(
+        cfg,
+        params,
+        batch.get("tokens"),
+        batch["positions"],
+        extra_embeds=batch.get("vision_embeds"),
+        remat_policy=remat_policy,
+    )
+
+
+def train_hidden(cfg: ModelConfig, params, batch: dict, *, remat_policy=None):
+    """-> (final-normed hidden (B, S, d), moe_aux) for the chunked-loss path."""
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        h = E.forward_train(cfg, params, batch["frames"], batch["tokens"], return_hidden=True)
+        return h, jnp.zeros((), jnp.float32)
+    from repro.models import transformer as T
+
+    return T.forward_train(
+        cfg,
+        params,
+        batch.get("tokens"),
+        batch["positions"],
+        extra_embeds=batch.get("vision_embeds"),
+        remat_policy=remat_policy,
+        return_hidden=True,
+    )
+
+
+def apply_head(cfg: ModelConfig, params, hidden):
+    """hidden (B, C, d) -> masked f32 logits (B, C, V_pad)."""
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        return E.apply_head(cfg, params, hidden)
+    from repro.models import transformer as T
+
+    return T.apply_head(cfg, params, hidden)
+
+
+def serve_prefill(cfg: ModelConfig, params, batch: dict, *, cache_capacity: int):
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        return E.prefill(cfg, params, batch["frames"], batch["tokens"], cache_capacity=cache_capacity)
+    from repro.models import transformer as T
+
+    return T.prefill(
+        cfg,
+        params,
+        batch.get("tokens"),
+        batch["positions"],
+        cache_capacity=cache_capacity,
+        extra_embeds=batch.get("vision_embeds"),
+    )
+
+
+def serve_decode(cfg: ModelConfig, params, token, pos, caches):
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        return E.decode(cfg, params, token, pos, caches)
+    from repro.models import transformer as T
+
+    return T.decode(cfg, params, token, pos, caches)
+
+
+# ------------------------------------------------------------------- specs
+
+def _emb_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one cell.  decode cells describe the *new-token*
+    inputs; the KV/state cache spec comes from ``abstract_caches``."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), _emb_dtype(cfg))
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif cfg.family == "vlm":
+        patches = min(cfg.vision_stub_patches, max(s // 2, 1))
+        specs["vision_embeds"] = jax.ShapeDtypeStruct((b, patches, cfg.d_model), _emb_dtype(cfg))
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - patches), i32)
+        specs["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["positions"] = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.kind == "train":
+        label_len = specs["tokens"].shape[1]
+        specs["labels"] = jax.ShapeDtypeStruct((b, label_len), i32)
+    return specs
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
+    """Cache ShapeDtypeStructs for a decode cell (capacity = shape.seq_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        def build(key):
+            params = E.init_encdec_params(cfg, key, max_positions=s)
+            frames = jnp.zeros((b, cfg.encoder_len, cfg.d_model), _emb_dtype(cfg))
+            tokens = jnp.zeros((b, 8), jnp.int32)
+            _, caches = E.prefill(cfg, params, frames, tokens, cache_capacity=s)
+            return caches
+
+        return jax.eval_shape(build, jax.random.PRNGKey(0))
+    from repro.models import transformer as T
+
+    return jax.eval_shape(lambda: T.init_cache(cfg, b, s, _emb_dtype(cfg)))

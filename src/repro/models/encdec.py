@@ -1,0 +1,231 @@
+"""Encoder-decoder stack (whisper-small).
+
+The audio conv frontend is a stub per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, encoder_len, d) directly.  The
+encoder is bidirectional (no mask, no rope, learned positions); the decoder
+is causal self-attention + cross-attention over the encoded memory, with the
+standard serve split: cross K/V are computed once at prefill and reused every
+decode step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding_ctx import constrain
+
+__all__ = [
+    "init_encdec_params",
+    "encode",
+    "forward_train",
+    "prefill",
+    "decode",
+]
+
+
+def _maybe_scan(cfg: ModelConfig, body, init, xs):
+    """lax.scan over stacked blocks, or an unrolled python loop when
+    ``cfg.scan_layers`` is off (dry-run FLOP accounting — see
+    configs.base.ModelConfig.scan_layers)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for r in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[r], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *vals: jnp.stack(vals), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _pad_mask(cfg: ModelConfig):
+    if cfg.padded_vocab == cfg.vocab:
+        return None
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, L.NEG_INF)
+
+
+def _head_logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]).astype(jnp.float32)
+    mask = _pad_mask(cfg)
+    if mask is not None:
+        logits = logits + mask[None, None, :]
+    return logits
+
+
+def _init_dec_block(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    ones = jnp.ones((cfg.d_model,), jnp.float32)
+    return {
+        "ln1": ones, "ln2": ones, "ln3": ones,
+        "self_attn": L.init_attention_params(cfg, k1, dtype),
+        "cross_attn": L.init_attention_params(cfg, k2, dtype),
+        "mlp": L.init_mlp_params(cfg, k3, dtype),
+    }
+
+
+def _init_enc_block(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    ones = jnp.ones((cfg.d_model,), jnp.float32)
+    return {
+        "ln1": ones, "ln2": ones,
+        "attn": L.init_attention_params(cfg, k1, dtype),
+        "mlp": L.init_mlp_params(cfg, k2, dtype),
+    }
+
+
+def init_encdec_params(cfg: ModelConfig, key: jax.Array, *, max_positions: int) -> dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 8)
+    enc_blocks = [_init_enc_block(cfg, k, dtype) for k in jax.random.split(ks[0], cfg.encoder_layers)]
+    dec_blocks = [_init_dec_block(cfg, k, dtype) for k in jax.random.split(ks[1], cfg.n_layers)]
+    return {
+        "embed": jax.random.normal(ks[2], (cfg.padded_vocab, cfg.d_model), dtype) * 0.02,
+        "enc_pos": jax.random.normal(ks[3], (cfg.encoder_len, cfg.d_model), dtype) * 0.02,
+        "dec_pos": jax.random.normal(ks[4], (max_positions, cfg.d_model), dtype) * 0.02,
+        "encoder": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+        "decoder": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_blocks),
+        "enc_final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ encoder
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames (B, enc_len, d) from the frontend stub -> memory (B, enc_len, d)."""
+    x = frames.astype(params["embed"].dtype) + params["enc_pos"][None, : frames.shape[1]]
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(x, p):
+        h, _ = L.attention(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg), angles=None, mask=None, causal=False)
+        x = x + h
+        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg))
+        return x, None
+
+    x, _ = _maybe_scan(cfg, body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg)
+
+
+# ------------------------------------------------------------------ decoder
+
+def _cross_kv(cfg: ModelConfig, p_cross: dict, memory: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", memory, p_cross["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p_cross["wv"])
+    return k, v
+
+
+def _dec_block(cfg, p, x, *, self_mask, memory=None, cross_kv=None,
+               cache=None, decode_pos=None):
+    """One decoder block; cross K/V either fresh from ``memory`` (train /
+    prefill) or reused from ``cross_kv`` (decode)."""
+    h, new_self = L.attention(
+        cfg, p["self_attn"], L.rms_norm(x, p["ln1"], cfg),
+        angles=None, mask=self_mask,
+        cache=cache["self"] if cache is not None else None,
+        decode_pos=decode_pos,
+    )
+    x = x + h
+    kv = cross_kv if cross_kv is not None else _cross_kv(cfg, p["cross_attn"], memory)
+    h, _ = L.attention(
+        cfg, p["cross_attn"], L.rms_norm(x, p["ln2"], cfg),
+        angles=None, mask=None, kv_override=kv,
+    )
+    x = x + h
+    x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln3"], cfg))
+    return x, new_self, kv
+
+
+def apply_head(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    """Chunked-loss head application (tied to the embedding table)."""
+    return _head_logits(cfg, params, hidden)
+
+
+def forward_train(cfg: ModelConfig, params: dict, frames: jax.Array, tokens: jax.Array,
+                  *, return_hidden: bool = False):
+    """Teacher-forced decoder logits (B, S, V) (or final hidden states)."""
+    memory = encode(cfg, params, frames)
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][None, :s]
+    mask = L.causal_mask(s)
+
+    def body(x, p):
+        x, _, _ = _dec_block(cfg, p, x, self_mask=mask, memory=memory)
+        return x, None
+
+    x, _ = _maybe_scan(cfg, body, x, params["decoder"])
+    x = L.rms_norm(x, params["final_norm"], cfg)
+    if return_hidden:
+        return x
+    logits = _head_logits(cfg, params, x)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def prefill(cfg: ModelConfig, params: dict, frames: jax.Array, tokens: jax.Array,
+            *, cache_capacity: int | None = None):
+    """Encode + run the prompt through the decoder, building self caches and
+    cross K/V.  Returns (last logits (B, V), caches dict)."""
+    memory = encode(cfg, params, frames)
+    b, s = tokens.shape
+    cap = cache_capacity or s
+    x = params["embed"][tokens] + params["dec_pos"][None, :s]
+    mask = L.causal_mask(s)
+    dtype = x.dtype
+
+    def body(x, p):
+        x_out, _, kv = _dec_block(cfg, p, x, self_mask=mask, memory=memory)
+        # Self cache from this layer's normed input (same discipline as
+        # transformer._fill_cache).
+        h = L.rms_norm(x, p["ln1"], cfg)
+        k = jnp.einsum("bsd,dhk->bshk", h, p["self_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["self_attn"]["wv"])
+        cache = L.init_layer_cache(cfg, b, cap, dtype)
+        take = min(s, cap)
+        pos = jnp.arange(s - take, s, dtype=jnp.int32)
+        slots = pos % cap
+        pnew = cache.positions.at[:, slots].set(pos[None, :])
+        if cache.k_scale is not None:
+            kq, ks = L.quantize_kv(k[:, s - take :])
+            vq, vs = L.quantize_kv(v[:, s - take :])
+            cache = L.LayerCache(
+                cache.k.at[:, slots].set(kq),
+                cache.v.at[:, slots].set(vq),
+                pnew,
+                cache.k_scale.at[:, slots].set(ks),
+                cache.v_scale.at[:, slots].set(vs),
+            )
+        else:
+            cache = L.LayerCache(
+                cache.k.at[:, slots].set(k[:, s - take :]),
+                cache.v.at[:, slots].set(v[:, s - take :]),
+                pnew,
+            )
+        return x_out, {"self": cache, "cross_k": kv[0], "cross_v": kv[1]}
+
+    x, caches = _maybe_scan(cfg, body, x, params["decoder"])
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg)
+    logits = _head_logits(cfg, params, x)
+    return logits[:, 0], caches
+
+
+def decode(cfg: ModelConfig, params: dict, token: jax.Array, pos: jax.Array, caches: dict):
+    """One decoder token against (self cache, cross K/V)."""
+    x = params["embed"][token[:, None]] + params["dec_pos"][pos][:, None]
+
+    def body(x, slices):
+        p, cache = slices
+        x, new_self, _ = _dec_block(
+            cfg, p, x, self_mask=None,
+            cross_kv=(cache["cross_k"], cache["cross_v"]),
+            cache=cache, decode_pos=pos,
+        )
+        return x, {"self": new_self, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+
+    x, new_caches = _maybe_scan(cfg, body, x, (params["decoder"], caches))
+    x = L.rms_norm(x, params["final_norm"], cfg)
+    logits = _head_logits(cfg, params, x)
+    return logits[:, 0], new_caches

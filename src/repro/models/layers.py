@@ -1,0 +1,353 @@
+"""Shared transformer layer vocabulary for the architecture zoo.
+
+Pure functions over parameter pytrees — no module framework.  Everything is
+written to live inside a ``lax.scan`` over stacked layer parameters and under
+GSPMD: activations get explicit sharding constraints at block boundaries via
+``sharding_ctx`` so the partitioner never has to guess.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding_ctx import constrain
+
+NEG_INF = -2.0e38
+
+
+# --------------------------------------------------------------------- norms
+
+def rms_norm(x: jax.Array, w: jax.Array, cfg: ModelConfig, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if cfg.norm_plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    half = cfg.resolved_head_dim // 2
+    return cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def rope_angles(cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """positions (B, S) or (3, B, S) for M-RoPE -> angles (B, S, half).
+
+    M-RoPE (Qwen2-VL): the ``half`` rotary pairs are split into sections
+    (t, h, w); each section takes its angle from its own position stream.
+    """
+    inv = rope_freqs(cfg)
+    if positions.ndim == 2:
+        return positions[..., None].astype(jnp.float32) * inv
+    if cfg.mrope_sections is None:
+        raise ValueError("3-D positions require mrope_sections")
+    parts = []
+    start = 0
+    for idx, width in enumerate(cfg.mrope_sections):
+        parts.append(positions[idx][..., None].astype(jnp.float32) * inv[start : start + width])
+        start += width
+    if start != inv.shape[0]:
+        raise ValueError(f"mrope sections sum {start} != rotary half {inv.shape[0]}")
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (B, S, H, hd), angles (B, S, half) -> rotated x (pairs = split halves)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------- masks
+
+def causal_mask(s: int, *, dtype=jnp.float32) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return jnp.where(j <= i, 0.0, NEG_INF).astype(dtype)
+
+
+def local_causal_mask(s: int, window: int, *, dtype=jnp.float32) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    ok = (j <= i) & (j > i - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def decode_mask(q_pos: jax.Array, kv_positions: jax.Array, window: int | None) -> jax.Array:
+    """One-token decode: q_pos (B,), kv_positions (B, T) absolute (or -1 for
+    empty slots) -> (B, 1, T) additive mask."""
+    ok = (kv_positions >= 0) & (kv_positions <= q_pos[:, None])
+    if window is not None:
+        ok &= kv_positions > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, :]
+
+
+# ------------------------------------------------------------------ KV cache
+
+class LayerCache(NamedTuple):
+    """Per-layer attention cache.  ``positions`` carries absolute positions
+    (-1 = empty), which uniformly handles global caches and local
+    ring-buffers.  With ``cfg.kv_cache_dtype == "int8"`` the k/v payloads are
+    per-(b, t, kv)-row symmetric-quantized int8 with bf16 scales — half the
+    decode HBM traffic and the difference between fitting and not fitting
+    qwen1.5-32b's 5.5 TB decode_32k cache (EXPERIMENTS.md §Perf)."""
+
+    k: jax.Array                     # (B, T, KV, hd) bf16 or int8
+    v: jax.Array                     # (B, T, KV, hd)
+    positions: jax.Array             # (B, T) int32
+    k_scale: jax.Array | None = None  # (B, T, KV) bf16, int8 mode only
+    v_scale: jax.Array | None = None
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., hd) -> int8 payload + per-row scale."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, s: jax.Array, dtype) -> jax.Array:
+    return q.astype(dtype) * s[..., None].astype(dtype)
+
+
+def init_layer_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> LayerCache:
+    kv = cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return LayerCache(
+            k=jnp.zeros((batch, capacity, kv, hd), jnp.int8),
+            v=jnp.zeros((batch, capacity, kv, hd), jnp.int8),
+            positions=jnp.full((batch, capacity), -1, jnp.int32),
+            k_scale=jnp.zeros((batch, capacity, kv), jnp.bfloat16),
+            v_scale=jnp.zeros((batch, capacity, kv), jnp.bfloat16),
+        )
+    return LayerCache(
+        k=jnp.zeros((batch, capacity, kv, hd), dtype),
+        v=jnp.zeros((batch, capacity, kv, hd), dtype),
+        positions=jnp.full((batch, capacity), -1, jnp.int32),
+    )
+
+
+def cache_insert(cache: LayerCache, k: jax.Array, v: jax.Array, pos: jax.Array) -> LayerCache:
+    """Insert one decode step (k/v: (B, 1, KV, hd), pos: (B,)) at
+    ``pos % capacity`` — a ring for local layers, exact slot for global ones
+    (global capacity >= max position, so the ring never wraps)."""
+    cap = cache.k.shape[1]
+    slot = (pos % cap).astype(jnp.int32)
+    b = jnp.arange(cache.k.shape[0])
+    pnew = cache.positions.at[b, slot].set(pos.astype(jnp.int32))
+    if cache.k_scale is not None:
+        kq, ks = quantize_kv(k[:, 0])
+        vq, vs = quantize_kv(v[:, 0])
+        return LayerCache(
+            cache.k.at[b, slot].set(kq),
+            cache.v.at[b, slot].set(vq),
+            pnew,
+            cache.k_scale.at[b, slot].set(ks),
+            cache.v_scale.at[b, slot].set(vs),
+        )
+    knew = cache.k.at[b, slot].set(k[:, 0])
+    vnew = cache.v.at[b, slot].set(v[:, 0])
+    return LayerCache(knew, vnew, pnew)
+
+
+def cache_kv_values(cache: LayerCache, dtype) -> tuple[jax.Array, jax.Array]:
+    """Materialize dequantized (B, T, KV, hd) k/v for attention."""
+    if cache.k_scale is not None:
+        return (
+            dequantize_kv(cache.k, cache.k_scale, dtype),
+            dequantize_kv(cache.v, cache.v_scale, dtype),
+        )
+    return cache.k, cache.v
+
+
+# ----------------------------------------------------------------- attention
+
+def init_attention_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, cfg.n_heads, hd), dtype) * scale,
+        "wk": jax.random.normal(k2, (d, cfg.n_kv_heads, hd), dtype) * scale,
+        "wv": jax.random.normal(k3, (d, cfg.n_kv_heads, hd), dtype) * scale,
+        "wo": jax.random.normal(k4, (cfg.n_heads, hd, d), dtype) * scale,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    return p
+
+
+def _softcap(logits: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def _chunked_attention(
+    cfg: ModelConfig,
+    qg: jax.Array,      # (B, S, KV, G, hd), unscaled
+    k: jax.Array,       # (B, T, KV, hd)
+    v: jax.Array,       # (B, T, KV, hd)
+    *,
+    causal: bool,
+    window: int | None,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash-style): the (S, T)
+    score tile exists only one ``attn_chunk``-wide slab at a time, in both
+    the forward and (via scan) the backward pass.  Masks are built from iota
+    per chunk — no (S, T) mask tensor either."""
+    b, s, kvh, g, hd = qg.shape
+    t = k.shape[1]
+    chunk = min(cfg.attn_chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = hd ** -0.5
+    q_pos = jnp.arange(s)
+
+    def body(carry, c_idx):
+        m, denom, acc = carry
+        k_c = jax.lax.dynamic_slice_in_dim(k, c_idx * chunk, chunk, 1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, c_idx * chunk, chunk, 1)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qg, k_c).astype(jnp.float32) * scale
+        logits = _softcap(logits, cfg.attn_softcap)
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        ok = kv_pos[None, :] < t  # padding slots
+        if causal:
+            ok = ok & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            ok = ok & (kv_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(v_c.dtype), v_c
+        ).astype(jnp.float32)
+        return (m_new, denom, acc), None
+
+    init = (
+        jnp.full((b, kvh, g, s), -jnp.inf, jnp.float32),
+        jnp.zeros((b, kvh, g, s), jnp.float32),
+        jnp.zeros((b, kvh, g, s, hd), jnp.float32),
+    )
+    (m, denom, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    # (B, KV, G, S, hd) -> (B, S, KV*G, hd)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, kvh * g, hd).astype(qg.dtype)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                     # (B, S, D)
+    *,
+    angles: jax.Array | None,         # rope angles (B, S, half) or None
+    mask: jax.Array | None,           # additive (S, T) / (B, 1, T) / None
+    cache: LayerCache | None = None,  # decode path when S == 1
+    decode_pos: jax.Array | None = None,  # (B,) absolute positions of the new token
+    window: int | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attention
+    causal: bool = True,
+) -> tuple[jax.Array, LayerCache | None]:
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    else:
+        k, v = kv_override
+    if cfg.qkv_bias and "bq" in p:
+        q = q + p["bq"]
+        if kv_override is None:
+            k = k + p["bk"]
+            v = v + p["bv"]
+    if angles is not None:
+        q = apply_rope(q, angles)
+        if kv_override is None:
+            k = apply_rope(k, angles)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = cache_insert(cache, k, v, decode_pos)
+        k, v = cache_kv_values(new_cache, x.dtype)  # (B, T, KV, hd)
+        mask = decode_mask(decode_pos, new_cache.positions, window)
+
+    q = constrain(q, ("batch", "seq", "heads", None))
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, hd)
+
+    # Flash-style path: full-sequence attention (train/prefill/encoder) with
+    # chunking enabled; decode and cross-attention keep the dense path.
+    if cfg.attn_chunk and cache is None and s > 1 and kv_override is None:
+        ctx = _chunked_attention(cfg, qg, k, v, causal=causal, window=window)
+        out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+        return constrain(out, ("batch", "seq", "embed")), None
+
+    scale = hd ** -0.5
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    logits = _softcap(logits, cfg.attn_softcap)
+    if mask is not None:
+        if mask.ndim == 2:                       # (S, T)
+            logits = logits + mask[None, None, None, :, :]
+        else:                                    # (B, 1, T) decode
+            logits = logits + mask[:, None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkgst,btkh->bskgh", probs, v).reshape(b, s, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    return constrain(out, ("batch", "seq", "embed")), new_cache
+
+
+# ----------------------------------------------------------------------- mlp
+
+def init_mlp_params(cfg: ModelConfig, key: jax.Array, dtype, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": jax.random.normal(k1, (d, f), dtype) * d**-0.5,
+        "w_out": jax.random.normal(k2, (f, d), dtype) * f**-0.5,
+    }
+    if cfg.activation in ("silu", "geglu"):
+        p["w_gate"] = jax.random.normal(k3, (d, f), dtype) * d**-0.5
+    return p
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    up = constrain(up, ("batch", "seq", "mlp"))
+    if cfg.activation == "silu":
+        gated = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * up
+    elif cfg.activation == "geglu":
+        gated = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]), approximate=True) * up
+    elif cfg.activation == "gelu":
+        gated = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(cfg.activation)
+    out = jnp.einsum("bsf,fd->bsd", gated, p["w_out"])
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+# ------------------------------------------------------------------- softcap
+
+def final_softcap(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    return _softcap(logits, cfg.final_softcap)

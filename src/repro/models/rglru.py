@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure (one "rec" temporal-mix):
+
+    x -> W_branch (d -> 2 * lru_width)       split: [gate | signal]
+    signal -> causal depthwise conv1d(width) -> RG-LRU -> * gelu(gate)
+    -> W_out (lru_width -> d)
+
+RG-LRU cell (c = 8):
+
+    r_t = sigmoid(W_a u_t + b_a)             recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)             input gate
+    log a_t = -c * softplus(Lambda) * r_t    (so a_t = sigmoid(Lambda)^(c r_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Decode state: h (B, W) plus the conv ring (B, width-1, W) — O(1) in context
+length, which is what qualifies this family for the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding_ctx import constrain
+
+__all__ = [
+    "init_rglru_params",
+    "init_rglru_cache",
+    "rglru_mix",
+]
+
+_C = 8.0
+
+
+def init_rglru_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    s = d**-0.5
+    return {
+        "w_branch": jax.random.normal(ks[0], (d, 2 * w), dtype) * s,
+        "conv": jax.random.normal(ks[1], (cfg.conv_width, w), dtype) * 0.1,
+        "conv_bias": jnp.zeros((w,), dtype),
+        "w_a": jax.random.normal(ks[2], (w, w), dtype) * w**-0.5,
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": jax.random.normal(ks[3], (w, w), dtype) * w**-0.5,
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jax.random.uniform(ks[4], (w,), jnp.float32, 2.0, 4.0),  # softplus -> decay
+        "w_out": jax.random.normal(ks[5], (w, d), dtype) * w**-0.5,
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def _conv1d(p: dict, u: jax.Array, conv_state: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv over (B, S, W); ``conv_state`` (B, cw-1, W)
+    carries the predecessors (zeros for a fresh sequence).  Works for any S
+    including decode's S=1.  Returns (out, new_state)."""
+    cw = p["conv"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([conv_state, u], axis=1)            # (B, S+cw-1, W)
+    out = sum(ext[:, i : i + u.shape[1]] * p["conv"][i][None, None] for i in range(cw))
+    return out + p["conv_bias"][None, None], ext[:, -(cw - 1) :]
+
+
+def _gates(p: dict, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_i"]).astype(jnp.float32) + p["b_i"])
+    return r, i
+
+
+def _lru_coeffs(p: dict, r: jax.Array, i: jax.Array, u: jax.Array):
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i * u.astype(jnp.float32)
+    )
+    return a, gated_in
+
+
+def rglru_mix(
+    cfg: ModelConfig, p: dict, x: jax.Array, cache: dict | None = None
+) -> tuple[jax.Array, dict]:
+    """Temporal mix over any sequence length; ``cache=None`` = fresh state.
+    Returns (out (B,S,D), new cache)."""
+    b = x.shape[0]
+    branch = jnp.einsum("bsd,dw->bsw", x, p["w_branch"])
+    gate, signal = jnp.split(branch, 2, axis=-1)
+    u, conv_state = _conv1d(p, signal, cache["conv"] if cache else None)
+    r, i = _gates(p, u)
+    a, gated_in = _lru_coeffs(p, r, i, u)
+
+    def step(h, inputs):
+        a_t, in_t = inputs
+        h = a_t * h + in_t
+        return h, h
+
+    h0 = cache["h"] if cache else jnp.zeros((b, cfg.lru_width), jnp.float32)
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated_in, 1, 0))
+    h_final, hs = jax.lax.scan(step, h0, xs)
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    mixed = h_seq * jax.nn.gelu(gate, approximate=True)
+    out = jnp.einsum("bsw,wd->bsd", mixed, p["w_out"])
+    out = constrain(out, ("batch", "seq", "embed"))
+    return out, {"h": h_final, "conv": conv_state}

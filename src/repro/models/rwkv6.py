@@ -1,0 +1,188 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): time-mix with data-dependent
+decay + channel-mix, attention-free.
+
+TPU mapping notes (DESIGN.md §5): the WKV recurrence keeps a per-head
+(hd x hd) state; we express one step as rank-1 outer-product updates and run
+``lax.scan`` over time.  The per-step einsums batch over (B, H) so the MXU
+sees well-shaped contractions; heads shard over the model axis ("state"
+logical axis), the state carries no sequence dimension, which is exactly why
+this family runs the ``long_500k`` cell (O(1) decode memory).
+
+Token-shift interpolation uses the Finch LoRA form: one fused
+``d -> 5*rank`` projection, tanh, and five ``rank -> d`` heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding_ctx import constrain
+
+__all__ = [
+    "init_rwkv_params",
+    "init_rwkv_cache",
+    "rwkv_block",
+]
+
+_MIX_RANK = 32
+_DECAY_RANK = 64
+
+
+def _ranks(cfg: ModelConfig) -> tuple[int, int]:
+    mix = min(_MIX_RANK, max(4, cfg.d_model // 8))
+    dec = min(_DECAY_RANK, max(4, cfg.d_model // 4))
+    return mix, dec
+
+
+def init_rwkv_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    mix_rank, dec_rank = _ranks(cfg)
+    ks = jax.random.split(key, 16)
+    s = d**-0.5
+    return {
+        # time-mix
+        "mu_x": jnp.zeros((5, d), dtype),            # per-target static mix
+        "mix_a": jax.random.normal(ks[0], (d, 5 * mix_rank), dtype) * s,
+        "mix_b": jax.random.normal(ks[1], (5, mix_rank, d), dtype) * mix_rank**-0.5,
+        "w_r": jax.random.normal(ks[2], (d, h, hd), dtype) * s,
+        "w_k": jax.random.normal(ks[3], (d, h, hd), dtype) * s,
+        "w_v": jax.random.normal(ks[4], (d, h, hd), dtype) * s,
+        "w_g": jax.random.normal(ks[5], (d, h, hd), dtype) * s,
+        "w_o": jax.random.normal(ks[6], (h, hd, d), dtype) * s,
+        "decay_base": jnp.full((h, hd), -1.0, jnp.float32),   # w0
+        "decay_a": jax.random.normal(ks[7], (d, dec_rank), dtype) * s,
+        "decay_b": jax.random.normal(ks[8], (dec_rank, h, hd), dtype) * dec_rank**-0.5,
+        "bonus": jnp.zeros((h, hd), jnp.float32),             # u ("faaaa")
+        "ln_x": jnp.ones((h, hd), jnp.float32),               # per-head groupnorm
+        # channel-mix
+        "cm_mu_k": jnp.zeros((d,), dtype),
+        "cm_mu_r": jnp.zeros((d,), dtype),
+        "cm_k": jax.random.normal(ks[9], (d, cfg.d_ff), dtype) * s,
+        "cm_v": jax.random.normal(ks[10], (cfg.d_ff, d), dtype) * cfg.d_ff**-0.5,
+        "cm_r": jax.random.normal(ks[11], (d, d), dtype) * s,
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x (B,S,D) -> x_{t-1} with ``prev`` (B,D) as the t=0 predecessor."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix_targets(p: dict, x: jax.Array, x_prev: jax.Array) -> list[jax.Array]:
+    """Finch data-dependent token-shift: five interpolated views of x."""
+    xx = x_prev - x
+    base = x + xx * p["mu_x"][0][None, None, :]
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["mix_a"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    outs = []
+    for i in range(5):
+        m = p["mu_x"][i][None, None, :] + jnp.einsum("bsr,rd->bsd", lora[..., i, :], p["mix_b"][i])
+        outs.append(x + xx * m)
+    return outs  # order: w, k, v, r, g
+
+
+def _decay(p: dict, x_w: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0, 1): w = exp(-exp(w0 + lora))."""
+    t = jnp.tanh(jnp.einsum("bsd,dr->bsr", x_w, p["decay_a"]))
+    core = p["decay_base"][None, None] + jnp.einsum("bsr,rhk->bshk", t, p["decay_b"]).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(jnp.clip(core, -10.0, 4.0)))
+
+
+def _wkv_scan(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array, state: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """r/k/v/w: (B, S, H, hd); state (B, H, hd, hd) mapping k-dim -> v-dim.
+
+        y_t   = (S_{t-1} + u*k_t (x) v_t)^T r_t
+        S_t   = diag(w_t) S_{t-1} + k_t (x) v_t
+    """
+
+    def step(s, inputs):
+        rt, kt, vt, wt = inputs        # (B, H, hd)
+        outer = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * outer)
+        s_new = wt[..., :, None] * s + outer
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state   # (B, S, H, hd)
+
+
+def _group_norm(y: jax.Array, g: jax.Array, eps: float = 64e-5) -> jax.Array:
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps) * g[None, None]
+
+
+def _time_mix(cfg: ModelConfig, p: dict, x: jax.Array, shift_prev, wkv_state):
+    b, s, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    x_prev = _token_shift(x, shift_prev)
+    x_w, x_k, x_v, x_r, x_g = _mix_targets(p, x, x_prev)
+    r = jnp.einsum("bsd,dhk->bshk", x_r, p["w_r"])
+    k = jnp.einsum("bsd,dhk->bshk", x_k, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x_v, p["w_v"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", x_g, p["w_g"]))
+    w = _decay(p, x_w)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    y, wkv_state = _wkv_scan(r, k, v, w, p["bonus"], wkv_state)
+    y = _group_norm(y, p["ln_x"]).astype(x.dtype) * g
+    out = jnp.einsum("bshk,hkd->bsd", y, p["w_o"])
+    return constrain(out, ("batch", "seq", "embed")), x[:, -1], wkv_state
+
+
+def _channel_mix(p: dict, x: jax.Array, shift_prev):
+    x_prev = _token_shift(x, shift_prev)
+    xx = x_prev - x
+    x_k = x + xx * p["cm_mu_k"][None, None]
+    x_r = x + xx * p["cm_mu_r"][None, None]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", x_k, p["cm_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_v"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x_r, p["cm_r"])) * kv
+    return out, x[:, -1]
+
+
+def rwkv_block(
+    cfg: ModelConfig,
+    p: dict,
+    norm1_w: jax.Array,
+    norm2_w: jax.Array,
+    x: jax.Array,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict]:
+    """Full RWKV residual block over any sequence length (S=1 is decode).
+
+    ``cache=None`` starts from zero state (training / fresh prefill); the
+    returned cache always carries the final state, so train can drop it and
+    prefill keeps it.
+    """
+    from repro.models.layers import rms_norm
+
+    shift_tm = cache["shift_tm"] if cache else None
+    shift_cm = cache["shift_cm"] if cache else None
+    wkv = cache["wkv"] if cache else None
+    h1 = rms_norm(x, norm1_w, cfg)
+    tm_out, new_shift_tm, new_wkv = _time_mix(cfg, p, h1, shift_tm, wkv)
+    x = x + tm_out
+    h2 = rms_norm(x, norm2_w, cfg)
+    cm_out, new_shift_cm = _channel_mix(p, h2, shift_cm)
+    x = x + cm_out
+    return x, {"wkv": new_wkv, "shift_tm": new_shift_tm, "shift_cm": new_shift_cm}

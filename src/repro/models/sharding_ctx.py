@@ -1,0 +1,49 @@
+"""Ambient mesh/rules context so layer code can constrain activations by
+*logical* axes without threading mesh handles through every function.
+
+Model code calls ``constrain(x, ("batch", "seq", "embed"))``; outside a mesh
+context this is the identity, inside it becomes
+``lax.with_sharding_constraint`` with the physical spec resolved through the
+active ``LogicalAxisRules``.  Step builders install the context.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.runtime.sharding import DEFAULT_RULES, LogicalAxisRules
+
+_state = threading.local()
+
+__all__ = ["activation_sharding_scope", "constrain"]
+
+
+@contextlib.contextmanager
+def activation_sharding_scope(mesh: Mesh | None, rules: LogicalAxisRules | None = None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules or DEFAULT_RULES) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: jax.Array, logical: tuple[str | None, ...]) -> jax.Array:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(logical):
+        return x
+    spec = rules.physical(logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh():
+    """The ambient mesh (None outside a step builder's scope) — used by
+    layers that embed manual shard_map regions (e.g. all-to-all MoE)."""
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None

@@ -1,0 +1,416 @@
+"""Decoder-only LM orchestrator for every non-enc-dec arch in the zoo.
+
+Heterogeneous layer patterns (gemma2 local/global, recurrentgemma
+rec/rec/local, rwkv, dense, moe) are handled by one mechanism: the layer
+stack is decomposed into ``repeats`` copies of ``cfg.block_pattern`` plus a
+tail (``n_layers = repeats * len(pattern) + len(tail)``).  Parameters (and
+caches) are stacked over ``repeats`` and the whole stack runs under one
+``lax.scan`` — compile time and HLO size stay O(pattern), not O(n_layers),
+which is what keeps 62-layer dry-runs tractable.
+
+Three execution modes share the block code:
+    train   — full sequence, no caches
+    prefill — full sequence, returns caches (serve step 1)
+    decode  — S=1 against caches (serve step N)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding_ctx import constrain
+
+__all__ = ["init_params", "forward_train", "prefill", "decode", "stack_geometry"]
+
+Params = dict
+Cache = Any
+
+
+# ----------------------------------------------------------------- geometry
+
+def stack_geometry(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(repeats, tail_kinds)."""
+    k = len(cfg.block_pattern)
+    return cfg.n_layers // k, cfg.block_pattern[: cfg.n_layers % k]
+
+
+def _layer_kinds(cfg: ModelConfig) -> list[str]:
+    reps, tail = stack_geometry(cfg)
+    return list(cfg.block_pattern) * reps + list(tail)
+
+
+# --------------------------------------------------------------------- init
+
+def _init_block(cfg: ModelConfig, kind: str, key: jax.Array, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+
+    def norm():  # fresh buffer each time: donation forbids aliased leaves
+        fill = 0.0 if cfg.norm_plus_one else 1.0
+        return jnp.full((cfg.d_model,), fill, jnp.float32)
+
+    p: Params = {"ln1": norm(), "ln2": norm()}
+    if kind in ("attn", "local"):
+        p["attn"] = L.init_attention_params(cfg, ks[0], dtype)
+        if cfg.moe is not None:
+            from repro.models.moe import init_moe_params
+
+            p["moe"] = init_moe_params(cfg, ks[1], dtype)
+        else:
+            p["mlp"] = L.init_mlp_params(cfg, ks[1], dtype)
+        if cfg.post_norms:
+            p["pn1"] = norm()
+            p["pn2"] = norm()
+    elif kind == "rwkv":
+        from repro.models.rwkv6 import init_rwkv_params
+
+        p["rwkv"] = init_rwkv_params(cfg, ks[0], dtype)
+    elif kind == "rec":
+        from repro.models.rglru import init_rglru_params
+
+        p["rec"] = init_rglru_params(cfg, ks[0], dtype)
+        p["mlp"] = L.init_mlp_params(cfg, ks[1], dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    reps, tail = stack_geometry(cfg)
+    keys = jax.random.split(key, reps * len(cfg.block_pattern) + len(tail) + 3)
+    ki = iter(range(len(keys)))
+
+    pattern_stacks = []
+    for pos, kind in enumerate(cfg.block_pattern):
+        per_repeat = [_init_block(cfg, kind, keys[next(ki)], dtype) for _ in range(reps)]
+        pattern_stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_repeat))
+    tail_blocks = [_init_block(cfg, kind, keys[next(ki)], dtype) for kind in tail]
+
+    params: Params = {
+        "embed": jax.random.normal(keys[next(ki)], (cfg.padded_vocab, cfg.d_model), dtype) * 0.02,
+        "pattern": pattern_stacks,
+        "tail": tail_blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.norm_plus_one
+        else jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[next(ki)], (cfg.d_model, cfg.padded_vocab), dtype) * 0.02
+        )
+    return params
+
+
+# ------------------------------------------------------------------- caches
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> list:
+    """Per-layer caches, stacked over repeats per pattern position; the tail
+    keeps unstacked caches.  Returns [pattern_caches..., tail_caches...]."""
+
+    def one(kind: str) -> Cache:
+        if kind == "attn":
+            return L.init_layer_cache(cfg, batch, capacity, dtype)
+        if kind == "local":
+            return L.init_layer_cache(cfg, batch, min(capacity, cfg.local_window), dtype)
+        if kind == "rwkv":
+            from repro.models.rwkv6 import init_rwkv_cache
+
+            return init_rwkv_cache(cfg, batch, dtype)
+        if kind == "rec":
+            from repro.models.rglru import init_rglru_cache
+
+            return init_rglru_cache(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    reps, tail = stack_geometry(cfg)
+    pattern_caches = [
+        jax.tree.map(lambda *xs: jnp.stack(xs), *[one(kind) for _ in range(reps)])
+        for kind in cfg.block_pattern
+    ]
+    tail_caches = [one(kind) for kind in tail]
+    return [pattern_caches, tail_caches]
+
+
+# ------------------------------------------------------------------- blocks
+
+def _block(
+    cfg: ModelConfig,
+    kind: str,
+    p: Params,
+    x: jax.Array,
+    *,
+    angles,
+    mask,
+    cache,
+    decode_pos,
+    mode: str,
+) -> tuple[jax.Array, Cache, jax.Array]:
+    """One residual block.  Returns (x, new_cache, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local"):
+        window = cfg.local_window if kind == "local" else None
+        h = L.rms_norm(x, p["ln1"], cfg)
+        attn_cache = cache if mode == "decode" else None
+        out, new_cache = L.attention(
+            cfg, p["attn"], h,
+            angles=angles, mask=mask,
+            cache=attn_cache, decode_pos=decode_pos, window=window,
+        )
+        if mode == "prefill":
+            new_cache = _fill_cache(cfg, cache, p, h, angles, window)
+        if cfg.post_norms:
+            out = L.rms_norm(out, p["pn1"], cfg)
+        x = x + out
+        h2 = L.rms_norm(x, p["ln2"], cfg)
+        if "moe" in p:
+            from repro.models.moe import moe_layer, moe_layer_manual
+            from repro.models.sharding_ctx import current_mesh
+
+            mesh = current_mesh()
+            if cfg.moe_impl == "manual" and mesh is not None:
+                ff, aux = moe_layer_manual(cfg, p["moe"], h2, mesh)
+            else:
+                ff, aux = moe_layer(cfg, p["moe"], h2)
+        else:
+            ff = L.mlp(cfg, p["mlp"], h2)
+        if cfg.post_norms:
+            ff = L.rms_norm(ff, p["pn2"], cfg)
+        x = x + ff
+        return x, new_cache, aux
+    if kind == "rwkv":
+        from repro.models.rwkv6 import rwkv_block
+
+        # decode continues the carried state; train/prefill start fresh (the
+        # returned cache is the final state, which prefill keeps).
+        in_cache = cache if mode == "decode" else None
+        x, new_cache = rwkv_block(cfg, p["rwkv"], p["ln1"], p["ln2"], x, in_cache)
+        return x, new_cache, aux
+    if kind == "rec":
+        from repro.models.rglru import rglru_mix
+
+        h = L.rms_norm(x, p["ln1"], cfg)
+        out, new_cache = rglru_mix(cfg, p["rec"], h, cache if mode == "decode" else None)
+        x = x + out
+        x = x + L.mlp(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg))
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+def _fill_cache(cfg, cache: L.LayerCache, p, h_normed, angles, window) -> L.LayerCache:
+    """Prefill: recompute k/v for the full sequence and lay them into the
+    (possibly ring) cache with absolute positions."""
+    k = jnp.einsum("bsd,dhk->bshk", h_normed, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h_normed, p["attn"]["wv"])
+    if cfg.qkv_bias and "bk" in p["attn"]:
+        k = k + p["attn"]["bk"]
+        v = v + p["attn"]["bv"]
+    if angles is not None:
+        k = L.apply_rope(k, angles)
+    b, s = k.shape[0], k.shape[1]
+    cap = cache.k.shape[1]
+    take = min(s, cap)
+    src_k = k[:, s - take :]
+    src_v = v[:, s - take :]
+    pos = jnp.arange(s - take, s, dtype=jnp.int32)
+    slots = pos % cap
+    pnew = cache.positions.at[:, slots].set(pos[None, :])
+    if cache.k_scale is not None:
+        kq, ks = L.quantize_kv(src_k)
+        vq, vs = L.quantize_kv(src_v)
+        return L.LayerCache(
+            cache.k.at[:, slots].set(kq),
+            cache.v.at[:, slots].set(vq),
+            pnew,
+            cache.k_scale.at[:, slots].set(ks),
+            cache.v_scale.at[:, slots].set(vs),
+        )
+    knew = cache.k.at[:, slots].set(src_k)
+    vnew = cache.v.at[:, slots].set(src_v)
+    return L.LayerCache(knew, vnew, pnew)
+
+
+# ------------------------------------------------------------------ forward
+
+def _embed_inputs(cfg, params, tokens, extra_embeds):
+    parts = []
+    if extra_embeds is not None:
+        parts.append(extra_embeds.astype(params["embed"].dtype))
+    if tokens is not None:
+        parts.append(params["embed"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def _vocab_pad_mask(cfg):
+    if cfg.padded_vocab == cfg.vocab:
+        return None
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, L.NEG_INF)
+
+
+def _logits(cfg, params, x):
+    x = L.rms_norm(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    logits = L.final_softcap(cfg, logits)
+    mask = _vocab_pad_mask(cfg)
+    if mask is not None:
+        logits = logits + mask[None, None, :]
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def _train_masks(cfg: ModelConfig, s: int) -> dict:
+    """Dense additive masks; skipped entirely when chunked attention builds
+    its masks from iota per KV slab (a 32k x 32k mask is 4 GB f32)."""
+    if cfg.attn_chunk:
+        return {}
+    return {
+        "attn": L.causal_mask(s),
+        "local": L.local_causal_mask(s, cfg.local_window),
+    }
+
+
+def _run_stacks(cfg, params, x, *, angles, masks, caches, decode_pos, mode, remat_policy=None):
+    """Scan the pattern stacks, then the tail.  Returns (x, new_caches, aux)."""
+    reps, tail = stack_geometry(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    pattern_caches, tail_caches = caches if caches is not None else ([None] * len(cfg.block_pattern), [None] * len(tail))
+
+    def repeat_body(x, slices):
+        p_slices, c_slices = slices
+        aux_acc = jnp.zeros((), jnp.float32)
+        new_cs = []
+        for pos, kind in enumerate(cfg.block_pattern):
+            c = c_slices[pos] if c_slices is not None else None
+            x, new_c, aux = _block(
+                cfg, kind, p_slices[pos], x,
+                angles=angles, mask=masks.get(kind) if masks else None,
+                cache=c, decode_pos=decode_pos, mode=mode,
+            )
+            new_cs.append(new_c)
+            aux_acc = aux_acc + aux
+        return x, new_cs, aux_acc
+
+    if reps > 0:
+        def scan_body(carry, slices):
+            x, aux_run = carry
+            x, new_cs, aux = repeat_body(x, slices)
+            return (x, aux_run + aux), new_cs
+
+        if remat_policy is not None:
+            scan_body = jax.checkpoint(scan_body, policy=remat_policy)
+        xs = (tuple(params["pattern"]), tuple(pattern_caches) if caches is not None else None)
+        if cfg.scan_layers:
+            (x, aux_total), new_pattern_caches = jax.lax.scan(scan_body, (x, aux_total), xs)
+        else:
+            # Unrolled (dry-run accounting mode): same math, every layer in
+            # the HLO so cost_analysis counts real FLOPs/bytes.
+            collected = []
+            for r in range(reps):
+                sl = jax.tree.map(lambda a: a[r], xs)
+                (x, aux_total), new_cs = scan_body((x, aux_total), sl)
+                collected.append(new_cs)
+            new_pattern_caches = jax.tree.map(lambda *xs_: jnp.stack(xs_), *collected)
+    else:
+        new_pattern_caches = pattern_caches
+
+    new_tail_caches = []
+    for i, kind in enumerate(tail):
+        c = tail_caches[i] if caches is not None else None
+        x, new_c, aux = _block(
+            cfg, kind, params["tail"][i], x,
+            angles=angles, mask=masks.get(kind) if masks else None,
+            cache=c, decode_pos=decode_pos, mode=mode,
+        )
+        new_tail_caches.append(new_c)
+        aux_total = aux_total + aux
+    new_caches = [list(new_pattern_caches) if reps > 0 else [], new_tail_caches]
+    return x, new_caches, aux_total
+
+
+def apply_head(cfg: ModelConfig, params: Params, hidden: jax.Array) -> jax.Array:
+    """Final-normed hidden (B, C, d) -> logits (B, C, V_pad), f32, softcapped,
+    pad-masked.  Used by the chunked cross-entropy (never materializes the
+    full-sequence logits tensor)."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hidden, head).astype(jnp.float32)
+    logits = L.final_softcap(cfg, logits)
+    mask = _vocab_pad_mask(cfg)
+    if mask is not None:
+        logits = logits + mask[None, None, :]
+    return logits
+
+
+def forward_train(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array | None,
+    positions: jax.Array,
+    *,
+    extra_embeds: jax.Array | None = None,
+    remat_policy=None,
+    return_hidden: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits (B,S,V), moe_aux); with
+    ``return_hidden`` the final-normed hidden states come back instead of
+    logits (chunked-loss path)."""
+    x = _embed_inputs(cfg, params, tokens, extra_embeds)
+    s = x.shape[1]
+    angles = L.rope_angles(cfg, positions) if cfg.rope_theta else None
+    masks = _train_masks(cfg, s)
+    x, _, aux = _run_stacks(
+        cfg, params, x, angles=angles, masks=masks, caches=None,
+        decode_pos=None, mode="train", remat_policy=remat_policy,
+    )
+    if return_hidden:
+        return L.rms_norm(x, params["final_norm"], cfg), aux
+    return _logits(cfg, params, x), aux
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array | None,
+    positions: jax.Array,
+    *,
+    cache_capacity: int | None = None,
+    extra_embeds: jax.Array | None = None,
+) -> tuple[jax.Array, list]:
+    """Serve step 1: full forward building caches.  Returns (last-token
+    logits (B,V), caches)."""
+    x = _embed_inputs(cfg, params, tokens, extra_embeds)
+    b, s = x.shape[0], x.shape[1]
+    dtype = x.dtype
+    caches = init_cache(cfg, b, cache_capacity or s, dtype)
+    angles = L.rope_angles(cfg, positions) if cfg.rope_theta else None
+    masks = _train_masks(cfg, s)
+    x, caches, _ = _run_stacks(
+        cfg, params, x, angles=angles, masks=masks, caches=caches,
+        decode_pos=None, mode="prefill",
+    )
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,          # (B,) int32
+    pos: jax.Array,            # (B,) absolute position of this token
+    caches: list,
+) -> tuple[jax.Array, list]:
+    """Serve step N: one token through the caches -> (logits (B,V), caches)."""
+    x = _embed_inputs(cfg, params, token[:, None], None)
+    angles = L.rope_angles(cfg, pos[:, None]) if cfg.rope_theta else None
+    x, caches, _ = _run_stacks(
+        cfg, params, x, angles=angles, masks=None, caches=caches,
+        decode_pos=pos, mode="decode",
+    )
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], caches

@@ -1,0 +1,24 @@
+"""Distributed runtime substrate: sharding rules, checkpoint/restart,
+host-side prefetch, straggler-aware work distribution, gradient compression.
+
+Shared by both workload wings (the GWAS scan and the LM model zoo)."""
+from repro.runtime.sharding import (
+    LogicalAxisRules,
+    gwas_shardings,
+    logical_to_sharding,
+    mesh_axes,
+)
+from repro.runtime.checkpoint import ScanCheckpoint, TrainCheckpoint
+from repro.runtime.prefetch import Prefetcher
+from repro.runtime.workqueue import WorkQueue
+
+__all__ = [
+    "LogicalAxisRules",
+    "gwas_shardings",
+    "logical_to_sharding",
+    "mesh_axes",
+    "ScanCheckpoint",
+    "TrainCheckpoint",
+    "Prefetcher",
+    "WorkQueue",
+]

@@ -1,0 +1,176 @@
+"""Fault-tolerant checkpointing for both wings.
+
+``ScanCheckpoint`` — the GWAS scan is a deterministic stream of marker
+batches; each completed batch commits a result shard plus an atomic manifest
+update (write-tmp, fsync, rename).  Restart resumes from the manifest; the
+batch decomposition is independent of the device mesh, so a resume may use a
+*different* mesh/host count (elastic scaling) — remaining batches are simply
+re-partitioned.
+
+``TrainCheckpoint`` — step-granular pytree checkpoints for the LM wing:
+flat ``{path: ndarray}`` .npz shards plus a JSON manifest, same atomic
+rename discipline.  (No orbax dependency by design: the container is
+offline, and the format must stay greppable in production triage.)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["ScanCheckpoint", "TrainCheckpoint", "config_fingerprint"]
+
+
+def config_fingerprint(payload: dict) -> str:
+    """Stable hash of scan-defining config (mesh EXCLUDED: elastic restarts
+    must accept a different topology)."""
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def _atomic_write_json(path: str, payload: dict) -> None:
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+class ScanCheckpoint:
+    """Batch-granular scan progress under ``root/``:
+
+        manifest.json                    {fingerprint, n_batches, completed,
+                                          failed, created, updated}
+        batch_<idx>.npz                  committed result shard
+    """
+
+    MANIFEST = "manifest.json"
+
+    def __init__(self, root: str, *, fingerprint: str, n_batches: int):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.fingerprint = fingerprint
+        self.n_batches = n_batches
+        self._manifest_path = os.path.join(root, self.MANIFEST)
+        existing = self._load_manifest()
+        if existing is None:
+            self._manifest = {
+                "fingerprint": fingerprint,
+                "n_batches": n_batches,
+                "completed": {},
+                "failed": {},
+                "created": time.time(),
+                "updated": time.time(),
+            }
+            _atomic_write_json(self._manifest_path, self._manifest)
+        else:
+            if existing["fingerprint"] != fingerprint:
+                raise ValueError(
+                    f"checkpoint at {root} belongs to a different scan "
+                    f"({existing['fingerprint']} != {fingerprint}); refusing to resume"
+                )
+            if existing["n_batches"] != n_batches:
+                raise ValueError(
+                    f"batch decomposition changed ({existing['n_batches']} -> {n_batches}); "
+                    "keep batch size stable across restarts"
+                )
+            self._manifest = existing
+
+    def _load_manifest(self) -> dict | None:
+        if not os.path.exists(self._manifest_path):
+            return None
+        with open(self._manifest_path) as f:
+            return json.load(f)
+
+    @property
+    def completed(self) -> set[int]:
+        return {int(k) for k in self._manifest["completed"]}
+
+    def pending_batches(self) -> list[int]:
+        done = self.completed
+        return [i for i in range(self.n_batches) if i not in done]
+
+    def commit_batch(self, idx: int, arrays: dict[str, np.ndarray]) -> str:
+        """Write the shard, then the manifest — in that order, so a crash
+        between the two just re-does one batch."""
+        shard = os.path.join(self.root, f"batch_{idx:06d}.npz")
+        tmp = shard + ".tmp.npz"
+        np.savez_compressed(tmp, **arrays)
+        os.replace(tmp, shard)
+        self._manifest["completed"][str(idx)] = os.path.basename(shard)
+        self._manifest["failed"].pop(str(idx), None)
+        self._manifest["updated"] = time.time()
+        _atomic_write_json(self._manifest_path, self._manifest)
+        return shard
+
+    def record_failure(self, idx: int, err: str) -> None:
+        self._manifest["failed"][str(idx)] = err[:500]
+        self._manifest["updated"] = time.time()
+        _atomic_write_json(self._manifest_path, self._manifest)
+
+    def load_batch(self, idx: int) -> dict[str, np.ndarray]:
+        name = self._manifest["completed"][str(idx)]
+        with np.load(os.path.join(self.root, name)) as z:
+            return {k: z[k] for k in z.files}
+
+    def is_complete(self) -> bool:
+        return len(self._manifest["completed"]) == self.n_batches
+
+
+class TrainCheckpoint:
+    """Step-granular pytree checkpoints: ``step_<n>/arrays.npz`` + manifest."""
+
+    def __init__(self, root: str, *, keep_last: int = 3):
+        self.root = root
+        self.keep_last = keep_last
+        os.makedirs(root, exist_ok=True)
+        self._manifest_path = os.path.join(root, "manifest.json")
+
+    def latest_step(self) -> int | None:
+        if not os.path.exists(self._manifest_path):
+            return None
+        with open(self._manifest_path) as f:
+            steps = json.load(f).get("steps", [])
+        return max(steps) if steps else None
+
+    def save(self, step: int, flat_state: dict[str, np.ndarray], extra: dict | None = None) -> None:
+        d = os.path.join(self.root, f"step_{step:08d}")
+        os.makedirs(d, exist_ok=True)
+        tmp = os.path.join(d, "arrays.tmp.npz")
+        np.savez(tmp, **flat_state)
+        os.replace(tmp, os.path.join(d, "arrays.npz"))
+        if extra:
+            _atomic_write_json(os.path.join(d, "extra.json"), extra)
+        steps = []
+        if os.path.exists(self._manifest_path):
+            with open(self._manifest_path) as f:
+                steps = json.load(f).get("steps", [])
+        steps = sorted(set(steps) | {step})
+        _atomic_write_json(self._manifest_path, {"steps": steps})
+        # Retention: drop oldest beyond keep_last.
+        for old in steps[: -self.keep_last]:
+            od = os.path.join(self.root, f"step_{old:08d}")
+            if os.path.isdir(od):
+                for name in os.listdir(od):
+                    os.unlink(os.path.join(od, name))
+                os.rmdir(od)
+        _atomic_write_json(self._manifest_path, {"steps": steps[-self.keep_last :]})
+
+    def restore(self, step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        with np.load(os.path.join(self.root, f"step_{step:08d}", "arrays.npz")) as z:
+            return step, {k: z[k] for k in z.files}

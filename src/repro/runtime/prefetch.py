@@ -1,0 +1,107 @@
+"""Host-side pipeline: decode/repack on worker threads, overlap with device
+compute through a bounded queue (double/triple buffering).
+
+The GWAS scan is IO-bound on the genotype stream when the fused kernel path
+is active (2-bit slabs are only N/4 bytes per marker), so a shallow queue and
+one or two decode workers keep the device saturated; both knobs are config.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, TypeVar
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+__all__ = ["Prefetcher"]
+
+_SENTINEL = object()
+
+
+class Prefetcher:
+    """Run ``fn`` over ``items`` on ``num_workers`` threads, yielding results
+    in submission order with at most ``depth`` items in flight.
+
+    Ordered delivery matters: scan batches commit in order per shard file,
+    and the device stream consumes deterministically.  Workers pull from a
+    shared index so a slow item (straggler) never idles the other workers —
+    they keep filling the window behind it.
+    """
+
+    def __init__(
+        self,
+        items: Iterable[T],
+        fn: Callable[[T], U],
+        *,
+        depth: int = 3,
+        num_workers: int = 2,
+    ):
+        self._items = list(items)
+        self._fn = fn
+        self._depth = max(1, depth)
+        self._results: dict[int, object] = {}
+        self._errors: dict[int, BaseException] = {}
+        self._lock = threading.Lock()
+        self._ready = threading.Condition(self._lock)
+        self._next_submit = 0
+        self._next_yield = 0
+        self._stop = False
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True) for _ in range(max(1, num_workers))
+        ]
+
+    def _claim(self) -> int | None:
+        with self._lock:
+            while not self._stop:
+                if self._next_submit >= len(self._items):
+                    return None
+                # Window control: stay at most `depth` ahead of the consumer.
+                if self._next_submit - self._next_yield < self._depth:
+                    idx = self._next_submit
+                    self._next_submit += 1
+                    return idx
+                self._ready.wait(timeout=0.1)
+            return None
+
+    def _worker(self) -> None:
+        while True:
+            idx = self._claim()
+            if idx is None:
+                return
+            try:
+                out = self._fn(self._items[idx])
+                with self._lock:
+                    self._results[idx] = out
+                    self._ready.notify_all()
+            except BaseException as e:  # noqa: BLE001 — reported to consumer
+                with self._lock:
+                    self._errors[idx] = e
+                    self._ready.notify_all()
+
+    def __iter__(self) -> Iterator[U]:
+        for w in self._workers:
+            w.start()
+        try:
+            while self._next_yield < len(self._items):
+                with self._lock:
+                    while (
+                        self._next_yield not in self._results
+                        and self._next_yield not in self._errors
+                    ):
+                        self._ready.wait()
+                    idx = self._next_yield
+                    err = self._errors.pop(idx, None)
+                    out = self._results.pop(idx, None)
+                    self._next_yield += 1
+                    self._ready.notify_all()
+                if err is not None:
+                    raise err
+                yield out  # type: ignore[misc]
+        finally:
+            with self._lock:
+                self._stop = True
+                self._ready.notify_all()
+            for w in self._workers:
+                if w.is_alive():
+                    w.join(timeout=1.0)

@@ -1,0 +1,126 @@
+"""Sharding vocabulary for both workload wings.
+
+Physical meshes (launch/mesh.py):
+    single pod:  (data=16, model=16)          -> axes ("data", "model")
+    multi-pod:   (pod=2, data=16, model=16)   -> axes ("pod", "data", "model")
+
+The GWAS scan and the LM zoo never name physical axes directly; they go
+through the helpers here so the same model/scan code runs on either mesh.
+
+LM parameters use MaxText-style *logical* axes mapped to physical axes by
+``LogicalAxisRules`` — this is what makes FSDP/TP/EP configurable per arch
+without touching model code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "mesh_axes",
+    "batch_axes",
+    "gwas_shardings",
+    "LogicalAxisRules",
+    "logical_to_sharding",
+    "DEFAULT_RULES",
+]
+
+
+def mesh_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All axes that act data-parallel: ('pod', 'data') on multi-pod."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def gwas_shardings(mesh: Mesh, *, mode: str = "mp") -> dict[str, NamedSharding]:
+    """Sharding contract for the association GEMM ``(M,N)x(N,P)->(M,P)``.
+
+    mode="mp" (default): markers over the data axes, phenotypes over model;
+        zero collectives in the hot GEMM — the roofline-optimal layout when
+        the panel replica ``Y (N,P/16)`` fits per device.
+    mode="sample": samples over the data axes (for biobank-scale N); XLA
+        inserts one all-reduce of the (M, P/16) partial products per batch.
+    """
+    dp = batch_axes(mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    if mode == "mp":
+        return {
+            "packed": ns(P(dp, None)),     # (M, N/4) markers sharded
+            "marker_vec": ns(P(dp)),       # per-marker stats
+            "g": ns(P(dp, None)),          # dense (M, N)
+            "y": ns(P(None, "model")),     # panel: phenotypes sharded
+            "out": ns(P(dp, "model")),     # (M, P) fully tiled
+        }
+    if mode == "sample":
+        return {
+            "packed": ns(P(None, dp)),
+            "marker_vec": ns(P()),
+            "g": ns(P(None, dp)),
+            "y": ns(P(dp, "model")),
+            "out": ns(P(None, "model")),
+        }
+    raise ValueError(f"unknown GWAS sharding mode: {mode}")
+
+
+@dataclass(frozen=True)
+class LogicalAxisRules:
+    """Ordered (logical_axis -> physical axes) mapping, first-fit like
+    MaxText: a physical axis is consumed at most once per spec."""
+
+    rules: tuple[tuple[str, tuple[str, ...] | str | None], ...] = ()
+
+    def physical(self, logical: tuple[str | None, ...], mesh: Mesh) -> P:
+        available = set(mesh.axis_names)
+        used: set[str] = set()
+        out: list = []
+        table = dict(self.rules)
+        for ax in logical:
+            if ax is None:
+                out.append(None)
+                continue
+            mapped = table.get(ax)
+            if mapped is None:
+                out.append(None)
+                continue
+            cands = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            picked = tuple(c for c in cands if c in available and c not in used)
+            used.update(picked)
+            if not picked:
+                out.append(None)
+            elif len(picked) == 1:
+                out.append(picked[0])
+            else:
+                out.append(picked)
+        return P(*out)
+
+
+# Default LM rules: FSDP over the data axes + tensor parallel over "model".
+DEFAULT_RULES = LogicalAxisRules(
+    rules=(
+        ("batch", ("pod", "data")),
+        ("seq", None),                  # sequence stays unsharded by default
+        ("embed", ("data",)),           # FSDP shard of the embedding dim
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("mlp", ("model",)),
+        ("vocab", ("model",)),
+        ("experts", ("model",)),
+        ("expert_mlp", None),
+        ("layers", None),
+        # KV-cache sequence dim: fallback target when kv_heads cannot divide
+        # the model axis (flash-decoding-style partial softmax).
+        ("kv_seq", ("model",)),
+        ("state", ("model",)),          # recurrent state width (RWKV/RG-LRU)
+    )
+)
+
+
+def logical_to_sharding(
+    logical: tuple[str | None, ...], mesh: Mesh, rules: LogicalAxisRules = DEFAULT_RULES
+) -> NamedSharding:
+    return NamedSharding(mesh, rules.physical(logical, mesh))

@@ -1,0 +1,97 @@
+"""Straggler-aware distributed work assignment for the scan's batch stream.
+
+At cluster scale the scan is a bag of independent batch indices.  Hosts are
+assigned contiguous *leases*; a host that falls behind (straggler) has the
+un-started tail of its lease re-assigned to finished hosts (work stealing).
+Batches are idempotent — the checkpoint manifest deduplicates double
+completion, so stealing is always safe.
+
+The same class drives the single-host thread pool in tests and examples;
+at true multi-host scale the lease table would live in the shared filesystem
+next to the manifest (same atomic-rename discipline), which is how
+``examples/ukb_screening.py`` exercises it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+__all__ = ["WorkQueue", "WorkerStats"]
+
+
+@dataclass
+class WorkerStats:
+    claimed: int = 0
+    completed: int = 0
+    stolen_from: int = 0
+    stolen_by: int = 0
+    busy_s: float = 0.0
+
+
+class WorkQueue:
+    """Lease-based batch distribution with work stealing.
+
+    ``lease_size`` batches are claimed at a time (amortizes coordination);
+    when a worker exhausts its lease it steals the largest remaining tail
+    from the slowest worker.  Thread-safe; deterministic completion set.
+    """
+
+    def __init__(self, n_items: int, *, lease_size: int = 8, skip: set[int] | None = None):
+        pending = [i for i in range(n_items) if not skip or i not in skip]
+        self._pending: list[int] = pending
+        self._leases: dict[str, list[int]] = {}
+        self._stats: dict[str, WorkerStats] = {}
+        self._lease_size = max(1, lease_size)
+        self._lock = threading.Lock()
+        self._t0: dict[str, float] = {}
+
+    def stats(self) -> dict[str, WorkerStats]:
+        return dict(self._stats)
+
+    def remaining(self) -> int:
+        with self._lock:
+            return len(self._pending) + sum(len(v) for v in self._leases.values())
+
+    def claim(self, worker: str) -> int | None:
+        """Next batch index for ``worker``, refilling or stealing as needed."""
+        with self._lock:
+            st = self._stats.setdefault(worker, WorkerStats())
+            now = time.monotonic()
+            if worker in self._t0:
+                st.busy_s += now - self._t0[worker]
+            lease = self._leases.setdefault(worker, [])
+            if not lease:
+                if self._pending:
+                    take = min(self._lease_size, len(self._pending))
+                    lease.extend(self._pending[:take])
+                    del self._pending[:take]
+                else:
+                    victim = self._pick_victim(worker)
+                    if victim is not None:
+                        vlease = self._leases[victim]
+                        steal = len(vlease) // 2
+                        if steal:
+                            lease.extend(vlease[-steal:])
+                            del vlease[-steal:]
+                            self._stats[victim].stolen_from += steal
+                            st.stolen_by += steal
+            if not lease:
+                return None
+            idx = lease.pop(0)
+            st.claimed += 1
+            self._t0[worker] = time.monotonic()
+            return idx
+
+    def _pick_victim(self, thief: str) -> str | None:
+        candidates = [(len(l), w) for w, l in self._leases.items() if w != thief and len(l) > 1]
+        if not candidates:
+            return None
+        return max(candidates)[1]
+
+    def complete(self, worker: str, idx: int) -> None:
+        with self._lock:
+            st = self._stats.setdefault(worker, WorkerStats())
+            st.completed += 1
+            if worker in self._t0:
+                st.busy_s += time.monotonic() - self._t0.pop(worker)

@@ -1,0 +1,14 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_step import TrainStepConfig, build_train_step, init_train_state
+from repro.train.serve_step import build_decode_step, build_prefill_step
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "TrainStepConfig",
+    "build_train_step",
+    "init_train_state",
+    "build_decode_step",
+    "build_prefill_step",
+]

@@ -1,0 +1,95 @@
+"""AdamW from scratch (no optax in the container — and the optimizer is a
+first-class part of the framework: its state dtype and sharding are what
+make the 480B train cells fit).
+
+State is a pytree mirroring params: ``{m, v}`` per leaf plus a scalar count.
+``state_dtype`` controls m/v precision — bf16 halves optimizer HBM, which is
+the difference between fitting and not fitting arctic-480b on 256 chips
+(EXPERIMENTS.md §Dry-run); fp32 is default elsewhere.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update", "global_norm", "cosine_schedule"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"     # "float32" | "bfloat16"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def _state_dt(cfg: AdamWConfig):
+    return jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> OptState:
+    dt = _state_dt(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Any, state: OptState, params: Any
+) -> tuple[Any, OptState, dict[str, jax.Array]]:
+    """One AdamW step with global-norm clipping and decoupled weight decay.
+    Returns (new_params, new_state, metrics)."""
+    dt = _state_dt(cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    lr = cosine_schedule(cfg, count)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        step_dir = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step_dir + decay)
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(new_m, new_v, count), {"grad_norm": gnorm, "lr": lr}

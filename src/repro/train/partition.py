@@ -1,0 +1,220 @@
+"""Logical-axis inference for parameter and cache pytrees.
+
+Leaf names carry the semantics (``wq``, ``w_in``, ``router``, ...); this
+module maps each leaf to its logical axes, which ``runtime.sharding`` then
+resolves to physical mesh axes.  Stacked leaves (under the layer-scan
+``pattern`` stacks / encdec ``encoder``/``decoder`` stacks) get a leading
+``layers`` axis (unsharded).
+
+This is the FSDP/TP heart of the LM wing: "embed" -> data axis (FSDP),
+"heads"/"mlp"/"vocab"/"experts"/"state" -> model axis (TP/EP).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime.sharding import DEFAULT_RULES, LogicalAxisRules
+
+__all__ = ["param_logical_axes", "tree_shardings", "cache_logical_axes"]
+
+# leaf-name -> logical axes, keyed by (name, ndim-without-stacking).
+_PARAM_TABLE: dict[tuple[str, int], tuple] = {
+    ("embed", 2): ("vocab", "embed"),
+    ("lm_head", 2): ("embed", "vocab"),
+    ("enc_pos", 2): (None, "embed"),
+    ("dec_pos", 2): (None, "embed"),
+    ("wq", 3): ("embed", "heads", None),
+    ("wk", 3): ("embed", "kv_heads", None),
+    ("wv", 3): ("embed", "kv_heads", None),
+    ("wo", 3): ("heads", None, "embed"),
+    ("bq", 2): ("heads", None),
+    ("bk", 2): ("kv_heads", None),
+    ("bv", 2): ("kv_heads", None),
+    ("w_in", 2): ("embed", "mlp"),
+    ("w_gate", 2): ("embed", "mlp"),
+    ("w_out", 2): ("mlp", "embed"),
+    # rwkv
+    ("w_r", 3): ("embed", "heads", None),
+    ("w_k", 3): ("embed", "heads", None),
+    ("w_v", 3): ("embed", "heads", None),
+    ("w_g", 3): ("embed", "heads", None),
+    ("w_o", 3): ("heads", None, "embed"),
+    ("mix_a", 2): ("embed", None),
+    ("mix_b", 3): (None, None, "embed"),
+    ("decay_a", 2): ("embed", None),
+    ("decay_b", 3): (None, "heads", None),
+    ("cm_k", 2): ("embed", "mlp"),
+    ("cm_v", 2): ("mlp", "embed"),
+    ("cm_r", 2): ("embed", None),
+    # rg-lru
+    ("w_branch", 2): ("embed", "state"),
+    ("w_a", 2): ("state", None),
+    ("w_i", 2): ("state", None),
+    ("conv", 2): (None, "state"),
+    ("conv_bias", 1): ("state",),
+    ("lam", 1): ("state",),
+    ("b_a", 1): ("state",),
+    ("b_i", 1): ("state",),
+    # rg-lru's (w, d) output projection shares the "w_out" name at ndim 2 —
+    # ("mlp","embed") would be wrong logically but "state" and "mlp" both map
+    # to the model axis, so the physical sharding is identical.
+}
+
+# Expert-parallel leaves live under a "moe" parent (its "dense" residual
+# sub-dict keeps the dense table) — same leaf names, different rank/axes.
+_MOE_TABLE: dict[tuple[str, int], tuple] = {
+    ("router", 2): ("embed", "experts"),
+    ("w_in", 3): ("experts", "embed", None),
+    ("w_gate", 3): ("experts", "embed", None),
+    ("w_out", 3): ("experts", None, "embed"),
+}
+
+_CACHE_TABLE: dict[str, tuple] = {
+    # KV caches prefer head sharding (no softmax collectives); when the head
+    # count does not divide the model axis (kv=4..12 vs 16-way TP — most of
+    # the zoo), the priority resolver falls back to sharding the *sequence*
+    # dim instead (flash-decoding style; GSPMD inserts the partial-softmax
+    # reductions).  Without this, 32k-deep caches replicate — measured up to
+    # 68x HBM on qwen1.5-32b decode (EXPERIMENTS.md §Perf).
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "k_scale": ("batch", "kv_seq", "kv_heads"),
+    "v_scale": ("batch", "kv_seq", "kv_heads"),
+    "positions": ("batch", "kv_seq"),
+    "cross_k": ("batch", "kv_seq", "kv_heads", None),
+    "cross_v": ("batch", "kv_seq", "kv_heads", None),
+    "wkv": ("batch", "heads", None, None),
+    "shift_tm": ("batch", None),
+    "shift_cm": ("batch", None),
+    "h": ("batch", "state"),
+    "conv": ("batch", None, "state"),
+}
+
+# Dim-assignment priority for shape-aware resolution: contracting/model dims
+# claim their axes first; fallbacks (kv_seq) only take what remains.
+_PRIORITY = {
+    "vocab": 0, "heads": 0, "kv_heads": 0, "mlp": 0, "experts": 0, "state": 0,
+    "embed": 1, "batch": 1, "seq": 2, "kv_seq": 3,
+}
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            keys.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            keys.append(str(entry.name))
+    return keys
+
+
+def _leaf_name(path) -> str:
+    keys = _path_keys(path)
+    return keys[-1] if keys else ""
+
+
+def param_logical_axes(params: Any) -> Any:
+    """Pytree of logical-axis tuples matching ``params``."""
+
+    def infer(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        in_moe = "moe" in keys and "dense" not in keys
+        table = _MOE_TABLE if in_moe else _PARAM_TABLE
+        for extra in (0, 1):  # 0 = unstacked, 1 = one leading scan axis
+            key = (name, leaf.ndim - extra)
+            if key in table:
+                return (None,) * extra + table[key]
+        return (None,) * leaf.ndim  # norms, scalars, small LoRA bits: replicate
+
+    return jax.tree_util.tree_map_with_path(infer, params)
+
+
+def cache_logical_axes(caches: Any) -> Any:
+    def infer(path, leaf):
+        name = _leaf_name(path)
+        # NamedTuple fields (LayerCache) appear as .name via GetAttrKey.
+        base = _CACHE_TABLE.get(name)
+        if base is None:
+            return (None,) * leaf.ndim
+        extra = leaf.ndim - len(base)
+        return (None,) * max(extra, 0) + base
+
+    return jax.tree_util.tree_map_with_path(infer, caches)
+
+
+def divisible_sharding(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> NamedSharding:
+    """NamedSharding with any non-divisible dim degraded to replicated."""
+    fixed = []
+    for dim, axes in enumerate(spec):
+        if axes is None or dim >= len(shape):
+            fixed.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ways = 1
+        for a in ax_tuple:
+            ways *= mesh.shape[a]
+        fixed.append(axes if ways and shape[dim] % ways == 0 else None)
+    return NamedSharding(mesh, P(*fixed))
+
+
+def _is_logical(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(
+    logical_tree: Any,
+    mesh: Mesh,
+    rules: LogicalAxisRules = DEFAULT_RULES,
+    *,
+    abstract_tree: Any = None,
+) -> Any:
+    """Resolve logical axes to NamedShardings.
+
+    When ``abstract_tree`` (matching ShapeDtypeStructs) is given, any dim
+    whose size is not divisible by its assigned mesh axes degrades to
+    replicated — e.g. 40 query heads cannot split 16-way TP, so that dim
+    stays unsharded rather than failing the lower (the dry-run records the
+    resulting memory cost; fixing the head/mesh mismatch is a §Perf lever).
+    """
+
+    def resolve(logical, leaf=None):
+        if leaf is None:
+            return NamedSharding(mesh, rules.physical(logical, mesh))
+        # Shape-aware resolution: dims claim axes in priority order and an
+        # axis skipped for divisibility stays available for later dims
+        # (e.g. kv_heads=8 cannot take model=16, so kv_seq gets it).
+        table = dict(rules.rules)
+        available = set(mesh.axis_names)
+        assign: list = [None] * len(logical)
+        order = sorted(
+            (i for i in range(len(logical)) if logical[i] is not None),
+            key=lambda i: _PRIORITY.get(logical[i], 4),
+        )
+        for i in order:
+            mapped = table.get(logical[i])
+            if mapped is None:
+                continue
+            cands = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+            picked: list[str] = []
+            ways = 1
+            for c in cands:
+                if c in available and leaf.shape[i] % (ways * mesh.shape[c]) == 0:
+                    picked.append(c)
+                    ways *= mesh.shape[c]
+            if picked:
+                available.difference_update(picked)
+                assign[i] = picked[0] if len(picked) == 1 else tuple(picked)
+        return NamedSharding(mesh, P(*assign))
+
+    if abstract_tree is None:
+        return jax.tree.map(resolve, logical_tree, is_leaf=_is_logical)
+    return jax.tree.map(
+        lambda logical, leaf: resolve(logical, leaf),
+        logical_tree,
+        abstract_tree,
+        is_leaf=_is_logical,
+    )

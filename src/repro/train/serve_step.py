@@ -1,0 +1,80 @@
+"""Sharded serving steps: prefill (build caches) and decode (one token).
+
+The decode step is the latency path: caches shard batch over the data axes
+and heads/state over model; the token inputs are tiny and replicate-safe.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api as M
+from repro.models.sharding_ctx import activation_sharding_scope
+from repro.runtime.sharding import DEFAULT_RULES, batch_axes
+from repro.train import partition
+from repro.train.train_step import batch_shardings, param_axes_for
+
+__all__ = ["build_prefill_step", "build_decode_step"]
+
+
+def build_prefill_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    mesh: Mesh | None = None,
+    rules=DEFAULT_RULES,
+) -> Callable:
+    def step(params, batch):
+        with activation_sharding_scope(mesh, rules):
+            return M.serve_prefill(cfg, params, batch, cache_capacity=shape.seq_len)
+
+    if mesh is None:
+        return jax.jit(step)
+    p_abs, p_logical = param_axes_for(cfg)
+    p_shard = partition.tree_shardings(p_logical, mesh, rules, abstract_tree=p_abs)
+    specs = M.input_specs(cfg, shape)
+    b_shard = batch_shardings(specs, mesh)
+    caches_abs = M.abstract_caches(cfg, shape)
+    c_shard = partition.tree_shardings(
+        partition.cache_logical_axes(caches_abs), mesh, rules, abstract_tree=caches_abs
+    )
+    dp = batch_axes(mesh)
+    logits_shard = partition.divisible_sharding(
+        mesh, P(dp, "model"), (shape.global_batch, cfg.vocab)
+    )
+    return jax.jit(step, in_shardings=(p_shard, b_shard), out_shardings=(logits_shard, c_shard))
+
+
+def build_decode_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    mesh: Mesh | None = None,
+    rules=DEFAULT_RULES,
+) -> Callable:
+    def step(params, token, pos, caches):
+        with activation_sharding_scope(mesh, rules):
+            return M.serve_decode(cfg, params, token, pos, caches)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(3,))
+    p_abs, p_logical = param_axes_for(cfg)
+    p_shard = partition.tree_shardings(p_logical, mesh, rules, abstract_tree=p_abs)
+    caches_abs = M.abstract_caches(cfg, shape)
+    c_shard = partition.tree_shardings(
+        partition.cache_logical_axes(caches_abs), mesh, rules, abstract_tree=caches_abs
+    )
+    dp = batch_axes(mesh)
+    tok_shard = partition.divisible_sharding(mesh, P(dp), (shape.global_batch,))
+    logits_shard = partition.divisible_sharding(
+        mesh, P(dp, "model"), (shape.global_batch, cfg.vocab)
+    )
+    return jax.jit(
+        step,
+        in_shardings=(p_shard, tok_shard, tok_shard, c_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(3,),
+    )

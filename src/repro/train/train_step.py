@@ -1,0 +1,205 @@
+"""Sharded training step: loss -> microbatched grads -> AdamW.
+
+Distribution contract: params/optimizer state sharded by
+``train.partition`` (FSDP over data, TP/EP over model); batch sharded over
+the data axes; gradient accumulation over microbatches via ``lax.scan``
+(activation memory / n_micro); remat policy per arch; optional int8
+gradient-compression collective for the data-parallel all-reduce
+(``runtime.compression``) through the manual shard_map path.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import api as M
+from repro.models.sharding_ctx import activation_sharding_scope
+from repro.runtime.sharding import DEFAULT_RULES, batch_axes
+from repro.train import partition
+from repro.train.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+
+__all__ = ["TrainStepConfig", "softmax_xent", "build_train_step", "batch_shardings"]
+
+_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    n_microbatches: int = 1
+    remat: str = "none"             # none | full | dots
+    moe_aux_weight: float = 0.01
+    z_loss_weight: float = 1e-4
+    accum_dtype: str = "float32"    # gradient-accumulation dtype (bf16 halves
+                                    # grad HBM for the 480B cells)
+    loss_chunk: int = 0             # >0: chunked cross-entropy over sequence
+                                    # chunks of this size — the (B,S,V) f32
+                                    # logits tensor is never materialized
+                                    # (decisive for 256k-vocab train cells)
+    optimizer: AdamWConfig = AdamWConfig()
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy; logits (B,S,V) f32, labels (B,S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold), jnp.mean(jnp.square(logz))
+
+
+def _chunked_xent(cfg, tcfg, params, hidden, labels):
+    """Cross entropy + z-loss over sequence chunks: the head GEMM and the
+    f32 logits exist only one chunk at a time (forward AND backward — the
+    scan re-runs the chunk head in its own backward)."""
+    b, s, d = hidden.shape
+    c = min(tcfg.loss_chunk, s)
+    while s % c:
+        c -= 1  # largest divisor <= requested chunk
+    n_chunks = s // c
+    h_chunks = jnp.moveaxis(hidden.reshape(b, n_chunks, c, d), 1, 0)
+    y_chunks = jnp.moveaxis(labels.reshape(b, n_chunks, c), 1, 0)
+
+    def body(carry, sl):
+        xent_sum, z_sum = carry
+        h, y = sl
+        logits = M.apply_head(cfg, params, h)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return (xent_sum + jnp.sum(logz - gold), z_sum + jnp.sum(jnp.square(logz))), None
+
+    (xent_sum, z_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (h_chunks, y_chunks)
+    )
+    denom = b * s
+    return xent_sum / denom, z_sum / denom
+
+
+def _loss_fn(cfg: ModelConfig, tcfg: TrainStepConfig, params, batch, remat_policy):
+    if tcfg.loss_chunk:
+        hidden, aux = M.train_hidden(cfg, params, batch, remat_policy=remat_policy)
+        if "vision_embeds" in batch:
+            hidden = hidden[:, batch["vision_embeds"].shape[1] :]
+        xent, z = _chunked_xent(cfg, tcfg, params, hidden, batch["labels"])
+    else:
+        logits, aux = M.train_logits(cfg, params, batch, remat_policy=remat_policy)
+        if "vision_embeds" in batch:
+            # Loss on the text positions only; the stub patches carry no labels.
+            logits = logits[:, batch["vision_embeds"].shape[1] :]
+        xent, z = softmax_xent(logits, batch["labels"])
+    loss = xent + tcfg.moe_aux_weight * aux + tcfg.z_loss_weight * z
+    return loss, {"xent": xent, "moe_aux": aux}
+
+
+def batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    """Batch dim over the data axes; positions (3,B,S) has batch second.
+    Non-divisible batch dims (e.g. long_500k's batch=1) replicate."""
+    dp = batch_axes(mesh)
+
+    def shard(name, spec):
+        if name == "positions" and len(spec.shape) == 3 and spec.shape[0] == 3:
+            want = P(None, dp, None)
+        else:
+            want = P(*([dp] + [None] * (len(spec.shape) - 1)))
+        return partition.divisible_sharding(mesh, want, spec.shape)
+
+    return {k: shard(k, v) for k, v in specs.items()}
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    *,
+    tcfg: TrainStepConfig = TrainStepConfig(),
+    mesh: Mesh | None = None,
+    rules=DEFAULT_RULES,
+    donate: bool = True,
+) -> Callable:
+    """Returns ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``, jitted (and sharded when ``mesh`` is given)."""
+    remat_policy = _POLICIES[tcfg.remat]
+
+    def grads_of(params, batch):
+        if tcfg.n_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: _loss_fn(cfg, tcfg, p, batch, remat_policy), has_aux=True
+            )(params)
+            return loss, metrics, grads
+
+        n = tcfg.n_microbatches
+
+        def micro_slices(x):
+            b = x.shape[0]
+            if x.ndim >= 2 and x.shape[0] == 3:  # vlm positions (3, B, S)
+                return x.reshape(3, n, x.shape[1] // n, *x.shape[2:]).swapaxes(0, 1)
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        micro = jax.tree.map(micro_slices, batch)
+
+        def body(carry, mb):
+            loss_sum, grads_sum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: _loss_fn(cfg, tcfg, p, mb, remat_policy), has_aux=True
+            )(params)
+            # Accumulate in the accumulator's dtype so the scan carry stays
+            # stable (fp32 leaves keep fp32 even when accum_dtype=bf16).
+            grads_sum = jax.tree.map(lambda s, g: s + g.astype(s.dtype), grads_sum, grads)
+            return (loss_sum + loss, grads_sum), metrics
+
+        accum_dt = jnp.bfloat16 if tcfg.accum_dtype == "bfloat16" else jnp.float32
+
+        def zero_like(p):
+            dt = accum_dt if p.dtype == jnp.bfloat16 else jnp.promote_types(p.dtype, jnp.float32)
+            return jnp.zeros(p.shape, dt)
+
+        zero_grads = jax.tree.map(zero_like, params)
+        (loss_sum, grads), metrics = jax.lax.scan(body, (0.0, zero_grads), micro)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / n, last_metrics, grads
+
+    def step(params, opt_state: OptState, batch):
+        with activation_sharding_scope(mesh, rules):
+            loss, metrics, grads = grads_of(params, batch)
+            new_params, new_opt, opt_metrics = adamw_update(
+                tcfg.optimizer, grads, opt_state, params
+            )
+        return new_params, new_opt, {"loss": loss, **metrics, **opt_metrics}
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    p_abs, p_logical = param_axes_for(cfg)
+    p_shard = partition.tree_shardings(p_logical, mesh, rules, abstract_tree=p_abs)
+    opt_shard = OptState(m=p_shard, v=p_shard, count=NamedSharding(mesh, P()))
+    metrics_shard = None  # let GSPMD pick for scalars
+    return jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, None),
+        out_shardings=(p_shard, opt_shard, metrics_shard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+@functools.lru_cache(maxsize=32)
+def param_axes_for(cfg: ModelConfig):
+    """(abstract params, logical axes) — cached per config."""
+    params_abs = M.abstract_params(cfg)
+    return params_abs, partition.param_logical_axes(params_abs)
+
+
+def init_train_state(
+    cfg: ModelConfig,
+    tcfg: TrainStepConfig,
+    key: jax.Array,
+    *,
+    max_positions: int = 4096,
+):
+    params = M.init_model(cfg, key, max_positions=max_positions)
+    return params, adamw_init(tcfg.optimizer, params)

@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — unit/smoke tests
+must see the real single-CPU device; only launch/dryrun.py forces the
+512-device placeholder topology (in a subprocess)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.io import synth
+
+
+@pytest.fixture(scope="session")
+def cohort():
+    return synth.make_cohort(
+        n_samples=400,
+        n_markers=600,
+        n_traits=12,
+        n_causal=8,
+        effect_size=0.6,
+        missing_rate=0.02,
+        seed=7,
+    )
+
+
+@pytest.fixture(scope="session")
+def cohort_files(cohort, tmp_path_factory):
+    stem = str(tmp_path_factory.mktemp("cohort") / "toy")
+    return synth.write_cohort_files(cohort, stem)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

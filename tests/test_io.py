@@ -1,0 +1,103 @@
+"""Genotype/phenotype IO: round trips, alignment, malformed input."""
+import numpy as np
+import pytest
+
+from repro.io import bgen, open_genotypes, pheno, plink
+
+
+def test_plink_roundtrip(cohort, cohort_files):
+    pb = plink.PlinkBed(cohort_files["bed"])
+    assert pb.n_samples == len(cohort.sample_ids)
+    assert pb.n_markers == len(cohort.marker_ids)
+    got = pb.read_dosages(0, pb.n_markers)
+    np.testing.assert_array_equal(got, cohort.dosages)
+    mid = pb.read_dosages(10, 20)
+    np.testing.assert_array_equal(mid, cohort.dosages[10:20])
+
+
+def test_plink_packed_path(cohort, cohort_files):
+    pb = plink.PlinkBed(cohort_files["bed"])
+    packed = pb.read_packed(5, 17)
+    np.testing.assert_array_equal(
+        plink.decode_packed(packed, pb.n_samples), cohort.dosages[5:17]
+    )
+
+
+def test_plink_bad_magic(tmp_path):
+    p = tmp_path / "bad.bed"
+    p.write_bytes(b"\x00\x00\x00")
+    (tmp_path / "bad.bim").write_text("1\trs1\t0\t1\tA\tG\n")
+    (tmp_path / "bad.fam").write_text("s1 s1 0 0 0 -9\n")
+    with pytest.raises(ValueError, match="magic"):
+        plink.PlinkBed(str(p))
+
+
+def test_plink_truncated(tmp_path, cohort):
+    stem = str(tmp_path / "trunc")
+    plink.write_plink(stem, cohort.dosages)
+    with open(stem + ".bed", "r+b") as f:
+        f.truncate(100)
+    with pytest.raises(ValueError, match="size"):
+        plink.PlinkBed(stem + ".bed")
+
+
+def test_bgen_roundtrip(cohort, cohort_files):
+    bg = bgen.BgenFile(cohort_files["bgen"])
+    assert bg.n_samples == len(cohort.sample_ids)
+    assert bg.sample_ids == cohort.sample_ids
+    got = bg.read_dosages(0, bg.n_markers)
+    miss = cohort.dosages == -9
+    assert (got[miss] == -9).all()
+    np.testing.assert_allclose(got[~miss], cohort.dosages[~miss], atol=1e-2)
+
+
+def test_bgen_16bit_and_uncompressed(tmp_path, cohort):
+    for bits, compress in [(16, True), (8, False)]:
+        path = str(tmp_path / f"b{bits}{compress}.bgen")
+        bgen.write_bgen(path, cohort.dosages[:50], bits=bits, compress=compress)
+        bg = bgen.BgenFile(path)
+        got = bg.read_dosages(0, 50)
+        miss = cohort.dosages[:50] == -9
+        np.testing.assert_allclose(got[~miss], cohort.dosages[:50][~miss], atol=1e-3)
+
+
+def test_open_genotypes_dispatch(cohort_files, tmp_path, cohort):
+    assert isinstance(open_genotypes(cohort_files["bed"]), plink.PlinkBed)
+    assert isinstance(open_genotypes(cohort_files["bgen"]), bgen.BgenFile)
+    npy = str(tmp_path / "g.npy")
+    np.save(npy, cohort.dosages)
+    src = open_genotypes(npy)
+    np.testing.assert_array_equal(src.read_dosages(3, 9), cohort.dosages[3:9])
+    with pytest.raises(ValueError):
+        open_genotypes("genotypes.vcf")
+
+
+def test_table_alignment_shuffled_subset(cohort, cohort_files):
+    pt = pheno.read_table(cohort_files["pheno"])
+    ct = pheno.read_table(cohort_files["cov"])
+    rng = np.random.default_rng(1)
+    idx = rng.permutation(len(pt.sample_ids))[:300]
+    pt2 = pheno.PhenotypeTable(
+        [pt.sample_ids[i] for i in idx], pt.names, pt.values[idx]
+    )
+    y, c, keep = pheno.align_tables(cohort.sample_ids, pt2, ct)
+    assert keep.sum() == 300
+    kept = [s for s, k in zip(cohort.sample_ids, keep) if k]
+    ref = np.stack([pt.values[pt.sample_ids.index(s)] for s in kept])
+    np.testing.assert_allclose(y, ref, atol=1e-5)
+
+
+def test_table_missing_tokens(tmp_path):
+    p = tmp_path / "t.tsv"
+    p.write_text("FID\tIID\ttrait\na\ta\t1.5\nb\tb\tNA\nc\tc\t-9\n")
+    t = pheno.read_table(str(p))
+    assert np.isnan(t.values[1, 0]) and np.isnan(t.values[2, 0])
+    assert t.values[0, 0] == pytest.approx(1.5)
+
+
+def test_table_csv_sniff(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("id,x,y\ns1,1.0,2.0\ns2,3.0,4.0\n")
+    t = pheno.read_table(str(p))
+    assert t.names == ["x", "y"]
+    assert t.sample_ids == ["s1", "s2"]

@@ -1,0 +1,108 @@
+"""Pallas kernel validation: interpret-mode sweep over shapes/dtypes vs the
+pure-jnp oracle (``ref.py``), per the assignment's per-kernel contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import tstat as TS
+from repro.kernels.gwas_dot import ops, ref
+
+
+def _mk(m, n, seed=0, missing=0.02):
+    rng = np.random.default_rng(seed)
+    codes = rng.choice(
+        [0, 1, 2, 3], p=[0.3, missing, 0.4 - missing, 0.3], size=(m, n)
+    ).astype(np.uint8)
+    return codes, rng
+
+
+@pytest.mark.parametrize(
+    "m,n,p,bm,bn,bp",
+    [
+        (64, 256, 32, 32, 128, 16),     # aligned
+        (70, 1000, 40, 32, 128, 16),    # all dims ragged
+        (8, 128, 8, 8, 128, 8),         # single tile
+        (256, 512, 128, 128, 256, 64),  # production-like ratios
+        (33, 131, 17, 16, 64, 16),      # prime-ish everything
+    ],
+)
+def test_gwas_dot_shape_sweep(m, n, p, bm, bn, bp):
+    codes, rng = _mk(m, n)
+    mean, inv_std, _ = ops.marker_stats_from_codes(codes)
+    y = rng.normal(size=(n, p)).astype(np.float32)
+    r_ref, t_ref = ref.gwas_dot_ref(
+        jnp.asarray(codes.astype(np.int32)), jnp.asarray(mean), jnp.asarray(inv_std),
+        jnp.asarray(y), n_samples=n, dof=n - 2,
+    )
+    packed = ops.pack_tiled(codes, bn)
+    r, t = ops.gwas_dot(
+        packed, mean, inv_std, y,
+        n_samples=n, dof=n - 2, block_m=bm, block_n=bn, block_p=bp,
+    )
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), atol=2e-6)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(t_ref), atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-6), (jnp.bfloat16, 5e-3)])
+def test_gwas_dot_dtype_sweep(dtype, atol):
+    codes, rng = _mk(48, 512, seed=3)
+    mean, inv_std, _ = ops.marker_stats_from_codes(codes)
+    y = rng.normal(size=(512, 24)).astype(np.float32)
+    r_ref, _ = ref.gwas_dot_ref(
+        jnp.asarray(codes.astype(np.int32)), jnp.asarray(mean), jnp.asarray(inv_std),
+        jnp.asarray(y), n_samples=512, dof=510,
+    )
+    packed = ops.pack_tiled(codes, 128)
+    r, _ = ops.gwas_dot(
+        packed, mean, inv_std, y,
+        n_samples=512, dof=510, block_m=16, block_n=128, block_p=8, input_dtype=dtype,
+    )
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref), atol=atol)
+
+
+def test_gwas_dot_all_missing_and_monomorphic():
+    codes = np.zeros((8, 128), np.uint8)
+    codes[0, :] = 1          # all missing
+    codes[1, :] = 3          # monomorphic (all dosage 0)
+    codes[2, ::2] = 2        # polymorphic het pattern
+    mean, inv_std, valid = ops.marker_stats_from_codes(codes)
+    assert not valid[0] and not valid[1] and valid[2]
+    y = np.random.default_rng(0).normal(size=(128, 8)).astype(np.float32)
+    packed = ops.pack_tiled(codes, 128)
+    r, t = ops.gwas_dot(packed, mean, inv_std, y, n_samples=128, dof=126,
+                        block_m=8, block_n=128, block_p=8)
+    assert np.all(np.asarray(r)[0] == 0.0) and np.all(np.asarray(r)[1] == 0.0)
+    assert np.all(np.isfinite(np.asarray(t)))
+
+
+def test_pack_tiled_roundtrip_through_plink_layout():
+    codes, _ = _mk(20, 333, seed=9)
+    from repro.io.plink import pack_dosages
+
+    dosage = np.where(codes == 1, -9, 2 - codes.astype(np.int32) + (codes.astype(np.int32) >> 1)).astype(np.int8)
+    plink_packed = pack_dosages(dosage)
+    recodes = ops.unpack_plink_to_codes(plink_packed, 333)
+    np.testing.assert_array_equal(recodes, codes)
+    tiled = ops.repack_plink_tiled(plink_packed, 333, 128)
+    np.testing.assert_array_equal(tiled, ops.pack_tiled(codes, 128))
+
+
+def test_marker_stats_match_float_path():
+    codes, _ = _mk(31, 517, seed=5)
+    from repro.core.association import standardize_genotype_batch
+
+    c32 = codes.astype(np.int32)
+    dosage = np.where(c32 == 1, -9, 2 - c32 + (c32 >> 1)).astype(np.float32)
+    _, ms = standardize_genotype_batch(jnp.asarray(dosage))
+    mean, inv_std, valid = ops.marker_stats_from_codes(codes)
+    np.testing.assert_allclose(mean, np.asarray(ms.mean), atol=1e-5)
+    np.testing.assert_allclose(inv_std, np.asarray(ms.inv_std), atol=1e-4)
+
+
+@pytest.mark.parametrize("m,p", [(64, 64), (100, 37), (16, 256)])
+def test_tstat_kernel(m, p, rng):
+    r = (rng.random((m, p)).astype(np.float32) - 0.5) * 1.8
+    out = TS.tstat(jnp.asarray(r), 998, block_m=32, block_p=32)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(TS.tstat_ref(jnp.asarray(r), 998)), atol=1e-4
+    )

@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import association as A
+from repro.core import stats as S
+from repro.core.residualize import covariate_basis, residualize_and_standardize
+from repro.io.plink import decode_packed, pack_dosages
+from repro.kernels.gwas_dot import ops
+
+_dosages = hnp.arrays(
+    np.int8,
+    st.tuples(st.integers(1, 12), st.integers(4, 64)),
+    elements=st.sampled_from([-9, 0, 1, 2]),
+)
+
+
+@given(_dosages)
+@settings(max_examples=40, deadline=None)
+def test_plink_pack_roundtrip(d):
+    np.testing.assert_array_equal(decode_packed(pack_dosages(d), d.shape[1]), d)
+
+
+@given(
+    hnp.arrays(np.uint8, st.tuples(st.integers(1, 8), st.integers(4, 96)),
+               elements=st.integers(0, 3)),
+    st.sampled_from([4, 8, 16]),
+)
+@settings(max_examples=40, deadline=None)
+def test_pack_tiled_padding_invariant(codes, quarter_block):
+    bn = quarter_block * 4
+    packed = ops.pack_tiled(codes, bn)
+    n_pad = packed.shape[1] * 4
+    assert n_pad % bn == 0
+    # unpack by construction: slot s of byte b in tile t = sample t*bn + s*bn/4 + b
+    m = codes.shape[0]
+    tiles = packed.reshape(m, -1, bn // 4)
+    for s in range(4):
+        part = (tiles >> (2 * s)) & 0b11
+        for t in range(tiles.shape[1]):
+            for b_ in range(bn // 4):
+                sample = t * bn + s * (bn // 4) + b_
+                if sample < codes.shape[1]:
+                    assert part[0, t, b_] == codes[0, sample]
+    # padded samples carry the missing code
+    flat = np.concatenate([((tiles >> (2 * s)) & 3) for s in range(4)], axis=-1)
+
+
+@given(st.integers(10, 500), st.floats(0.1, 100.0))
+@settings(max_examples=60, deadline=None)
+def test_pvalue_in_unit_range(n, t):
+    nlp = float(S.neglog10_p_from_t(jnp.float32(t), float(n)))
+    assert nlp >= 0.0 and np.isfinite(nlp)
+
+
+@given(
+    hnp.arrays(np.float32, st.tuples(st.integers(20, 60), st.integers(2, 6)),
+               elements=st.floats(-3, 3, width=32)),
+    st.floats(0.1, 10.0),
+    st.floats(-5.0, 5.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_association_scale_shift_invariance(y, scale, shift):
+    """r/t are invariant to affine transforms of each phenotype.
+
+    Columns whose spread is at float32 cancellation scale relative to the
+    shift are excluded: invariance cannot hold numerically there (hypothesis
+    found the boundary — e.g. std 1e-4 with shift 5 leaves ~2 significant
+    digits after mean subtraction)."""
+    n = y.shape[0]
+    rng = np.random.default_rng(0)
+    g = rng.integers(0, 3, size=(4, n)).astype(np.float32)
+    if np.any(g.std(axis=1) < 1e-6):
+        g[:, 0] += 1  # ensure polymorphic
+    qb = covariate_basis(None, n)
+    p1 = residualize_and_standardize(jnp.asarray(y), qb)
+    p2 = residualize_and_standardize(jnp.asarray(y * scale + shift), qb)
+    r1, _ = A.assoc_batch(jnp.asarray(g), p1.y, n_samples=n, n_covariates=0)
+    r2, _ = A.assoc_batch(jnp.asarray(g), p2.y, n_samples=n, n_covariates=0)
+    well_scaled = y.std(axis=0) * abs(scale) > 1e-3 * (1.0 + abs(shift) + np.abs(y).max())
+    valid = np.asarray(p1.valid) & np.asarray(p2.valid) & well_scaled
+    np.testing.assert_allclose(
+        np.asarray(r1.r)[:, valid], np.asarray(r2.r)[:, valid], atol=5e-4
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_association_sample_permutation_equivariance(seed):
+    """Permuting samples consistently in G and Y leaves statistics unchanged."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    g = rng.integers(0, 3, size=(6, n)).astype(np.float32)
+    y = rng.normal(size=(n, 3)).astype(np.float32)
+    perm = rng.permutation(n)
+    qb = covariate_basis(None, n)
+    p1 = residualize_and_standardize(jnp.asarray(y), qb)
+    p2 = residualize_and_standardize(jnp.asarray(y[perm]), qb)
+    r1, _ = A.assoc_batch(jnp.asarray(g), p1.y, n_samples=n, n_covariates=0)
+    r2, _ = A.assoc_batch(jnp.asarray(g[:, perm]), p2.y, n_samples=n, n_covariates=0)
+    np.testing.assert_allclose(np.asarray(r1.r), np.asarray(r2.r), atol=2e-4)
+
+
+@given(hnp.arrays(np.float32, st.integers(2, 200),
+                  elements=st.floats(0, 50, width=32)))
+@settings(max_examples=30, deadline=None)
+def test_bh_qvalues_monotone_and_bounded(nlp):
+    nlq = np.asarray(S.bh_qvalues(jnp.asarray(nlp)))
+    assert np.all(nlq >= -1e-6)
+    assert np.all(nlq <= nlp + 1e-4)  # q >= p always
+    # order-preserving: stronger p -> stronger q
+    order_p = np.argsort(-nlp, kind="stable")
+    q_sorted = nlq[order_p]
+    assert np.all(np.diff(q_sorted) <= 1e-5)
+
+
+@given(st.integers(1, 6), st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_correlation_bounded(m_markers, p_traits):
+    rng = np.random.default_rng(m_markers * 31 + p_traits)
+    n = 48
+    g = rng.integers(0, 3, size=(m_markers, n)).astype(np.float32)
+    y = rng.normal(size=(n, p_traits)).astype(np.float32)
+    qb = covariate_basis(None, n)
+    panel = residualize_and_standardize(jnp.asarray(y), qb)
+    res, _ = A.assoc_batch(jnp.asarray(g), panel.y, n_samples=n, n_covariates=0)
+    assert np.all(np.abs(np.asarray(res.r)) <= 1.0 + 1e-6)

@@ -1,0 +1,133 @@
+"""Runtime substrate: prefetcher ordering/error propagation, work-stealing
+queue, checkpoint atomicity/retention, kinship exclusion."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import kinship as K
+from repro.runtime.checkpoint import ScanCheckpoint, TrainCheckpoint, config_fingerprint
+from repro.runtime.prefetch import Prefetcher
+from repro.runtime.workqueue import WorkQueue
+
+
+def test_prefetcher_preserves_order():
+    def slow_square(i):
+        time.sleep(0.002 * (7 - i % 7))  # deliberately out-of-order completion
+        return i * i
+
+    out = list(Prefetcher(range(40), slow_square, depth=4, num_workers=4))
+    assert out == [i * i for i in range(40)]
+
+
+def test_prefetcher_propagates_errors():
+    def maybe_fail(i):
+        if i == 5:
+            raise RuntimeError("decode failed")
+        return i
+
+    it = iter(Prefetcher(range(10), maybe_fail, depth=2, num_workers=2))
+    got = [next(it) for _ in range(5)]
+    assert got == list(range(5))
+    with pytest.raises(RuntimeError, match="decode failed"):
+        next(it)
+
+
+def test_prefetcher_window_bound():
+    in_flight = []
+    lock = threading.Lock()
+    high_water = [0]
+
+    def track(i):
+        with lock:
+            in_flight.append(i)
+            high_water[0] = max(high_water[0], len(in_flight))
+        time.sleep(0.002)
+        with lock:
+            in_flight.remove(i)
+        return i
+
+    consumed = []
+    for x in Prefetcher(range(30), track, depth=3, num_workers=3):
+        consumed.append(x)
+        time.sleep(0.004)  # slow consumer: workers must not run ahead > depth
+    assert consumed == list(range(30))
+    assert high_water[0] <= 4  # depth + the one being yielded
+
+
+def test_workqueue_steals_from_straggler():
+    q = WorkQueue(64, lease_size=32)
+    # fast worker drains its lease; slow worker holds a big lease
+    a_first = q.claim("slow")
+    assert a_first is not None
+    done = []
+    while True:
+        idx = q.claim("fast")
+        if idx is None:
+            break
+        q.complete("fast", idx)
+        done.append(idx)
+    stats = q.stats()
+    assert stats["fast"].stolen_by > 0
+    assert stats["slow"].stolen_from > 0
+    # fast drains everything except slow's in-flight item and the one
+    # unstealable last lease entry
+    assert len(done) >= 62
+    assert q.remaining() <= 2
+
+
+def test_workqueue_skip_completed():
+    q = WorkQueue(10, lease_size=4, skip={0, 1, 2})
+    seen = []
+    while (i := q.claim("w")) is not None:
+        seen.append(i)
+        q.complete("w", i)
+    assert sorted(seen) == list(range(3, 10))
+
+
+def test_scan_checkpoint_atomic_and_idempotent(tmp_path):
+    fp = config_fingerprint({"a": 1})
+    ck = ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=4)
+    ck.commit_batch(0, {"x": np.arange(3)})
+    ck.commit_batch(2, {"x": np.arange(5)})
+    assert ck.pending_batches() == [1, 3]
+    # re-open: state survives
+    ck2 = ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=4)
+    assert ck2.pending_batches() == [1, 3]
+    np.testing.assert_array_equal(ck2.load_batch(2)["x"], np.arange(5))
+    # double commit is fine (work stealing can duplicate)
+    ck2.commit_batch(2, {"x": np.arange(5)})
+    assert ck2.pending_batches() == [1, 3]
+    with pytest.raises(ValueError, match="different scan"):
+        ScanCheckpoint(str(tmp_path), fingerprint="deadbeef", n_batches=4)
+    with pytest.raises(ValueError, match="decomposition"):
+        ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=5)
+
+
+def test_train_checkpoint_retention_and_restore(tmp_path):
+    ck = TrainCheckpoint(str(tmp_path), keep_last=2)
+    for step in [10, 20, 30]:
+        ck.save(step, {"w": np.full(4, step)})
+    assert ck.latest_step() == 30
+    step, state = ck.restore()
+    assert step == 30 and state["w"][0] == 30
+    step, state = ck.restore(20)
+    assert state["w"][0] == 20
+    import os
+
+    assert not os.path.isdir(os.path.join(str(tmp_path), "step_00000010"))
+
+
+def test_kinship_exclusion_detects_planted_relatives():
+    from repro.io import synth
+
+    co = synth.make_cohort(
+        n_samples=120, n_markers=3000, n_related_pairs=3, missing_rate=0.0, seed=11
+    )
+    keep, _, phi = K.exclude_related(co.dosages.T, co.sample_ids)
+    for a, b in co.related_pairs:
+        assert phi[a, b] > 0.15
+        assert not (keep[a] and keep[b])
+    # unrelated majority survives
+    assert keep.sum() >= 120 - 3 - 6  # small slack for estimator noise

@@ -1,0 +1,81 @@
+"""Statistical epilogue vs scipy oracles across the full (dof, t) envelope."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats as sps
+
+from repro.core import stats as S
+
+
+@pytest.mark.parametrize("nu", [2, 5, 18, 100, 1000, 4095, 4097, 21000, 499000, 2000000])
+def test_neglog10_p_vs_scipy(nu):
+    worst = 0.0
+    for t in [0.0, 0.3, 1.0, 2.0, 2.44, 2.46, 3.2, 5.0, 10.0, 12.1, 30.0, 100.0]:
+        ours = float(S.neglog10_p_from_t(jnp.float32(t), float(nu)))
+        if t == 0.0:
+            assert ours == 0.0
+            continue
+        ref = -(sps.t.logsf(t, nu) + math.log(2)) / math.log(10)
+        if math.isinf(ref):
+            assert ours > 300  # beyond float64, ours keeps going
+            continue
+        worst = max(worst, abs(ours - ref) / max(abs(ref), 1e-2))
+    assert worst < 5e-3, worst
+
+
+def test_neglog10_p_deep_tail_monotone():
+    ts = jnp.asarray(np.linspace(0, 2000, 4001), jnp.float32)
+    nlp = np.asarray(S.neglog10_p_from_t(ts, 21000.0))
+    assert np.all(np.isfinite(nlp))
+    assert np.all(np.diff(nlp) >= -1e-3)  # monotone in |t|
+    assert nlp[-1] > 10_000  # p ~ 1e-10000 territory without overflow
+
+
+@pytest.mark.parametrize("k", [1, 2, 10, 100, 2048, 20480])
+def test_chi2_sf_vs_scipy(k):
+    for mult in [0.1, 0.5, 1.0, 1.5, 3.0, 10.0, 50.0]:
+        s = k * mult
+        ours = float(S.neglog10_sf_chi2(jnp.float32(s), float(k)))
+        ref = -sps.chi2.logsf(s, k) / math.log(10)
+        if math.isinf(ref) or math.isnan(ref):
+            continue
+        assert abs(ours - ref) / max(ref, 1e-2) < 6e-3, (k, s, ours, ref)
+
+
+def test_t_from_r_matches_paper_eq3():
+    r = jnp.asarray([0.0, 0.1, -0.5, 0.99], jnp.float32)
+    n = 1000
+    t = np.asarray(S.t_from_r(r, n - 2))
+    expected = np.asarray(r) * np.sqrt((n - 2) / (1 - np.asarray(r) ** 2))
+    np.testing.assert_allclose(t, expected, rtol=1e-6)
+
+
+def test_t_from_r_degenerate_clamped():
+    t = float(S.t_from_r(jnp.float32(1.0), 100))
+    assert np.isfinite(t) and t > 1e4
+
+
+def test_bh_qvalues_match_reference(rng):
+    nlp = np.abs(rng.normal(2, 3, 500)).astype(np.float32)
+    p = 10.0 ** -nlp
+
+    def bh_ref(p):
+        m = len(p)
+        order = np.argsort(p)
+        q = np.empty(m)
+        prev = 1.0
+        for i in range(m - 1, -1, -1):
+            prev = min(prev, p[order[i]] * m / (i + 1))
+            q[order[i]] = prev
+        return q
+
+    ours = 10.0 ** -np.asarray(S.bh_qvalues(jnp.asarray(nlp)))
+    np.testing.assert_allclose(ours, bh_ref(p), rtol=1e-4)
+
+
+def test_lambda_gc_calibrated_on_null(rng):
+    t = rng.standard_t(200, 100_000).astype(np.float32)
+    lam = float(S.genomic_control_lambda(jnp.asarray(t)))
+    assert 0.97 < lam < 1.03

@@ -1,0 +1,177 @@
+"""Training substrate: overfit, microbatch equivalence, optimizer math,
+checkpoint round trip, residualize/multivariate units."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import multivariate as MV
+from repro.core.residualize import covariate_basis, residualize_and_standardize
+from repro.train.data import make_batch
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.train.train_step import TrainStepConfig, build_train_step, init_train_state
+
+KEY = jax.random.PRNGKey(0)
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def test_overfit_fixed_batch():
+    cfg = get_config("deepseek-coder-33b").reduced()
+    tcfg = TrainStepConfig(optimizer=AdamWConfig(lr=1e-2, warmup_steps=1))
+    params, opt = init_train_state(cfg, tcfg, KEY, max_positions=64)
+    step = build_train_step(cfg, tcfg=tcfg)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE, 0).items()}
+    first = None
+    for _ in range(15):
+        params, opt, m = step(params, opt, batch)
+        first = first if first is not None else float(m["loss"])
+    assert float(m["loss"]) < first - 1.0
+
+
+def test_microbatch_equivalence():
+    """Same total batch through 1 vs 4 microbatches gives the same update
+    (up to accumulation rounding)."""
+    cfg = get_config("gemma-7b").reduced()
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE, 0).items()}
+    outs = {}
+    for n_micro in (1, 4):
+        tcfg = TrainStepConfig(n_microbatches=n_micro,
+                               optimizer=AdamWConfig(lr=1e-3, warmup_steps=1))
+        params, opt = init_train_state(cfg, tcfg, KEY, max_positions=64)
+        step = build_train_step(cfg, tcfg=tcfg, donate=False)
+        p2, _, m = step(params, opt, batch)
+        outs[n_micro] = (p2, float(m["loss"]))
+    d = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        outs[1][0], outs[4][0],
+    )
+    assert max(jax.tree.leaves(d)) < 2e-2
+    assert abs(outs[1][1] - outs[4][1]) < 5e-2
+
+
+def test_remat_policies_same_loss():
+    cfg = get_config("gemma2-9b").reduced()
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE, 0).items()}
+    losses = {}
+    for remat in ("none", "dots", "full"):
+        tcfg = TrainStepConfig(remat=remat)
+        params, opt = init_train_state(cfg, tcfg, KEY, max_positions=64)
+        step = build_train_step(cfg, tcfg=tcfg, donate=False)
+        _, _, m = step(params, opt, batch)
+        losses[remat] = float(m["loss"])
+    assert abs(losses["none"] - losses["full"]) < 1e-4
+    assert abs(losses["none"] - losses["dots"]) < 1e-4
+
+
+def test_adamw_against_reference():
+    cfg = AdamWConfig(lr=1e-2, beta1=0.9, beta2=0.999, eps=1e-8,
+                      weight_decay=0.0, clip_norm=1e9, warmup_steps=1, total_steps=10**9)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0], jnp.float32)}
+    grads = {"w": jnp.asarray([0.1, 0.2, -0.3], jnp.float32)}
+    state = adamw_init(cfg, params)
+    new, state, metrics = adamw_update(cfg, grads, state, params)
+    g = np.asarray([0.1, 0.2, -0.3])
+    m = 0.1 * g
+    v = 0.001 * g**2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    # warmup factor at count=1 with warmup_steps=1 -> full lr; cosine ~ 1.
+    expected = np.asarray([1.0, -2.0, 3.0]) - 1e-2 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new["w"]), expected, rtol=1e-4)
+    assert float(metrics["grad_norm"]) == pytest.approx(np.linalg.norm(g), rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110)
+    lr5 = float(cosine_schedule(cfg, jnp.asarray(5)))
+    lr10 = float(cosine_schedule(cfg, jnp.asarray(10)))
+    lr110 = float(cosine_schedule(cfg, jnp.asarray(110)))
+    assert lr5 == pytest.approx(0.5, abs=1e-6)
+    assert lr10 == pytest.approx(1.0, abs=1e-6)
+    assert lr110 < 1e-6
+
+
+def test_bf16_optimizer_state_dtype():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    tcfg = TrainStepConfig(optimizer=AdamWConfig(state_dtype="bfloat16"))
+    params, opt = init_train_state(cfg, tcfg, KEY, max_positions=64)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(opt.m))
+    step = build_train_step(cfg, tcfg=tcfg, donate=False)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE, 0).items()}
+    _, _, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_chunked_loss_matches_full():
+    """The chunked cross-entropy path (never materializing full logits) must
+    reproduce the dense loss bit-for-bit up to f32 reduction order."""
+    for arch in ("gemma-7b", "whisper-small"):
+        cfg = get_config(arch).reduced()
+        batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE, 0).items()}
+        params, opt = init_train_state(cfg, TrainStepConfig(), KEY, max_positions=64)
+        losses = {}
+        for chunk in (0, 8):
+            tcfg = TrainStepConfig(loss_chunk=chunk)
+            step = build_train_step(cfg, tcfg=tcfg, donate=False)
+            _, _, m = step(params, opt, batch)
+            losses[chunk] = float(m["loss"])
+        assert abs(losses[0] - losses[8]) < 1e-3, (arch, losses)
+
+
+def test_vocab_padding_masked_in_logits():
+    """Padded vocab slots must never win an argmax or alter the loss."""
+    from repro.models import api as M
+
+    cfg = get_config("granite-moe-1b-a400m").reduced()  # vocab 512 -> pad 512
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, vocab=500)  # force padding (500 -> 512)
+    params = M.init_model(cfg, KEY, max_positions=64)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, SHAPE, 0).items()}
+    logits, _ = M.train_logits(cfg, params, batch)
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert bool((logits[..., cfg.vocab :] < -1e30).all())
+    assert int(jnp.argmax(logits, -1).max()) < cfg.vocab
+
+
+def test_residualize_removes_covariates(rng):
+    n, q = 300, 4
+    c = rng.normal(size=(n, q)).astype(np.float32)
+    y = (c @ rng.normal(size=(q, 5)) + 0.1 * rng.normal(size=(n, 5))).astype(np.float32)
+    qb = covariate_basis(jnp.asarray(c), n)
+    panel = residualize_and_standardize(jnp.asarray(y), qb)
+    resid = np.asarray(panel.y)
+    # residuals orthogonal to covariates and mean-zero, unit variance
+    assert np.abs(resid.mean(0)).max() < 1e-4
+    assert np.abs(resid.std(0) - 1).max() < 1e-3
+    assert np.abs(c.T @ resid / n).max() < 1e-4
+
+
+def test_covariate_basis_rank_deficient(rng):
+    n = 100
+    c = rng.normal(size=(n, 2)).astype(np.float32)
+    c = np.concatenate([c, c[:, :1] * 2.0], axis=1)  # exact collinearity
+    qb = np.asarray(covariate_basis(jnp.asarray(c), n))
+    # basis columns orthonormal-or-zero; rank = 3 (intercept + 2)
+    gram = qb.T @ qb
+    rank = np.sum(np.abs(np.diag(gram)) > 0.5)
+    assert rank == 3
+
+
+def test_whitening_identity(rng):
+    n, p = 500, 6
+    y = rng.normal(size=(n, p)).astype(np.float32)
+    y[:, 3] = y[:, 0] * 0.9 + 0.1 * y[:, 3]  # correlated traits
+    qb = covariate_basis(None, n)
+    panel = residualize_and_standardize(jnp.asarray(y), qb)
+    w, eig = MV.whiten_panel(panel.y)
+    yw = np.asarray(panel.y) @ np.asarray(w)
+    corr = yw.T @ yw / n
+    keep = np.diag(corr) > 0.5
+    np.testing.assert_allclose(corr[np.ix_(keep, keep)], np.eye(keep.sum()), atol=5e-2)
+    meff = float(MV.effective_tests(eig))
+    assert 1.0 <= meff <= p
