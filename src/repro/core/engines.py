@@ -1,0 +1,363 @@
+"""Pluggable scan engines: device step construction + host batch preparation.
+
+An engine owns both halves of one batch's journey (DESIGN.md §2):
+
+    host side    ``prepare_batch``  — read from the genotype source, decode /
+                 repack / compute marker stats on a prefetch worker thread,
+                 returning a ``HostBatch`` of device-ready ndarrays
+    device side  ``build_step``     — a jit'd (optionally sharded) callable
+                 mapping those arrays + the trait panel to summary tiles
+
+``GenomeScan`` resolves engines by name through the registry and never
+branches on engine identity — new engines (e.g. an int8 dequant GEMM or a
+mixed-precision screen) plug in with ``@register_engine`` and a config
+string, touching no driver code.
+
+``build_dense_step`` / ``build_fused_step`` remain importable (also re-
+exported from ``core.screening``) for tests and external harnesses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import stats as _stats
+from repro.core.association import AssocOptions, assoc_from_standardized, standardize_genotype_batch
+from repro.runtime.compat import shard_map
+from repro.runtime.prefetch import MarkerBatch
+from repro.runtime.sharding import batch_axes, gwas_shardings
+
+__all__ = [
+    "EngineContext",
+    "HostBatch",
+    "ScanEngine",
+    "DenseEngine",
+    "FusedEngine",
+    "register_engine",
+    "get_engine",
+    "available_engines",
+    "build_dense_step",
+    "build_fused_step",
+]
+
+
+@dataclass
+class EngineContext:
+    """Everything an engine needs, assembled once per scan by the driver."""
+
+    n_samples: int                     # after relatedness exclusion
+    n_covariates: int
+    options: AssocOptions
+    mesh: Mesh | None = None
+    mode: str = "mp"
+    hit_threshold: float = 7.301
+    maf_min: float = 0.0
+    block_m: int = 256
+    block_n: int = 512
+    block_p: int = 256
+    q_basis: jax.Array | None = None
+    multivariate: bool = False
+    n_traits_eff: float = 1.0
+    whitening: jax.Array | None = None
+    keep: np.ndarray | None = None     # host-side sample mask (None: keep all)
+    excluded_samples: int = 0
+
+
+@dataclass
+class HostBatch:
+    """Host-prepared batch: positional device args for the engine's step,
+    plus any marker stats already known on the host (fused path) so sinks
+    need not pull them back from the device."""
+
+    batch: MarkerBatch
+    device_args: tuple[np.ndarray, ...]
+    host_maf: np.ndarray | None = None     # (m_batch,) observed MAF
+    host_valid: np.ndarray | None = None   # (m_batch,) bool
+
+
+class ScanEngine:
+    """Engine interface; subclasses register with ``@register_engine``."""
+
+    name: str = "?"
+
+    def validate(self, ctx: EngineContext) -> None:
+        """Raise ValueError for unsupported (engine, context) combinations."""
+
+    def build_step(self, ctx: EngineContext) -> Callable[..., dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, type[ScanEngine]] = {}
+
+
+def register_engine(name: str) -> Callable[[type[ScanEngine]], type[ScanEngine]]:
+    def deco(cls: type[ScanEngine]) -> type[ScanEngine]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_engine(name: str) -> ScanEngine:
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scan engine {name!r}; available: {available_engines()}"
+        ) from None
+    return cls()
+
+
+def available_engines() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------- steps
+
+
+def build_dense_step(
+    *,
+    n_samples: int,
+    n_covariates: int,
+    options: AssocOptions,
+    mesh: Mesh | None = None,
+    mode: str = "mp",
+    hit_threshold: float = 7.301,
+    q_basis: jax.Array | None = None,
+    multivariate: bool = False,
+    n_traits_eff: float = 1.0,
+    whitening: jax.Array | None = None,
+) -> Callable[..., dict[str, jax.Array]]:
+    """Paper-faithful dense step: float dosages in, summary tiles out."""
+    dof = options.dof(n_samples, n_covariates)
+
+    def step(g_raw: jax.Array, y_std: jax.Array) -> dict[str, jax.Array]:
+        g_std, ms = standardize_genotype_batch(g_raw)
+        if options.dof_mode == "exact":
+            from repro.core.residualize import residualize_genotypes
+
+            g_std = residualize_genotypes(g_std, q_basis)
+        res = assoc_from_standardized(
+            g_std, y_std, n_samples=n_samples, n_covariates=n_covariates, options=options
+        )
+        mask = ms.valid[:, None]
+        nlp = jnp.where(mask, res.neglog10p, 0.0)
+        out = {
+            "r": jnp.where(mask, res.r, 0.0),
+            "t": jnp.where(mask, res.t, 0.0),
+            "nlp": nlp,
+            "maf": ms.maf,
+            "valid": ms.valid,
+            "batch_best_nlp": jnp.max(nlp, axis=0),
+            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
+            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
+        }
+        if multivariate:
+            from repro.core import multivariate as mv
+
+            omni, omni_nlp = mv.omnibus_chi2(
+                out["r"], n_samples, n_traits_eff, whitening=whitening
+            )
+            out["omnibus"] = omni
+            out["omnibus_nlp"] = omni_nlp
+        return out
+
+    if mesh is None:
+        return jax.jit(step)
+
+    sh = gwas_shardings(mesh, mode=mode)
+    mv_spec = {"omnibus": sh["marker_vec"], "omnibus_nlp": sh["marker_vec"]} if multivariate else {}
+    rep = NamedSharding(mesh, P())
+    model_vec = NamedSharding(mesh, P("model"))
+    out_shardings = {
+        "r": sh["out"],
+        "t": sh["out"],
+        "nlp": sh["out"],
+        "maf": sh["marker_vec"],
+        "valid": sh["marker_vec"],
+        "batch_best_nlp": model_vec,
+        "batch_best_row": model_vec,
+        "hit_count": rep,
+        **mv_spec,
+    }
+    return jax.jit(step, in_shardings=(sh["g"], sh["y"]), out_shardings=out_shardings)
+
+
+def build_fused_step(
+    *,
+    n_samples: int,
+    n_covariates: int,
+    options: AssocOptions,
+    mesh: Mesh | None = None,
+    hit_threshold: float = 7.301,
+    block_m: int = 256,
+    block_n: int = 512,
+    block_p: int = 256,
+    interpret: bool | None = None,
+) -> Callable[..., dict[str, jax.Array]]:
+    """Beyond-paper fused step: 2-bit packed slabs in (kernel layout),
+    summary tiles out.  'mp' sharding only — the in-kernel epilogue requires
+    complete sample contractions per device (DESIGN.md §5)."""
+    from repro.kernels.gwas_dot.gwas_dot import build_gwas_dot
+
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    dof = options.dof(n_samples, n_covariates)
+    input_dtype = jnp.bfloat16 if options.precision == "bf16" else jnp.float32
+
+    def kernel_local(packed, mean2d, inv2d, y):
+        m_loc = packed.shape[0]
+        n_pad = packed.shape[1] * 4
+        p_loc = y.shape[1]
+        call = build_gwas_dot(
+            m_loc, n_pad, p_loc,
+            block_m=block_m, block_n=block_n, block_p=block_p,
+            n_samples=n_samples, dof=dof,
+            input_dtype=input_dtype, interpret=interpret,
+        )
+        return tuple(call(packed, mean2d, inv2d, y))
+
+    if mesh is not None:
+        dp = batch_axes(mesh)
+        kernel_fn = shard_map(
+            kernel_local,
+            mesh=mesh,
+            in_specs=(P(dp, None), P(dp, None), P(dp, None), P(None, "model")),
+            out_specs=(P(dp, "model"), P(dp, "model")),
+            # pallas_call out_shapes carry no vma metadata; the kernel is
+            # elementwise-independent per shard so the check is vacuous here.
+            check_vma=False,
+        )
+    else:
+        kernel_fn = kernel_local
+
+    def step(packed, mean2d, inv2d, valid, y_std):
+        p_true = y_std.shape[1]
+        pad_p = (-p_true) % block_p
+        pad_n = packed.shape[1] * 4 - y_std.shape[0]  # packed samples are tile-padded
+        if pad_p or pad_n:
+            y_std = jnp.pad(y_std, ((0, pad_n), (0, pad_p)))
+        r, t = kernel_fn(packed, mean2d, inv2d, y_std)
+        if pad_p:
+            r = r[:, :p_true]
+            t = t[:, :p_true]
+        mask = valid[:, None]
+        r = jnp.where(mask, r, 0.0)
+        t = jnp.where(mask, t, 0.0)
+        nlp = jnp.where(mask, _stats.neglog10_p_from_t(t, dof), 0.0)
+        return {
+            "r": r,
+            "t": t,
+            "nlp": nlp,
+            "batch_best_nlp": jnp.max(nlp, axis=0),
+            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
+            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
+        }
+
+    if mesh is None:
+        return jax.jit(step)
+    sh = gwas_shardings(mesh, mode="mp")
+    model_vec = NamedSharding(mesh, P("model"))
+    return jax.jit(
+        step,
+        in_shardings=(sh["packed"], sh["packed"], sh["packed"], sh["marker_vec"], sh["y"]),
+        out_shardings={
+            "r": sh["out"],
+            "t": sh["out"],
+            "nlp": sh["out"],
+            "batch_best_nlp": model_vec,
+            "batch_best_row": model_vec,
+            "hit_count": NamedSharding(mesh, P()),
+        },
+    )
+
+
+# ------------------------------------------------------------------- engines
+
+
+@register_engine("dense")
+class DenseEngine(ScanEngine):
+    """XLA GEMM over float dosages — the paper-faithful reference engine.
+    Supports both 'mp' and 'sample' sharding and the multivariate screen."""
+
+    def build_step(self, ctx: EngineContext) -> Callable[..., dict[str, jax.Array]]:
+        return build_dense_step(
+            n_samples=ctx.n_samples,
+            n_covariates=ctx.n_covariates,
+            options=ctx.options,
+            mesh=ctx.mesh,
+            mode=ctx.mode,
+            hit_threshold=ctx.hit_threshold,
+            q_basis=ctx.q_basis,
+            multivariate=ctx.multivariate,
+            n_traits_eff=ctx.n_traits_eff,
+            whitening=ctx.whitening,
+        )
+
+    def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
+        dosages = source.read_dosages(batch.lo, batch.hi)
+        if ctx.excluded_samples:
+            dosages = dosages[:, ctx.keep]
+        return HostBatch(batch, (np.asarray(dosages, np.float32),))
+
+
+@register_engine("fused")
+class FusedEngine(ScanEngine):
+    """2-bit Pallas engine: packed slabs stay packed until the kernel's
+    inner loop; marker stats come from the host repack pass, so the device
+    sees N/4 bytes per marker."""
+
+    def validate(self, ctx: EngineContext) -> None:
+        if ctx.mode != "mp":
+            raise ValueError("fused engine supports marker x phenotype sharding only")
+
+    def build_step(self, ctx: EngineContext) -> Callable[..., dict[str, jax.Array]]:
+        return build_fused_step(
+            n_samples=ctx.n_samples,
+            n_covariates=ctx.n_covariates,
+            options=ctx.options,
+            mesh=ctx.mesh,
+            hit_threshold=ctx.hit_threshold,
+            block_m=ctx.block_m,
+            block_n=ctx.block_n,
+            block_p=ctx.block_p,
+        )
+
+    def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
+        from repro.kernels.gwas_dot import ops as kops
+
+        m_batch = batch.n_markers
+        n_total = len(ctx.keep) if ctx.keep is not None else ctx.n_samples
+        plink_packed = source.read_packed(batch.lo, batch.hi)
+        codes = kops.unpack_plink_to_codes(plink_packed, n_total)
+        if ctx.excluded_samples:
+            codes = codes[:, ctx.keep]
+        mean, inv_std, valid = kops.marker_stats_from_codes(codes)
+        if ctx.maf_min > 0:
+            af = mean / 2.0
+            maf = np.minimum(af, 1.0 - af)
+            valid &= maf >= ctx.maf_min
+            inv_std = np.where(valid, inv_std, 0.0).astype(np.float32)
+        packed = kops.pack_tiled(codes, ctx.block_n)
+        pad_m = (-packed.shape[0]) % ctx.block_m
+        if pad_m:
+            packed = np.pad(packed, ((0, pad_m), (0, 0)), constant_values=0b01)
+            mean = np.pad(mean, (0, pad_m))
+            inv_std = np.pad(inv_std, (0, pad_m))
+            valid = np.pad(valid, (0, pad_m))
+        maf = np.minimum(mean / 2.0, 1.0 - mean / 2.0)
+        return HostBatch(
+            batch,
+            (packed, mean.reshape(-1, 1), inv_std.reshape(-1, 1), valid),
+            host_maf=maf[:m_batch],
+            host_valid=valid[:m_batch],
+        )

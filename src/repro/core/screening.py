@@ -3,35 +3,54 @@
     panel setup (once)                      Eq. 1, amortized across the scan
       -> relatedness exclusion (optional)   core.kinship
       -> covariate basis + residualize      core.residualize
-    marker stream (batched)
-      -> host: decode / repack + stats      io.* + kernels.ops (prefetch threads)
-      -> device: GEMM + epilogue            assoc step (dense XLA or fused Pallas)
-      -> device: per-trait max, hit count   "hit-driven host pull": the full
-                                            (M, P) tile crosses PCIe only when
-                                            a batch actually contains hits
-      -> host: commit shard + manifest      runtime.checkpoint (atomic, resumable)
+    marker stream (planned + batched)       runtime.prefetch.BatchPlanner
+      -> host: decode / repack + stats      engine.prepare_batch (prefetch threads)
+      -> staging: async host->device copy   runtime.prefetch.double_buffer
+      -> device: GEMM + epilogue            engine step (dense XLA or fused Pallas)
+      -> sinks: best / hits / QC / lambda   core.sinks (hit-driven host pull)
+      -> sink: commit shard + manifest      runtime.checkpoint (atomic, resumable)
 
-Distribution: the same step builders accept a Mesh and return pjit'd
-(dense) or shard_map'd (fused) steps obeying ``runtime.sharding.gwas_shardings``.
+The driver is engine-agnostic: ``core.engines`` resolves ``cfg.engine``
+through a registry, and each engine owns both its host-side batch
+preparation and its device step, so new engines require no driver changes
+(DESIGN.md §1-§4).  Genotype input may be one container or a per-chromosome
+fileset (``io.MultiFileSource``); the planner keeps every batch within one
+shard so different files stream and prefetch concurrently.
+
+Distribution: the step builders accept a Mesh and return pjit'd (dense) or
+shard_map'd (fused) steps obeying ``runtime.sharding.gwas_shardings``.
 CPU tests run the identical code with mesh=None.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import stats as _stats
-from repro.core.association import AssocOptions, assoc_from_standardized, standardize_genotype_batch
+from repro.core.association import AssocOptions
+from repro.core.engines import (
+    EngineContext,
+    ScanEngine,
+    build_dense_step,
+    build_fused_step,
+    get_engine,
+)
 from repro.core.residualize import covariate_basis, residualize_and_standardize
+from repro.core.sinks import (
+    BatchView,
+    BestTraitSink,
+    CheckpointSink,
+    HitSink,
+    LambdaGCSink,
+    QCSink,
+    ResultSink,
+)
 from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
-from repro.runtime.prefetch import Prefetcher
-from repro.runtime.sharding import batch_axes, gwas_shardings
+from repro.runtime.prefetch import BatchPlanner, Prefetcher, double_buffer
 
 __all__ = ["ScanConfig", "ScanResult", "GenomeScan", "build_dense_step", "build_fused_step"]
 
@@ -40,7 +59,7 @@ __all__ = ["ScanConfig", "ScanResult", "GenomeScan", "build_dense_step", "build_
 class ScanConfig:
     batch_markers: int = 4096
     options: AssocOptions = AssocOptions()
-    engine: str = "dense"          # "dense" (XLA, paper-faithful) | "fused" (Pallas 2-bit)
+    engine: str = "dense"          # registry name: core.engines.available_engines()
     mode: str = "mp"               # sharding mode; "sample" implies engine="dense"
     hit_threshold_nlp: float = 7.301  # 5e-8, the GWAS genome-wide line
     maf_min: float = 0.0
@@ -77,163 +96,6 @@ class ScanResult:
     lambda_gc: float           # genomic control on a null-trait subsample
     omnibus_nlp: np.ndarray | None = None   # (M,) multivariate screen
     excluded_samples: int = 0
-
-
-def build_dense_step(
-    *,
-    n_samples: int,
-    n_covariates: int,
-    options: AssocOptions,
-    mesh: Mesh | None = None,
-    mode: str = "mp",
-    hit_threshold: float = 7.301,
-    q_basis: jax.Array | None = None,
-    multivariate: bool = False,
-    n_traits_eff: float = 1.0,
-    whitening: jax.Array | None = None,
-) -> Callable[..., dict[str, jax.Array]]:
-    """Paper-faithful dense step: float dosages in, summary tiles out."""
-    dof = options.dof(n_samples, n_covariates)
-
-    def step(g_raw: jax.Array, y_std: jax.Array) -> dict[str, jax.Array]:
-        g_std, ms = standardize_genotype_batch(g_raw)
-        if options.dof_mode == "exact":
-            from repro.core.residualize import residualize_genotypes
-
-            g_std = residualize_genotypes(g_std, q_basis)
-        res = assoc_from_standardized(
-            g_std, y_std, n_samples=n_samples, n_covariates=n_covariates, options=options
-        )
-        mask = ms.valid[:, None]
-        nlp = jnp.where(mask, res.neglog10p, 0.0)
-        out = {
-            "r": jnp.where(mask, res.r, 0.0),
-            "t": jnp.where(mask, res.t, 0.0),
-            "nlp": nlp,
-            "maf": ms.maf,
-            "valid": ms.valid,
-            "batch_best_nlp": jnp.max(nlp, axis=0),
-            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
-            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
-        }
-        if multivariate:
-            from repro.core import multivariate as mv
-
-            omni, omni_nlp = mv.omnibus_chi2(
-                out["r"], n_samples, n_traits_eff, whitening=whitening
-            )
-            out["omnibus"] = omni
-            out["omnibus_nlp"] = omni_nlp
-        return out
-
-    if mesh is None:
-        return jax.jit(step)
-
-    sh = gwas_shardings(mesh, mode=mode)
-    mv_spec = {"omnibus": sh["marker_vec"], "omnibus_nlp": sh["marker_vec"]} if multivariate else {}
-    rep = NamedSharding(mesh, P())
-    model_vec = NamedSharding(mesh, P("model"))
-    out_shardings = {
-        "r": sh["out"],
-        "t": sh["out"],
-        "nlp": sh["out"],
-        "maf": sh["marker_vec"],
-        "valid": sh["marker_vec"],
-        "batch_best_nlp": model_vec,
-        "batch_best_row": model_vec,
-        "hit_count": rep,
-        **mv_spec,
-    }
-    return jax.jit(step, in_shardings=(sh["g"], sh["y"]), out_shardings=out_shardings)
-
-
-def build_fused_step(
-    *,
-    n_samples: int,
-    n_covariates: int,
-    options: AssocOptions,
-    mesh: Mesh | None = None,
-    hit_threshold: float = 7.301,
-    block_m: int = 256,
-    block_n: int = 512,
-    block_p: int = 256,
-    interpret: bool | None = None,
-) -> Callable[..., dict[str, jax.Array]]:
-    """Beyond-paper fused step: 2-bit packed slabs in (kernel layout),
-    summary tiles out.  'mp' sharding only — the in-kernel epilogue requires
-    complete sample contractions per device (DESIGN.md §5)."""
-    from repro.kernels.gwas_dot.gwas_dot import build_gwas_dot
-
-    if interpret is None:
-        interpret = jax.devices()[0].platform != "tpu"
-    dof = options.dof(n_samples, n_covariates)
-    input_dtype = jnp.bfloat16 if options.precision == "bf16" else jnp.float32
-
-    def kernel_local(packed, mean2d, inv2d, y):
-        m_loc = packed.shape[0]
-        n_pad = packed.shape[1] * 4
-        p_loc = y.shape[1]
-        call = build_gwas_dot(
-            m_loc, n_pad, p_loc,
-            block_m=block_m, block_n=block_n, block_p=block_p,
-            n_samples=n_samples, dof=dof,
-            input_dtype=input_dtype, interpret=interpret,
-        )
-        return tuple(call(packed, mean2d, inv2d, y))
-
-    if mesh is not None:
-        dp = batch_axes(mesh)
-        kernel_fn = jax.shard_map(
-            kernel_local,
-            mesh=mesh,
-            in_specs=(P(dp, None), P(dp, None), P(dp, None), P(None, "model")),
-            out_specs=(P(dp, "model"), P(dp, "model")),
-            # pallas_call out_shapes carry no vma metadata; the kernel is
-            # elementwise-independent per shard so the check is vacuous here.
-            check_vma=False,
-        )
-    else:
-        kernel_fn = kernel_local
-
-    def step(packed, mean2d, inv2d, valid, y_std):
-        p_true = y_std.shape[1]
-        pad_p = (-p_true) % block_p
-        pad_n = packed.shape[1] * 4 - y_std.shape[0]  # packed samples are tile-padded
-        if pad_p or pad_n:
-            y_std = jnp.pad(y_std, ((0, pad_n), (0, pad_p)))
-        r, t = kernel_fn(packed, mean2d, inv2d, y_std)
-        if pad_p:
-            r = r[:, :p_true]
-            t = t[:, :p_true]
-        mask = valid[:, None]
-        r = jnp.where(mask, r, 0.0)
-        t = jnp.where(mask, t, 0.0)
-        nlp = jnp.where(mask, _stats.neglog10_p_from_t(t, dof), 0.0)
-        return {
-            "r": r,
-            "t": t,
-            "nlp": nlp,
-            "batch_best_nlp": jnp.max(nlp, axis=0),
-            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
-            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
-        }
-
-    if mesh is None:
-        return jax.jit(step)
-    sh = gwas_shardings(mesh, mode="mp")
-    model_vec = NamedSharding(mesh, P("model"))
-    return jax.jit(
-        step,
-        in_shardings=(sh["packed"], sh["packed"], sh["packed"], sh["marker_vec"], sh["y"]),
-        out_shardings={
-            "r": sh["out"],
-            "t": sh["out"],
-            "nlp": sh["out"],
-            "batch_best_nlp": model_vec,
-            "batch_best_row": model_vec,
-            "hit_count": NamedSharding(mesh, P()),
-        },
-    )
 
 
 class GenomeScan:
@@ -286,85 +148,55 @@ class GenomeScan:
 
             self._whitening, eig = mv.whiten_panel(self.panel.y)
             self._n_traits_eff = float(mv.effective_tests(eig))
-        if config.engine == "fused":
-            if config.mode != "mp":
-                raise ValueError("fused engine supports marker x phenotype sharding only")
-            self._step = build_fused_step(
-                n_samples=self.n_samples,
-                n_covariates=self.n_covariates,
-                options=config.options,
-                mesh=mesh,
-                hit_threshold=config.hit_threshold_nlp,
-                block_m=config.block_m,
-                block_n=config.block_n,
-                block_p=config.block_p,
-            )
-        else:
-            self._step = build_dense_step(
-                n_samples=self.n_samples,
-                n_covariates=self.n_covariates,
-                options=config.options,
-                mesh=mesh,
-                mode=config.mode,
-                hit_threshold=config.hit_threshold_nlp,
-                q_basis=self._q,
-                multivariate=config.multivariate,
-                n_traits_eff=self._n_traits_eff,
-                whitening=self._whitening,
-            )
+
+        self.engine: ScanEngine = get_engine(config.engine)
+        self._ctx = EngineContext(
+            n_samples=self.n_samples,
+            n_covariates=self.n_covariates,
+            options=config.options,
+            mesh=mesh,
+            mode=config.mode,
+            hit_threshold=config.hit_threshold_nlp,
+            maf_min=config.maf_min,
+            block_m=config.block_m,
+            block_n=config.block_n,
+            block_p=config.block_p,
+            q_basis=self._q,
+            multivariate=config.multivariate,
+            n_traits_eff=self._n_traits_eff,
+            whitening=self._whitening,
+            keep=self._keep,
+            excluded_samples=self.excluded_samples,
+        )
+        self.engine.validate(self._ctx)
+        self._step = self.engine.build_step(self._ctx)
+        self.planner = BatchPlanner(config.batch_markers)
+        self.plan = self.planner.plan(source)
 
     # ---------------------------------------------------------------- batches
 
     @property
     def n_batches(self) -> int:
-        b = self.config.batch_markers
-        return (self.source.n_markers + b - 1) // b
-
-    def _batch_range(self, idx: int) -> tuple[int, int]:
-        b = self.config.batch_markers
-        return idx * b, min((idx + 1) * b, self.source.n_markers)
-
-    def _load_batch(self, idx: int):
-        lo, hi = self._batch_range(idx)
-        cfg = self.config
-        if cfg.engine == "fused":
-            from repro.kernels.gwas_dot import ops as kops
-
-            plink_packed = self.source.read_packed(lo, hi)
-            codes = kops.unpack_plink_to_codes(plink_packed, len(self._keep))
-            if self.excluded_samples:
-                codes = codes[:, self._keep]
-            mean, inv_std, valid = kops.marker_stats_from_codes(codes)
-            if cfg.maf_min > 0:
-                af = mean / 2.0
-                maf = np.minimum(af, 1.0 - af)
-                valid &= maf >= cfg.maf_min
-                inv_std = np.where(valid, inv_std, 0.0).astype(np.float32)
-            packed = kops.pack_tiled(codes, cfg.block_n)
-            pad_m = (-packed.shape[0]) % cfg.block_m
-            if pad_m:
-                packed = np.pad(packed, ((0, pad_m), (0, 0)), constant_values=0b01)
-                mean = np.pad(mean, (0, pad_m))
-                inv_std = np.pad(inv_std, (0, pad_m))
-                valid = np.pad(valid, (0, pad_m))
-            maf = np.minimum(mean / 2.0, 1.0 - mean / 2.0)
-            return idx, (lo, hi), (
-                packed,
-                mean.reshape(-1, 1),
-                inv_std.reshape(-1, 1),
-                valid,
-            ), maf
-        dosages = self.source.read_dosages(lo, hi)
-        if self.excluded_samples:
-            dosages = dosages[:, self._keep]
-        return idx, (lo, hi), (np.asarray(dosages, np.float32),), None
+        return len(self.plan)
 
     # ------------------------------------------------------------------- run
+
+    def _make_sinks(self, ckpt: ScanCheckpoint | None) -> list[ResultSink]:
+        sinks: list[ResultSink] = [
+            BestTraitSink(self.n_traits),
+            HitSink(self.config.hit_threshold_nlp),
+            QCSink(self.source.n_markers, multivariate=self.config.multivariate),
+            LambdaGCSink(),
+        ]
+        if ckpt is not None:
+            sinks.append(CheckpointSink(ckpt))  # last: persists peers' payload
+        return sinks
 
     def run(self, *, resume: bool = True) -> ScanResult:
         cfg = self.config
         m_total = self.source.n_markers
         ckpt: ScanCheckpoint | None = None
+        todo = self.plan
         if cfg.checkpoint_dir:
             fp = config_fingerprint(
                 {
@@ -372,109 +204,58 @@ class GenomeScan:
                     "n_markers": m_total,
                     "n_samples": self.n_samples,
                     "n_traits": self.n_traits,
+                    # The plan's index->(lo,hi) mapping depends on the shard
+                    # layout; resuming against a re-sharded fileset would
+                    # silently mix two incompatible batch decompositions.
+                    "shard_boundaries": list(
+                        getattr(self.source, "shard_boundaries", (0, m_total))
+                    ),
                 }
             )
             ckpt = ScanCheckpoint(cfg.checkpoint_dir, fingerprint=fp, n_batches=self.n_batches)
-            batch_ids = ckpt.pending_batches() if resume else list(range(self.n_batches))
-        else:
-            batch_ids = list(range(self.n_batches))
+            if resume:
+                pending = set(ckpt.pending_batches())
+                todo = [b for b in self.plan if b.index in pending]
 
-        best_nlp = np.zeros(self.n_traits, np.float32)
-        best_marker = np.full(self.n_traits, -1, np.int64)
-        hits: list[np.ndarray] = []
-        hit_stats: list[np.ndarray] = []
-        maf_all = np.zeros(m_total, np.float32)
-        valid_all = np.zeros(m_total, bool)
-        omni_all = np.zeros(m_total, np.float32) if cfg.multivariate else None
-        t_sample: list[np.ndarray] = []
-
+        sinks = self._make_sinks(ckpt)
         y_dev = jnp.asarray(self._y)
 
-        for idx, (lo, hi), dev_args, host_maf in Prefetcher(
-            batch_ids, self._load_batch, depth=cfg.prefetch_depth, num_workers=cfg.io_workers
-        ):
-            out = self._step(*[jnp.asarray(a) for a in dev_args], y_dev)
-            m_batch = hi - lo
-            b_best = np.asarray(out["batch_best_nlp"])[: self.n_traits]
-            b_row = np.asarray(out["batch_best_row"])[: self.n_traits]
-            improved = b_best > best_nlp
-            best_nlp = np.where(improved, b_best, best_nlp)
-            best_marker = np.where(improved, lo + b_row.astype(np.int64), best_marker)
+        prefetched = Prefetcher(
+            todo,
+            lambda b: self.engine.prepare_batch(self.source, b, self._ctx),
+            depth=cfg.prefetch_depth,
+            num_workers=cfg.io_workers,
+        )
 
-            if host_maf is not None:
-                maf_all[lo:hi] = host_maf[:m_batch]
-                valid_all[lo:hi] = np.asarray(dev_args[3])[:m_batch]
-            else:
-                maf_all[lo:hi] = np.asarray(out["maf"])[:m_batch]
-                valid_all[lo:hi] = np.asarray(out["valid"])[:m_batch]
-            if omni_all is not None and "omnibus_nlp" in out:
-                omni_all[lo:hi] = np.asarray(out["omnibus_nlp"])[:m_batch]
+        def stage(host_batch):
+            # jnp.asarray launches the copy; on accelerators it completes
+            # while the device chews on the previous batch (double buffer).
+            return host_batch, tuple(jnp.asarray(a) for a in host_batch.device_args)
 
-            # Hit-driven host pull: the full tile crosses to host only when
-            # this batch contains at least one genome-wide-significant cell.
-            batch_hits = np.zeros((0, 2), np.int32)
-            batch_stats = np.zeros((0, 3), np.float32)
-            if int(out["hit_count"]) > 0:
-                nlp = np.asarray(out["nlp"])[:m_batch]
-                rows, cols = np.nonzero(nlp >= cfg.hit_threshold_nlp)
-                r_np = np.asarray(out["r"])[:m_batch]
-                t_np = np.asarray(out["t"])[:m_batch]
-                batch_hits = np.stack([rows.astype(np.int32) + lo, cols.astype(np.int32)], 1)
-                batch_stats = np.stack(
-                    [r_np[rows, cols], t_np[rows, cols], nlp[rows, cols]], 1
-                ).astype(np.float32)
-            hits.append(batch_hits)
-            hit_stats.append(batch_stats)
+        for host_batch, dev_args in double_buffer(prefetched, stage):
+            out = self._step(*dev_args, y_dev)
+            view = BatchView(host_batch, out, self.n_traits)
+            payload: dict[str, np.ndarray] = {}
+            for sink in sinks:
+                sink.on_batch(view, payload)
 
-            # Calibration probe: first trait's t row sample for lambda_GC.
-            t_sample.append(np.asarray(out["t"])[: min(m_batch, 64), 0])
-
-            if ckpt is not None:
-                shard = {
-                    "lo": np.asarray(lo),
-                    "hi": np.asarray(hi),
-                    "best_nlp": b_best,
-                    "best_row": b_row,
-                    "hits": batch_hits,
-                    "hit_stats": batch_stats,
-                    "maf": maf_all[lo:hi],
-                    "valid": valid_all[lo:hi],
-                }
-                if omni_all is not None:
-                    shard["omnibus_nlp"] = omni_all[lo:hi]
-                ckpt.commit_batch(idx, shard)
-
-        # Resume path: merge previously committed shards.
-        if ckpt is not None and set(batch_ids) != set(range(self.n_batches)):
-            for idx in sorted(ckpt.completed - set(batch_ids)):
+        # Resume path: replay previously committed shards through the sinks.
+        if ckpt is not None:
+            done_now = {b.index for b in todo}
+            for idx in sorted(ckpt.completed - done_now):
                 shard = ckpt.load_batch(idx)
                 lo, hi = int(shard["lo"]), int(shard["hi"])
-                improved = shard["best_nlp"] > best_nlp
-                best_nlp = np.where(improved, shard["best_nlp"], best_nlp)
-                best_marker = np.where(
-                    improved, lo + shard["best_row"].astype(np.int64), best_marker
-                )
-                hits.append(shard["hits"])
-                hit_stats.append(shard["hit_stats"])
-                maf_all[lo:hi] = shard["maf"]
-                valid_all[lo:hi] = shard["valid"]
-                if omni_all is not None and "omnibus_nlp" in shard:
-                    omni_all[lo:hi] = shard["omnibus_nlp"]
+                for sink in sinks:
+                    sink.merge_shard(shard, lo, hi)
 
-        t_probe = np.concatenate(t_sample) if t_sample else np.zeros(1, np.float32)
-        lam = float(_stats.genomic_control_lambda(jnp.asarray(t_probe))) if t_probe.size else 1.0
+        fields: dict[str, Any] = {}
+        for sink in sinks:
+            fields.update(sink.result())
         return ScanResult(
             n_markers=m_total,
             n_samples=self.n_samples,
             n_traits=self.n_traits,
             dof=self.dof,
-            best_nlp=best_nlp,
-            best_marker=best_marker,
-            hits=np.concatenate(hits) if hits else np.zeros((0, 2), np.int32),
-            hit_stats=np.concatenate(hit_stats) if hit_stats else np.zeros((0, 3), np.float32),
-            maf=maf_all,
-            valid=valid_all,
-            lambda_gc=lam,
-            omnibus_nlp=omni_all,
             excluded_samples=self.excluded_samples,
+            **fields,
         )

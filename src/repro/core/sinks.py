@@ -1,0 +1,262 @@
+"""Composable result sinks for the genome scan (DESIGN.md §4).
+
+``GenomeScan.run`` used to interleave five accumulation concerns (per-trait
+best, hit collection, QC arrays, lambda-GC probe, checkpoint commits) in one
+loop body.  Each is now a ``ResultSink``:
+
+    on_batch(view, payload)   consume one computed batch; add the arrays this
+                              sink wants persisted to the checkpoint shard
+                              ``payload``
+    merge_shard(shard, lo, hi) replay a previously committed shard (resume)
+    result()                  contribute fields to the final ``ScanResult``
+
+Sinks read device outputs through a shared ``BatchView`` that pulls each
+tile across PCIe at most once, lazily — the "hit-driven host pull" invariant
+(the full (M, P) nlp/r/t tiles only cross when a batch actually contains
+hits, no matter how many sinks are attached).  The checkpoint committer is
+itself just the last sink in the chain, so crash-resume is one line of
+composition instead of special cases in the driver.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats as _stats
+from repro.core.engines import HostBatch
+from repro.runtime.checkpoint import ScanCheckpoint
+from repro.runtime.prefetch import MarkerBatch
+
+__all__ = [
+    "BatchView",
+    "ResultSink",
+    "BestTraitSink",
+    "HitSink",
+    "QCSink",
+    "LambdaGCSink",
+    "CheckpointSink",
+]
+
+
+class BatchView:
+    """Lazy, cached host view over one device step output.
+
+    Every ``np.asarray`` on a device output is a host pull; multiple sinks
+    share one view so each tile crosses at most once.  ``t_probe`` slices on
+    the device *before* pulling, so the calibration probe never forces the
+    full t tile across.
+    """
+
+    def __init__(self, host: HostBatch, out: dict, n_traits: int):
+        self.batch: MarkerBatch = host.batch
+        self.host = host
+        self._out = out
+        self.n_traits = n_traits
+        self.m_batch = host.batch.n_markers
+        self._cache: dict[str, np.ndarray] = {}
+
+    def _pull(self, key: str) -> np.ndarray:
+        if key not in self._cache:
+            self._cache[key] = np.asarray(self._out[key])
+        return self._cache[key]
+
+    @property
+    def hit_count(self) -> int:
+        return int(self._pull("hit_count"))
+
+    @property
+    def best_nlp(self) -> np.ndarray:
+        return self._pull("batch_best_nlp")[: self.n_traits]
+
+    @property
+    def best_row(self) -> np.ndarray:
+        return self._pull("batch_best_row")[: self.n_traits]
+
+    @property
+    def nlp(self) -> np.ndarray:
+        return self._pull("nlp")[: self.m_batch]
+
+    @property
+    def r(self) -> np.ndarray:
+        return self._pull("r")[: self.m_batch]
+
+    @property
+    def t(self) -> np.ndarray:
+        return self._pull("t")[: self.m_batch]
+
+    @property
+    def maf(self) -> np.ndarray:
+        if self.host.host_maf is not None:
+            return self.host.host_maf[: self.m_batch]
+        return self._pull("maf")[: self.m_batch]
+
+    @property
+    def valid(self) -> np.ndarray:
+        if self.host.host_valid is not None:
+            return self.host.host_valid[: self.m_batch]
+        return self._pull("valid")[: self.m_batch]
+
+    @property
+    def omnibus_nlp(self) -> np.ndarray | None:
+        if "omnibus_nlp" not in self._out:
+            return None
+        return self._pull("omnibus_nlp")[: self.m_batch]
+
+    def t_probe(self, rows: int) -> np.ndarray:
+        if "t" in self._cache:  # tile already on host (a hit pulled it)
+            return self._cache["t"][: min(self.m_batch, rows), 0]
+        return np.asarray(self._out["t"][: min(self.m_batch, rows), 0])
+
+
+class ResultSink:
+    """One accumulation concern of the scan; see module docstring."""
+
+    def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        raise NotImplementedError
+
+    def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
+        """Fold a previously committed checkpoint shard in (resume path)."""
+
+    def result(self) -> dict[str, Any]:
+        return {}
+
+
+class BestTraitSink(ResultSink):
+    """Per-trait running best -log10 p and the global marker achieving it."""
+
+    def __init__(self, n_traits: int):
+        self.best_nlp = np.zeros(n_traits, np.float32)
+        self.best_marker = np.full(n_traits, -1, np.int64)
+
+    def _fold(self, b_best: np.ndarray, b_row: np.ndarray, lo: int) -> None:
+        improved = b_best > self.best_nlp
+        self.best_nlp = np.where(improved, b_best, self.best_nlp)
+        self.best_marker = np.where(
+            improved, lo + b_row.astype(np.int64), self.best_marker
+        )
+
+    def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        payload["best_nlp"] = view.best_nlp
+        payload["best_row"] = view.best_row
+        self._fold(view.best_nlp, view.best_row, view.batch.lo)
+
+    def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
+        self._fold(shard["best_nlp"], shard["best_row"], lo)
+
+    def result(self) -> dict[str, Any]:
+        return {"best_nlp": self.best_nlp, "best_marker": self.best_marker}
+
+
+class HitSink(ResultSink):
+    """Collect (marker, trait) cells above the genome-wide line, pulling the
+    full tiles only for batches whose device-side hit counter is non-zero."""
+
+    def __init__(self, threshold_nlp: float):
+        self.threshold = threshold_nlp
+        self._hits: list[np.ndarray] = []
+        self._stats: list[np.ndarray] = []
+
+    def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        batch_hits = np.zeros((0, 2), np.int32)
+        batch_stats = np.zeros((0, 3), np.float32)
+        if view.hit_count > 0:
+            nlp = view.nlp
+            rows, cols = np.nonzero(nlp >= self.threshold)
+            r_np, t_np = view.r, view.t
+            batch_hits = np.stack(
+                [rows.astype(np.int32) + view.batch.lo, cols.astype(np.int32)], 1
+            )
+            batch_stats = np.stack(
+                [r_np[rows, cols], t_np[rows, cols], nlp[rows, cols]], 1
+            ).astype(np.float32)
+        payload["hits"] = batch_hits
+        payload["hit_stats"] = batch_stats
+        self._hits.append(batch_hits)
+        self._stats.append(batch_stats)
+
+    def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
+        self._hits.append(shard["hits"])
+        self._stats.append(shard["hit_stats"])
+
+    def result(self) -> dict[str, Any]:
+        return {
+            "hits": np.concatenate(self._hits) if self._hits else np.zeros((0, 2), np.int32),
+            "hit_stats": (
+                np.concatenate(self._stats) if self._stats else np.zeros((0, 3), np.float32)
+            ),
+        }
+
+
+class QCSink(ResultSink):
+    """Dense per-marker QC arrays: observed MAF, validity mask, and (when
+    the multivariate screen is on) the omnibus -log10 p track."""
+
+    def __init__(self, n_markers: int, *, multivariate: bool = False):
+        self.maf = np.zeros(n_markers, np.float32)
+        self.valid = np.zeros(n_markers, bool)
+        self.omnibus_nlp = np.zeros(n_markers, np.float32) if multivariate else None
+
+    def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        lo, hi = view.batch.lo, view.batch.hi
+        self.maf[lo:hi] = view.maf
+        self.valid[lo:hi] = view.valid
+        payload["maf"] = self.maf[lo:hi]
+        payload["valid"] = self.valid[lo:hi]
+        if self.omnibus_nlp is not None and view.omnibus_nlp is not None:
+            self.omnibus_nlp[lo:hi] = view.omnibus_nlp
+            payload["omnibus_nlp"] = self.omnibus_nlp[lo:hi]
+
+    def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
+        self.maf[lo:hi] = shard["maf"]
+        self.valid[lo:hi] = shard["valid"]
+        if self.omnibus_nlp is not None and "omnibus_nlp" in shard:
+            self.omnibus_nlp[lo:hi] = shard["omnibus_nlp"]
+
+    def result(self) -> dict[str, Any]:
+        return {"maf": self.maf, "valid": self.valid, "omnibus_nlp": self.omnibus_nlp}
+
+
+class LambdaGCSink(ResultSink):
+    """Genomic-control calibration probe: a small t-statistic sample of the
+    first trait per batch.  The probe is persisted in every checkpoint shard
+    so a resumed scan merges the probes of already-committed batches instead
+    of estimating lambda from whatever little it recomputed."""
+
+    def __init__(self, rows: int = 64):
+        self.rows = rows
+        self._samples: list[np.ndarray] = []
+
+    def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        probe = np.asarray(view.t_probe(self.rows), np.float32)
+        payload["t_probe"] = probe
+        self._samples.append(probe)
+
+    def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
+        # Shards written before the probe was persisted simply contribute
+        # nothing (lambda then rests on the recomputed batches, as before).
+        if "t_probe" in shard:
+            self._samples.append(np.asarray(shard["t_probe"], np.float32))
+
+    def result(self) -> dict[str, Any]:
+        probe = np.concatenate(self._samples) if self._samples else np.zeros(1, np.float32)
+        lam = float(_stats.genomic_control_lambda(jnp.asarray(probe))) if probe.size else 1.0
+        return {"lambda_gc": lam}
+
+
+class CheckpointSink(ResultSink):
+    """Commit each batch's accumulated payload as an atomic shard.  Must be
+    the LAST sink in the chain: it persists whatever the sinks before it
+    put into ``payload``."""
+
+    def __init__(self, ckpt: ScanCheckpoint):
+        self.ckpt = ckpt
+
+    def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        shard = {
+            "lo": np.asarray(view.batch.lo),
+            "hi": np.asarray(view.batch.hi),
+            **payload,
+        }
+        self.ckpt.commit_batch(view.batch.index, shard)

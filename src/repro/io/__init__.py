@@ -14,7 +14,8 @@ All backends expose the same protocol (``GenotypeSource``):
 from repro.io.plink import PlinkBed, write_plink
 from repro.io.bgen import BgenFile, write_bgen
 from repro.io.numpy_io import NumpyGenotypes
-from repro.io.pheno import PhenotypeTable, align_tables
+from repro.io.multifile import MultiFileSource, expand_genotype_paths
+from repro.io.pheno import PhenotypeTable, align_tables, read_table
 from repro.io.synth import SyntheticCohort, make_cohort
 
 __all__ = [
@@ -23,22 +24,36 @@ __all__ = [
     "BgenFile",
     "write_bgen",
     "NumpyGenotypes",
+    "MultiFileSource",
     "PhenotypeTable",
     "align_tables",
+    "read_table",
     "SyntheticCohort",
     "make_cohort",
     "open_genotypes",
 ]
 
 
+def _open_one(path: str):
+    if path.endswith(".bed"):
+        return PlinkBed(path)
+    if path.endswith(".bgen"):
+        return BgenFile(path)
+    if path.endswith((".npy", ".npz")):
+        return NumpyGenotypes(path)
+    raise ValueError(f"unrecognized genotype container: {path}")
+
+
 def open_genotypes(path: str):
-    """Dispatch on file suffix: ``.bed`` -> PLINK, ``.bgen`` -> BGEN,
-    ``.npy``/``.npz`` -> NumPy."""
-    p = str(path)
-    if p.endswith(".bed"):
-        return PlinkBed(p)
-    if p.endswith(".bgen"):
-        return BgenFile(p)
-    if p.endswith((".npy", ".npz")):
-        return NumpyGenotypes(p)
-    raise ValueError(f"unrecognized genotype container: {p}")
+    """Open one container or a per-chromosome fileset.
+
+    Dispatch on file suffix: ``.bed`` -> PLINK, ``.bgen`` -> BGEN,
+    ``.npy``/``.npz`` -> NumPy.  A glob pattern (``cohort_chr*.bed``,
+    numeric-aware ordering so chr2 < chr10) or a comma-separated list
+    (``chr1.bed,chr2.bed``) opens every match as one ``MultiFileSource``
+    with contiguous global marker indexing.
+    """
+    paths = expand_genotype_paths(str(path))
+    if len(paths) == 1:
+        return _open_one(paths[0])
+    return MultiFileSource([_open_one(p) for p in paths])

@@ -11,6 +11,7 @@ Reference: www.well.ox.ac.uk/~gav/bgen_format/spec/v1.2.html
 from __future__ import annotations
 
 import struct
+import threading
 import zlib
 from dataclasses import dataclass, field
 
@@ -45,6 +46,9 @@ class BgenFile:
     def __init__(self, path: str):
         self.path = path
         self._f = open(path, "rb")
+        # seek+read on the shared handle must be atomic: prefetch workers
+        # decode different marker ranges of this file concurrently.
+        self._lock = threading.Lock()
         header = self._f.read(4)
         (first_variant_offset,) = struct.unpack("<I", header)
         (h_len, n_variants, n_samples) = struct.unpack("<III", self._f.read(12))
@@ -117,8 +121,9 @@ class BgenFile:
         raise NotImplementedError("BGEN stores probabilities; no 2-bit fast path")
 
     def _decode_one(self, v: _Variant) -> np.ndarray:
-        self._f.seek(v.data_offset)
-        raw = self._f.read(v.compressed_len)
+        with self._lock:
+            self._f.seek(v.data_offset)
+            raw = self._f.read(v.compressed_len)
         if self.compression == 1:
             raw = zlib.decompress(raw, bufsize=v.uncompressed_len)
         (n_samples, n_alleles, min_pl, max_pl) = struct.unpack("<IHBB", raw[:8])

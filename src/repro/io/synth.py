@@ -16,7 +16,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["SyntheticCohort", "make_cohort"]
+__all__ = ["SyntheticCohort", "make_cohort", "write_cohort_files", "write_split_plink"]
 
 
 @dataclass
@@ -129,4 +129,41 @@ def write_cohort_files(cohort: SyntheticCohort, stem: str) -> dict[str, str]:
             vals = "\t".join(f"{v:.6g}" for v in cohort.covariates[i])
             f.write(f"{sid}\t{sid}\t{vals}\n")
     paths["cov"] = cov_path
+    return paths
+
+
+def write_split_plink(
+    cohort: SyntheticCohort, stem: str, n_shards: int = 3
+) -> list[str]:
+    """Write the cohort as a per-chromosome PLINK fileset
+    (``<stem>_chr1.bed`` .. ``<stem>_chr<n>.bed``) — the multi-file layout
+    real cohorts ship in.  Shard sizes are deliberately uneven so tests
+    exercise batch planning against ragged boundaries; returns bed paths
+    in chromosome order."""
+    from repro.io.plink import Marker, write_plink
+
+    m = cohort.dosages.shape[0]
+    if not 1 <= n_shards <= m:
+        raise ValueError(f"cannot split {m} markers into {n_shards} shards")
+    # Ragged but deterministic: proportions 1x, 2x, 1x, 2x, ... with every
+    # shard guaranteed >= 1 marker (an empty .bed is unreadable).
+    weights = np.array([1 + (i % 2) for i in range(n_shards)], np.float64)
+    extra = m - n_shards
+    alloc = np.floor(extra * weights / weights.sum()).astype(int)
+    alloc[: extra - alloc.sum()] += 1
+    bounds = np.concatenate([[0], np.cumsum(1 + alloc)])
+    paths: list[str] = []
+    for sid, (a, b) in enumerate(zip(bounds[:-1], bounds[1:])):
+        markers = [
+            Marker(str(sid + 1), cohort.marker_ids[i], 0.0, i - a + 1, "A", "G")
+            for i in range(a, b)
+        ]
+        paths.append(
+            write_plink(
+                f"{stem}_chr{sid + 1}",
+                cohort.dosages[a:b],
+                sample_ids=cohort.sample_ids,
+                markers=markers,
+            )
+        )
     return paths

@@ -5,10 +5,14 @@
         --out results/ [--engine fused] [--exclude-related] [--multivariate] \
         [--batch-markers 8192] [--maf-min 0.01] [--resume]
 
+    # per-chromosome fileset: glob (quote it!) or comma list
+    python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' ...
+
 Accepts PLINK (.bed), BGEN (.bgen) and NumPy (.npy/.npz) genotype
-containers; aligns tables by sample id; writes a hits TSV + per-trait best
-TSV + a JSON run summary.  ``--checkpoint-dir`` makes the scan restartable
-at marker-batch granularity.
+containers — one file, a glob, or a comma-separated list opened as one
+contiguous multi-file source; aligns tables by sample id; writes a hits
+TSV + per-trait best TSV + a JSON run summary.  ``--checkpoint-dir`` makes
+the scan restartable at marker-batch granularity.
 """
 from __future__ import annotations
 
@@ -20,17 +24,20 @@ import time
 import numpy as np
 
 from repro.core.association import AssocOptions
+from repro.core.engines import available_engines
 from repro.core.screening import GenomeScan, ScanConfig
 from repro.io import align_tables, open_genotypes, read_table
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(prog="repro.launch.gwas", description=__doc__)
-    ap.add_argument("--genotypes", required=True, help=".bed / .bgen / .npy / .npz")
+    ap.add_argument("--genotypes", required=True,
+                    help=".bed / .bgen / .npy / .npz — one file, a glob "
+                         "('cohort_chr*.bed'), or a comma-separated list")
     ap.add_argument("--pheno", required=True, help="phenotype table (FID IID trait...)")
     ap.add_argument("--covar", default=None, help="covariate table")
     ap.add_argument("--out", required=True, help="output directory")
-    ap.add_argument("--engine", default="dense", choices=["dense", "fused"])
+    ap.add_argument("--engine", default="dense", choices=available_engines())
     ap.add_argument("--mode", default="mp", choices=["mp", "sample"])
     ap.add_argument("--dof-mode", default="paper", choices=["paper", "exact"])
     ap.add_argument("--precision", default="fp32", choices=["fp32", "bf16"])
@@ -101,6 +108,7 @@ def main(argv=None) -> None:
         "wall_s": wall,
         "markers_per_s": result.n_markers / wall,
         "engine": args.engine,
+        "genotype_shards": getattr(source, "n_shards", 1),
     }
     with open(os.path.join(args.out, "summary.json"), "w") as f:
         json.dump(summary, f, indent=1)

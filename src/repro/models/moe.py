@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.sharding_ctx import constrain
+from repro.runtime.compat import token_prefix_sum
 
 __all__ = ["init_moe_params", "moe_layer"]
 
@@ -73,10 +74,10 @@ def moe_layer(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.A
         gate = jnp.max(remaining, axis=-1)                      # (T,)
         expert = jnp.argmax(remaining, axis=-1)                 # (T,)
         onehot = jax.nn.one_hot(expert, e, dtype=jnp.float32)   # (T, E)
-        # Log-depth prefix sum: jnp.cumsum lowers to an O(T^2) reduce-window
-        # on some backends (and is costed that way); associative_scan stays
-        # O(T log T) in both lowering and cost analysis.
-        csum = jax.lax.associative_scan(jnp.add, onehot, axis=0)
+        # Prefix sum over the token axis.  The token axis may be GSPMD-
+        # sharded here, so this must go through the partitioner-safe helper
+        # (associative_scan is miscompiled on sharded axes by old jax).
+        csum = token_prefix_sum(onehot, axis=0)
         pos = (csum - 1.0) + expert_fill[None, :].astype(jnp.float32)
         pos_tok = jnp.sum(pos * onehot, axis=-1)                # (T,)
         keep = pos_tok < cap
@@ -143,7 +144,9 @@ def _moe_local(cfg: ModelConfig, p: dict, xt: jax.Array, n_local_experts: int, a
         gate = jnp.max(remaining, axis=-1)
         expert = jnp.argmax(remaining, axis=-1)
         onehot = jax.nn.one_hot(expert, e, dtype=jnp.float32)
-        csum = jax.lax.associative_scan(jnp.add, onehot, axis=0)
+        # Token axis is device-local inside shard_map; the helper still
+        # keeps the lowering consistent with the GSPMD path above.
+        csum = token_prefix_sum(onehot, axis=0)
         pos_tok = jnp.sum((csum - 1.0 + expert_fill[None].astype(jnp.float32)) * onehot, -1)
         local = (expert >= first) & (expert < first + n_local_experts)
         keep = (pos_tok < cap) & local
@@ -176,6 +179,7 @@ def moe_layer_manual(cfg: ModelConfig, p: dict, x: jax.Array, mesh) -> tuple[jax
     """Manual expert-parallel MoE via shard_map (moe_impl='manual')."""
     from jax.sharding import PartitionSpec as P
 
+    from repro.runtime.compat import shard_map
     from repro.runtime.sharding import batch_axes
 
     moe = cfg.moe
@@ -201,7 +205,7 @@ def moe_layer_manual(cfg: ModelConfig, p: dict, x: jax.Array, mesh) -> tuple[jax
     }
     if "dense" in p:
         p_specs["dense"] = jax.tree.map(lambda _: P(), p["dense"])
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(p_specs, P(dp, None, None)),

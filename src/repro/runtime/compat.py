@@ -1,0 +1,67 @@
+"""Version shims for the installed jax.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (0.4.x, kwarg
+``check_rep``) to the top-level ``jax.shard_map`` (0.5+, kwarg
+``check_vma``).  All in-repo call sites use the new calling convention and
+route through :func:`shard_map` here, which translates for old jax.
+
+Importing this module also installs the shim as ``jax.shard_map`` when the
+attribute is missing, so subprocess harnesses and user scripts written
+against the new API run unchanged on jax 0.4.x.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["shard_map", "token_prefix_sum"]
+
+_JAX_VERSION = tuple(int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+
+def shard_map(
+    f: Callable[..., Any],
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool | None = None,
+    **kwargs,
+):
+    """``jax.shard_map`` with the 0.5+ signature on any supported jax."""
+    native = getattr(jax, "shard_map", None)
+    if native is not None and native is not _shim:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy
+
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def _shim(f, *, mesh, in_specs, out_specs, **kwargs):
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+if not hasattr(jax, "shard_map"):
+    jax.shard_map = _shim
+
+
+def token_prefix_sum(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Inclusive prefix sum along ``axis``, safe under GSPMD partitioning.
+
+    The 0.4.x SPMD partitioner miscompiles ``lax.associative_scan`` when the
+    scanned axis ends up sharded (silently wrong values — each shard scans
+    locally with no cross-shard carry), which MoE routing hits as soon as an
+    output sharding constraint propagates a token-sharded layout into the
+    dispatch cumsum.  ``jnp.cumsum`` partitions correctly everywhere, so old
+    jax takes that path; newer jax keeps the log-depth associative scan
+    (``cumsum``'s reduce-window lowering is costed O(T^2) on some backends).
+    """
+    if _JAX_VERSION >= (0, 5, 0):
+        return jax.lax.associative_scan(jnp.add, x, axis=axis)
+    return jnp.cumsum(x, axis=axis)

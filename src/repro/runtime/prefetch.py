@@ -1,5 +1,19 @@
-"""Host-side pipeline: decode/repack on worker threads, overlap with device
-compute through a bounded queue (double/triple buffering).
+"""Host-side pipeline: plan marker batches, decode/repack on worker threads,
+overlap with device compute through a bounded queue, and double-buffer the
+host->device transfer.
+
+Three cooperating pieces (DESIGN.md §3):
+
+``BatchPlanner``   maps the global marker range onto ``MarkerBatch`` work
+                   items.  Batches never cross a shard boundary of a
+                   multi-file source, so every item is one contiguous read
+                   from one file — items from different files then stream
+                   and prefetch concurrently on the worker pool.
+``Prefetcher``     runs the engine's host-side batch preparation on worker
+                   threads, yielding in submission order with a bounded
+                   in-flight window.
+``double_buffer``  issues the (async) host->device transfer for batch k+1
+                   while the device computes on batch k.
 
 The GWAS scan is IO-bound on the genotype stream when the fused kernel path
 is active (2-bit slabs are only N/4 bytes per marker), so a shallow queue and
@@ -7,16 +21,88 @@ one or two decode workers keep the device saturated; both knobs are config.
 """
 from __future__ import annotations
 
-import queue
 import threading
-from typing import Callable, Iterable, Iterator, TypeVar
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, Iterator, TypeVar
 
 T = TypeVar("T")
 U = TypeVar("U")
+V = TypeVar("V")
 
-__all__ = ["Prefetcher"]
+__all__ = ["MarkerBatch", "BatchPlanner", "Prefetcher", "double_buffer"]
 
 _SENTINEL = object()
+
+
+@dataclass(frozen=True)
+class MarkerBatch:
+    """One schedulable unit of scan work: a contiguous global marker range
+    that maps onto a single genotype shard (file)."""
+
+    index: int       # position in the plan == checkpoint batch id
+    lo: int          # global marker start (inclusive)
+    hi: int          # global marker end (exclusive)
+    source_id: int   # shard ordinal (0 for single-file sources)
+    local_lo: int    # the same range in the shard's own marker indexing
+    local_hi: int
+
+    @property
+    def n_markers(self) -> int:
+        return self.hi - self.lo
+
+
+class BatchPlanner:
+    """Deterministically decompose a genotype source into ``MarkerBatch``es.
+
+    Sources exposing ``shard_boundaries`` (e.g. ``io.MultiFileSource``) get a
+    boundary-respecting plan; plain sources get the classic fixed-stride
+    decomposition.  The plan depends only on (source layout, batch_markers),
+    never on mesh/host topology, so checkpoints stay elastic across restarts.
+    """
+
+    def __init__(self, batch_markers: int):
+        if batch_markers <= 0:
+            raise ValueError(f"batch_markers must be positive, got {batch_markers}")
+        self.batch_markers = batch_markers
+
+    def plan(self, source: Any) -> list[MarkerBatch]:
+        boundaries = tuple(
+            getattr(source, "shard_boundaries", None) or (0, source.n_markers)
+        )
+        b = self.batch_markers
+        out: list[MarkerBatch] = []
+        for sid, (base, end) in enumerate(zip(boundaries[:-1], boundaries[1:])):
+            for lo in range(base, end, b):
+                hi = min(lo + b, end)
+                out.append(
+                    MarkerBatch(
+                        index=len(out),
+                        lo=lo,
+                        hi=hi,
+                        source_id=sid,
+                        local_lo=lo - base,
+                        local_hi=hi - base,
+                    )
+                )
+        return out
+
+
+def double_buffer(items: Iterable[T], stage: Callable[[T], V]) -> Iterator[V]:
+    """Stage item k+1 (issue its async host->device transfer) before the
+    consumer finishes computing on item k — classic two-deep pipelining.
+
+    ``stage`` must only *launch* the transfer (``jnp.asarray`` /
+    ``jax.device_put`` are asynchronous on accelerators); the device runtime
+    overlaps the copy with whatever the consumer enqueued for item k.
+    """
+    staged: V | object = _SENTINEL
+    for item in items:
+        nxt = stage(item)
+        if staged is not _SENTINEL:
+            yield staged  # type: ignore[misc]
+        staged = nxt
+    if staged is not _SENTINEL:
+        yield staged  # type: ignore[misc]
 
 
 class Prefetcher:

@@ -1,0 +1,205 @@
+"""Multi-file genotype sources, batch planning, the engine registry, and
+the packaged CLI end to end."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import engines as E
+from repro.core.screening import GenomeScan, ScanConfig
+from repro.io import MultiFileSource, open_genotypes, plink
+from repro.io.multifile import expand_genotype_paths, natural_key
+from repro.io.synth import write_split_plink
+from repro.runtime.prefetch import BatchPlanner
+
+
+@pytest.fixture(scope="module")
+def split_beds(cohort, tmp_path_factory):
+    stem = str(tmp_path_factory.mktemp("multifile") / "cohort")
+    return write_split_plink(cohort, stem, n_shards=3)
+
+
+@pytest.fixture(scope="module")
+def single_source(cohort_files):
+    return plink.PlinkBed(cohort_files["bed"])
+
+
+def _cfg(**kw):
+    base = dict(batch_markers=128, block_m=64, block_n=128, block_p=64)
+    base.update(kw)
+    return ScanConfig(**base)
+
+
+# ------------------------------------------------------------------- sources
+
+
+def test_open_genotypes_glob_builds_multifile(split_beds):
+    pattern = split_beds[0].replace("chr1", "chr*")
+    src = open_genotypes(pattern)
+    assert isinstance(src, MultiFileSource)
+    assert src.n_shards == 3
+    assert src.n_markers == sum(plink.PlinkBed(p).n_markers for p in split_beds)
+
+
+def test_open_genotypes_comma_list(split_beds):
+    src = open_genotypes(",".join(split_beds))
+    assert isinstance(src, MultiFileSource)
+    assert [s.bed_path for s in src.sources] == split_beds
+
+
+def test_open_genotypes_single_path_unchanged(cohort_files):
+    assert isinstance(open_genotypes(cohort_files["bed"]), plink.PlinkBed)
+
+
+def test_natural_sort_orders_chromosomes():
+    paths = [f"c_chr{i}.bed" for i in (10, 2, 1, 22, 11)]
+    assert sorted(paths, key=natural_key) == [
+        "c_chr1.bed", "c_chr2.bed", "c_chr10.bed", "c_chr11.bed", "c_chr22.bed"
+    ]
+
+
+def test_glob_matching_nothing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="matched nothing"):
+        expand_genotype_paths(str(tmp_path / "nope_chr*.bed"))
+
+
+def test_mismatched_shards_rejected(cohort, split_beds, tmp_path):
+    odd = plink.write_plink(
+        str(tmp_path / "odd"), cohort.dosages[:10, :-3],
+        sample_ids=cohort.sample_ids[:-3],
+    )
+    with pytest.raises(ValueError, match="sample counts differ"):
+        MultiFileSource([plink.PlinkBed(split_beds[0]), plink.PlinkBed(odd)])
+
+
+def test_reads_match_across_boundaries(cohort, split_beds):
+    src = open_genotypes(",".join(split_beds))
+    assert src.n_markers == cohort.dosages.shape[0]
+    # a range spanning all three shards
+    got = src.read_dosages(100, src.n_markers - 50)
+    np.testing.assert_array_equal(got, cohort.dosages[100 : src.n_markers - 50])
+    packed = src.read_packed(100, src.n_markers - 50)
+    np.testing.assert_array_equal(
+        plink.decode_packed(packed, src.n_samples), cohort.dosages[100 : src.n_markers - 50]
+    )
+    assert src.marker_ids == cohort.marker_ids
+
+
+# ------------------------------------------------------------------- planner
+
+
+def test_planner_respects_shard_boundaries(split_beds):
+    src = open_genotypes(",".join(split_beds))
+    plan = BatchPlanner(100).plan(src)
+    bounds = src.shard_boundaries
+    covered = []
+    for b in plan:
+        assert b.hi - b.lo <= 100
+        assert bounds[b.source_id] <= b.lo and b.hi <= bounds[b.source_id + 1]
+        assert b.local_lo == b.lo - bounds[b.source_id]
+        assert b.local_hi == b.hi - bounds[b.source_id]
+        covered.append((b.lo, b.hi))
+    # full coverage, in order, no overlap
+    assert covered[0][0] == 0 and covered[-1][1] == src.n_markers
+    assert all(a[1] == b[0] for a, b in zip(covered[:-1], covered[1:]))
+    assert [b.index for b in plan] == list(range(len(plan)))
+
+
+def test_planner_plain_source_fixed_stride(single_source):
+    plan = BatchPlanner(128).plan(single_source)
+    assert len(plan) == (single_source.n_markers + 127) // 128
+    assert all(b.source_id == 0 and b.local_lo == b.lo for b in plan)
+
+
+# ---------------------------------------------------------- scan equivalence
+
+
+def test_multifile_scan_identical_to_single_dense(cohort, single_source, split_beds):
+    multi = open_genotypes(split_beds[0].replace("chr1", "chr*"))
+    a = GenomeScan(single_source, cohort.phenotypes, cohort.covariates, config=_cfg()).run()
+    b = GenomeScan(multi, cohort.phenotypes, cohort.covariates, config=_cfg()).run()
+    np.testing.assert_array_equal(a.best_nlp, b.best_nlp)
+    np.testing.assert_array_equal(a.best_marker, b.best_marker)
+    assert set(map(tuple, a.hits)) == set(map(tuple, b.hits))
+    np.testing.assert_array_equal(a.valid, b.valid)
+    np.testing.assert_allclose(a.maf, b.maf)
+    planted = {(m, t) for m, t, _ in cohort.effects}
+    assert planted <= set(map(tuple, b.hits))
+
+
+def test_multifile_scan_identical_to_single_fused(cohort, single_source, split_beds):
+    multi = open_genotypes(",".join(split_beds))
+    a = GenomeScan(single_source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(engine="fused")).run()
+    b = GenomeScan(multi, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(engine="fused")).run()
+    np.testing.assert_array_equal(a.best_nlp, b.best_nlp)
+    np.testing.assert_array_equal(a.best_marker, b.best_marker)
+    assert set(map(tuple, a.hits)) == set(map(tuple, b.hits))
+
+
+# ------------------------------------------------------------------ registry
+
+
+def test_engine_registry_roundtrip():
+    assert set(E.available_engines()) >= {"dense", "fused"}
+    assert isinstance(E.get_engine("dense"), E.DenseEngine)
+    assert isinstance(E.get_engine("fused"), E.FusedEngine)
+
+
+def test_engine_registry_unknown_lists_available():
+    with pytest.raises(ValueError, match="dense"):
+        E.get_engine("warp-drive")
+
+
+def test_engine_registry_custom_engine_drives_scan(cohort, single_source):
+    @E.register_engine("dense-test-alias")
+    class AliasEngine(E.DenseEngine):
+        pass
+
+    try:
+        res = GenomeScan(
+            single_source, cohort.phenotypes, cohort.covariates,
+            config=_cfg(engine="dense-test-alias"),
+        ).run()
+        planted = {(m, t) for m, t, _ in cohort.effects}
+        assert planted <= {(m, t) for m, t in res.hits}
+    finally:
+        E._REGISTRY.pop("dense-test-alias")
+
+
+def test_fused_engine_rejects_sample_mode(cohort, single_source):
+    with pytest.raises(ValueError, match="marker x phenotype"):
+        GenomeScan(single_source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(engine="fused", mode="sample"))
+
+
+# ----------------------------------------------------------------------- CLI
+
+
+def test_cli_end_to_end_multifile(cohort, cohort_files, split_beds, tmp_path):
+    from repro.launch.gwas import main
+
+    out = tmp_path / "results"
+    main([
+        "--genotypes", split_beds[0].replace("chr1", "chr*"),
+        "--pheno", cohort_files["pheno"],
+        "--covar", cohort_files["cov"],
+        "--out", str(out),
+        "--batch-markers", "128",
+    ])
+    summary = json.loads((out / "summary.json").read_text())
+    assert summary["markers"] == cohort.dosages.shape[0]
+    assert summary["traits"] == cohort.phenotypes.shape[1]
+    assert summary["genotype_shards"] == 3
+    assert summary["hits"] >= len(cohort.effects)
+
+    lines = (out / "hits.tsv").read_text().strip().splitlines()
+    assert lines[0].split("\t") == ["marker", "trait", "r", "t", "neglog10p"]
+    found = {(row.split("\t")[0], row.split("\t")[1]) for row in lines[1:]}
+    for m, t, _ in cohort.effects:
+        assert (cohort.marker_ids[m], f"trait{t}") in found
+
+    best = (out / "per_trait_best.tsv").read_text().strip().splitlines()
+    assert len(best) == 1 + cohort.phenotypes.shape[1]

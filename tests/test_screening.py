@@ -65,6 +65,25 @@ def test_crash_resume_identical(source, cohort, tmp_path):
     assert res.hits.shape == full.hits.shape
 
 
+def test_resume_preserves_lambda_gc(source, cohort, tmp_path):
+    ckdir = str(tmp_path / "ck")
+    cfg = _cfg(engine="dense", checkpoint_dir=ckdir)
+    full = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=cfg).run()
+    # lose two batches: lambda must come from persisted probes + recompute
+    mpath = os.path.join(ckdir, "manifest.json")
+    mani = json.load(open(mpath))
+    for k in ["0", "2"]:
+        mani["completed"].pop(k)
+    json.dump(mani, open(mpath, "w"))
+    partial = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=cfg).run()
+    assert abs(partial.lambda_gc - full.lambda_gc) < 1e-6
+    # fully-resumed scan (zero recomputed batches) must not degrade either
+    resumed = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=cfg).run()
+    assert abs(resumed.lambda_gc - full.lambda_gc) < 1e-6
+    np.testing.assert_allclose(resumed.best_nlp, full.best_nlp, atol=1e-6)
+    assert set(map(tuple, resumed.hits)) == set(map(tuple, full.hits))
+
+
 def test_checkpoint_refuses_foreign_scan(source, cohort, tmp_path):
     ckdir = str(tmp_path / "ck")
     GenomeScan(source, cohort.phenotypes, cohort.covariates,
