@@ -4,15 +4,20 @@
     throughput    — Fig. 2 right / §3.2: wall time vs panel width P, panel
                     engine vs per-trait loop (the fastGWA-usage analogue)
     engines       — dense (paper-faithful) vs fused 2-bit path, equal stats
+    lmm           — mixed-model wing: GRM/eigen/REML setup amortization vs
+                    the per-marker rotation overhead (the fastGWA analogue)
     kernels       — us/call of the association GEMM across batch geometries
     scaling_n     — runtime vs cohort size N (linear, §2.2)
 
-Prints ``name,us_per_call,derived`` CSV rows.  CPU numbers contextualize the
+Prints ``name,us_per_call,derived`` CSV rows and writes the same data as
+``BENCH_scan.json`` (per-section us/call + derived metrics) so the perf
+trajectory is machine-diffable across PRs.  CPU numbers contextualize the
 *shape* of the paper's claims (sub-linear P scaling, engine equivalence);
 absolute TPU throughput comes from the dry-run roofline (EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -25,11 +30,15 @@ from repro.core import residualize as Rz
 from repro.core.screening import GenomeScan, ScanConfig
 from repro.io import plink, synth
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[dict] = []
+_SECTION = "misc"
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    ROWS.append((name, us_per_call, derived))
+    ROWS.append(
+        {"section": _SECTION, "name": name, "us_per_call": round(us_per_call, 1),
+         "derived": derived}
+    )
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -142,6 +151,50 @@ def bench_engines() -> None:
     emit("engine_agreement", 0.0, f"max_abs_dnlp={agree:.2e}")
 
 
+def bench_lmm() -> None:
+    """Mixed-model wing: one-time setup (GRM stream + eigendecomposition +
+    REML) vs the steady-state scan.  The derived columns are the ones that
+    matter for capacity planning: setup amortizes over the whole genome, the
+    rotation GEMM is the per-marker overhead vs the OLS scan."""
+    import os
+    import tempfile
+
+    co = synth.make_structured_cohort(
+        n_samples=512, n_markers=2048, n_traits=32, n_pops=3, fst=0.1,
+        h2=0.4, n_causal=4, seed=7,
+    )
+    d = tempfile.mkdtemp()
+    synth.write_split_plink(co, os.path.join(d, "bench"), n_shards=4)
+    from repro.io import open_genotypes
+
+    src = open_genotypes(os.path.join(d, "bench_chr*.bed"))
+    m = co.dosages.shape[0]
+
+    base = dict(batch_markers=512, block_m=64, block_n=128, block_p=64)
+    ols = GenomeScan(src, co.phenotypes, co.covariates,
+                     config=ScanConfig(engine="dense", **base))
+    t0 = time.perf_counter()                     # scan only: comparable to
+    res_ols = ols.run()                          # the lmm_*_scan rows below
+    dt_ols = time.perf_counter() - t0
+    emit("lmm_baseline_ols_scan", dt_ols * 1e6, f"lambda_gc={res_ols.lambda_gc:.3f}")
+
+    for loco in (False, True):
+        tag = "loco" if loco else "global"
+        t0 = time.perf_counter()
+        scan = GenomeScan(src, co.phenotypes, co.covariates,
+                          config=ScanConfig(engine="lmm", loco=loco, **base))
+        dt_setup = time.perf_counter() - t0          # GRM + eigh + REML + rotation
+        t0 = time.perf_counter()
+        res = scan.run()
+        dt_scan = time.perf_counter() - t0
+        emit(f"lmm_{tag}_setup", dt_setup * 1e6,
+             f"scopes={res.lmm_info['scopes']}")
+        emit(f"lmm_{tag}_scan", dt_scan * 1e6,
+             f"markers_per_s={m / dt_scan:.0f}")
+        emit(f"lmm_{tag}_overhead_vs_ols", 0.0,
+             f"scan_slowdown={dt_scan / dt_ols:.2f}x,lambda_gc={res.lambda_gc:.3f}")
+
+
 def bench_kernels() -> None:
     """Association GEMM across geometries (us/call + achieved GFLOP/s)."""
     rng = np.random.default_rng(0)
@@ -178,12 +231,29 @@ def bench_scaling_n() -> None:
 
 
 def main() -> None:
+    global _SECTION
     print("name,us_per_call,derived")
-    bench_concordance()
-    bench_throughput()
-    bench_engines()
-    bench_kernels()
-    bench_scaling_n()
+    sections = [
+        ("concordance", bench_concordance),
+        ("throughput", bench_throughput),
+        ("engines", bench_engines),
+        ("lmm", bench_lmm),
+        ("kernels", bench_kernels),
+        ("scaling_n", bench_scaling_n),
+    ]
+    for name, fn in sections:
+        _SECTION = name
+        fn()
+    payload = {
+        "schema": 1,
+        "device": jax.devices()[0].platform,
+        "jax": jax.__version__,
+        "sections": sorted({r["section"] for r in ROWS}),
+        "rows": ROWS,
+    }
+    with open("BENCH_scan.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote BENCH_scan.json ({len(ROWS)} rows)")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,8 @@ Public surface:
     stats                                               — t/p epilogue, BH, lambda_GC
     multivariate                                        — panel-level screens
     kinship                                             — relatedness exclusion
+    grm, lmm                                            — mixed-model wing (streamed GRM,
+                                                          REML + one-time rotation)
     screening                                           — the streaming genome-scan driver
 """
 from repro.core.association import (

@@ -18,6 +18,8 @@ exported from ``core.screening``) for tests and external harnesses.
 """
 from __future__ import annotations
 
+import dataclasses
+import threading
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -38,11 +40,13 @@ __all__ = [
     "ScanEngine",
     "DenseEngine",
     "FusedEngine",
+    "LMMEngine",
     "register_engine",
     "get_engine",
     "available_engines",
     "build_dense_step",
     "build_fused_step",
+    "build_lmm_step",
 ]
 
 
@@ -66,6 +70,13 @@ class EngineContext:
     whitening: jax.Array | None = None
     keep: np.ndarray | None = None     # host-side sample mask (None: keep all)
     excluded_samples: int = 0
+    # mixed-model knobs (consumed by the lmm engine only)
+    loco: bool = False
+    grm_method: str = "std"
+    grm_batch_markers: int = 4096
+    lmm_delta: float | None = None
+    lmm_epilogue: str = "dense"
+    io_workers: int = 2
 
 
 @dataclass
@@ -81,12 +92,36 @@ class HostBatch:
 
 
 class ScanEngine:
-    """Engine interface; subclasses register with ``@register_engine``."""
+    """Engine interface; subclasses register with ``@register_engine``.
+
+    ``uses_global_panel`` tells the driver whether the step consumes the
+    driver-prepared residualized panel as its trailing argument (OLS
+    engines) or carries its own panel(s) inside ``device_args`` (the lmm
+    engine, whose panel varies per LOCO scope).
+    """
 
     name: str = "?"
+    uses_global_panel: bool = True
 
     def validate(self, ctx: EngineContext) -> None:
         """Raise ValueError for unsupported (engine, context) combinations."""
+
+    def setup_scan(
+        self,
+        source: Any,
+        phenotypes: np.ndarray,
+        covariates: np.ndarray | None,
+        ctx: EngineContext,
+    ) -> dict[str, Any] | None:
+        """Optional amortized per-scan setup (after ``validate``, before
+        ``build_step``).  May return overrides for the driver:
+        ``{"dof": int, "info": dict}``.  Default: nothing to do."""
+        return None
+
+    def state_fingerprint(self) -> str | None:
+        """Hashable summary of engine state a resume must match (e.g. the
+        GRM spectrum); folded into the checkpoint fingerprint when set."""
+        return None
 
     def build_step(self, ctx: EngineContext) -> Callable[..., dict[str, jax.Array]]:
         raise NotImplementedError
@@ -132,6 +167,7 @@ def build_dense_step(
     mesh: Mesh | None = None,
     mode: str = "mp",
     hit_threshold: float = 7.301,
+    maf_min: float = 0.0,
     q_basis: jax.Array | None = None,
     multivariate: bool = False,
     n_traits_eff: float = 1.0,
@@ -149,14 +185,15 @@ def build_dense_step(
         res = assoc_from_standardized(
             g_std, y_std, n_samples=n_samples, n_covariates=n_covariates, options=options
         )
-        mask = ms.valid[:, None]
+        valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
+        mask = valid[:, None]
         nlp = jnp.where(mask, res.neglog10p, 0.0)
         out = {
             "r": jnp.where(mask, res.r, 0.0),
             "t": jnp.where(mask, res.t, 0.0),
             "nlp": nlp,
             "maf": ms.maf,
-            "valid": ms.valid,
+            "valid": valid,
             "batch_best_nlp": jnp.max(nlp, axis=0),
             "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
             "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
@@ -281,6 +318,98 @@ def build_fused_step(
     )
 
 
+def build_lmm_step(
+    *,
+    n_samples: int,
+    n_covariates: int,
+    options: AssocOptions,
+    mesh: Mesh | None = None,
+    hit_threshold: float = 7.301,
+    maf_min: float = 0.0,
+    epilogue: str = "dense",
+    block_m: int = 256,
+    block_p: int = 256,
+) -> Callable[..., dict[str, jax.Array]]:
+    """Mixed-model step: standardize -> rotate into the (whitened) GRM
+    eigenbasis -> project out the whitened design -> the unchanged
+    correlation epilogue (DESIGN.md §9).
+
+    Signature: ``step(g_raw, rotation, qhat, y_std)`` — the rotation matrix
+    and panel ride in ``device_args`` because they vary per LOCO scope.
+    The GLS dof is structurally ``N - 2 - q`` (the whitened design counts
+    its intercept), so the epilogue always runs in exact-dof mode.
+
+    ``epilogue="dense"`` computes t/p in plain XLA; ``"fused"`` routes
+    Eq. 3 through the standalone Pallas t-statistic kernel
+    (``kernels.tstat``) — identical numbers, exercised by the oracle suite.
+    """
+    if epilogue not in ("dense", "fused"):
+        raise ValueError(f"unknown lmm epilogue {epilogue!r}")
+    opts = dataclasses.replace(options, dof_mode="exact")
+    dof = opts.dof(n_samples, n_covariates)
+
+    from repro.core.association import correlation
+    from repro.core.residualize import residualize_genotypes
+
+    def step(g_raw, rotation, qhat, y_std):
+        g_std, ms = standardize_genotype_batch(g_raw)
+        g_rot = jax.lax.dot_general(
+            g_std, rotation, (((1,), (0,)), ((), ())),
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32,
+        )
+        g_fin = residualize_genotypes(g_rot, qhat)
+        if epilogue == "fused":
+            from repro.kernels.tstat import tstat
+
+            r = jnp.clip(
+                correlation(g_fin, y_std, n_samples, precision=opts.precision),
+                -1.0, 1.0,
+            )
+            t = tstat(r, dof, block_m=block_m, block_p=block_p)
+            nlp = _stats.neglog10_p_from_t(t, dof)
+        else:
+            res = assoc_from_standardized(
+                g_fin, y_std, n_samples=n_samples, n_covariates=n_covariates,
+                options=opts,
+            )
+            r, t, nlp = res.r, res.t, res.neglog10p
+        valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
+        mask = valid[:, None]
+        nlp = jnp.where(mask, nlp, 0.0)
+        return {
+            "r": jnp.where(mask, r, 0.0),
+            "t": jnp.where(mask, t, 0.0),
+            "nlp": nlp,
+            "maf": ms.maf,
+            "valid": valid,
+            "batch_best_nlp": jnp.max(nlp, axis=0),
+            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
+            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
+        }
+
+    if mesh is None:
+        return jax.jit(step)
+
+    sh = gwas_shardings(mesh, mode="mp")
+    rep = NamedSharding(mesh, P())
+    model_vec = NamedSharding(mesh, P("model"))
+    return jax.jit(
+        step,
+        in_shardings=(sh["g"], rep, rep, sh["y"]),
+        out_shardings={
+            "r": sh["out"],
+            "t": sh["out"],
+            "nlp": sh["out"],
+            "maf": sh["marker_vec"],
+            "valid": sh["marker_vec"],
+            "batch_best_nlp": model_vec,
+            "batch_best_row": model_vec,
+            "hit_count": rep,
+        },
+    )
+
+
 # ------------------------------------------------------------------- engines
 
 
@@ -297,6 +426,7 @@ class DenseEngine(ScanEngine):
             mesh=ctx.mesh,
             mode=ctx.mode,
             hit_threshold=ctx.hit_threshold,
+            maf_min=ctx.maf_min,
             q_basis=ctx.q_basis,
             multivariate=ctx.multivariate,
             n_traits_eff=ctx.n_traits_eff,
@@ -360,4 +490,130 @@ class FusedEngine(ScanEngine):
             (packed, mean.reshape(-1, 1), inv_std.reshape(-1, 1), valid),
             host_maf=maf[:m_batch],
             host_valid=valid[:m_batch],
+        )
+
+
+@register_engine("lmm")
+class LMMEngine(ScanEngine):
+    """Linear mixed model: streamed GRM + one-time rotation (core.grm,
+    core.lmm).  ``setup_scan`` amortizes the expensive work — GRM pass,
+    eigendecomposition, REML — once per scan (per LOCO chromosome);
+    ``prepare_batch`` then only reads dosages and attaches the scope's
+    device-cached rotation/basis/panel, so the per-batch device cost is one
+    extra (M, N) x (N, N) GEMM on top of the OLS scan."""
+
+    uses_global_panel = False
+
+    def __init__(self) -> None:
+        self._scopes: dict[int, Any] = {}       # scope -> core.lmm.RotatedPanel
+        self._dev: dict[int, tuple] = {}        # scope -> staged device arrays
+        self._dev_lock = threading.Lock()
+        self._loco = False
+        self._fingerprint: str | None = None
+        self._dof: int | None = None
+        self._n_cov: int | None = None
+
+    def validate(self, ctx: EngineContext) -> None:
+        if ctx.mode != "mp":
+            raise ValueError("lmm engine supports marker x phenotype sharding only")
+        if ctx.multivariate:
+            raise ValueError("lmm engine and the multivariate screen are exclusive")
+        if ctx.lmm_epilogue not in ("dense", "fused"):
+            raise ValueError(f"unknown lmm epilogue {ctx.lmm_epilogue!r}")
+
+    def setup_scan(self, source, phenotypes, covariates, ctx: EngineContext):
+        from repro.core.grm import grm_spectrum, spectrum_fingerprint, stream_grm
+        from repro.core.lmm import rotate_panel
+
+        grm = stream_grm(
+            source,
+            keep=ctx.keep if ctx.excluded_samples else None,
+            batch_markers=ctx.grm_batch_markers,
+            method=ctx.grm_method,
+            maf_min=ctx.maf_min,
+            io_workers=ctx.io_workers,
+        )
+        if ctx.loco and grm.n_shards < 2:
+            raise ValueError(
+                "loco=True needs a per-chromosome fileset (>= 2 genotype shards)"
+            )
+        scopes = list(range(grm.n_shards)) if ctx.loco else [-1]
+        spectra: dict[int, np.ndarray] = {}
+        for sid in scopes:
+            k = grm.loco(sid) if ctx.loco else grm.full()
+            s, u = grm_spectrum(k)
+            spectra[sid] = s
+            self._scopes[sid] = rotate_panel(
+                phenotypes, covariates, s, u, delta=ctx.lmm_delta
+            )
+        self._loco = ctx.loco
+        first = next(iter(self._scopes.values()))
+        self._dof = first.dof
+        self._n_cov = first.n_covariates
+        deltas = {sid: p.delta for sid, p in self._scopes.items()}
+        # Deltas enter the fingerprint rounded to the same significant-digit
+        # budget as the spectrum hash, so a resume on a different BLAS build
+        # (last-bit REML jitter) is not spuriously refused.
+        delta_sig = [(sid, f"{d:.6g}") for sid, d in sorted(deltas.items())]
+        self._fingerprint = f"{spectrum_fingerprint(spectra)}:{delta_sig}"
+        info: dict[str, Any] = {
+            "grm_method": grm.method,
+            "scopes": len(scopes),
+            "loco": ctx.loco,
+            "delta": deltas if ctx.loco else first.delta,
+            "spectrum_hash": spectrum_fingerprint(spectra),
+        }
+        if first.reml is not None:
+            info["h2"] = first.reml.h2
+            info["delta_per_trait"] = first.reml.delta
+        return {"dof": self._dof, "info": info}
+
+    def state_fingerprint(self) -> str | None:
+        return self._fingerprint
+
+    def build_step(self, ctx: EngineContext) -> Callable[..., dict[str, jax.Array]]:
+        if self._dof is None:
+            raise RuntimeError("setup_scan must run before build_step")
+        return build_lmm_step(
+            n_samples=ctx.n_samples,
+            n_covariates=self._n_cov,
+            options=ctx.options,
+            mesh=ctx.mesh,
+            hit_threshold=ctx.hit_threshold,
+            maf_min=ctx.maf_min,
+            epilogue=ctx.lmm_epilogue,
+            block_m=ctx.block_m,
+            block_p=ctx.block_p,
+        )
+
+    # Scopes arrive shard-sequentially (the planner never interleaves
+    # shards), but the prefetch window may straddle one boundary — so two
+    # resident scopes bound device memory at ~2 (N,N) rotations, not one
+    # per chromosome.
+    _DEV_SCOPES_MAX = 2
+
+    def _scope_arrays(self, sid: int) -> tuple:
+        """Per-scope (rotation, qhat, y) staged to device once and shared by
+        every batch of that scope (prepare_batch runs on worker threads),
+        with LRU eviction so a 22-chromosome LOCO scan never holds all 22
+        rotation matrices on device at once."""
+        with self._dev_lock:
+            if sid not in self._dev:
+                p = self._scopes[sid]
+                while len(self._dev) >= self._DEV_SCOPES_MAX:
+                    self._dev.pop(next(iter(self._dev)))
+                self._dev[sid] = (
+                    jnp.asarray(p.rotation),
+                    jnp.asarray(p.qhat),
+                    jnp.asarray(p.y),
+                )
+            return self._dev[sid]
+
+    def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
+        dosages = source.read_dosages(batch.lo, batch.hi)
+        if ctx.excluded_samples:
+            dosages = dosages[:, ctx.keep]
+        rotation, qhat, y = self._scope_arrays(batch.source_id if self._loco else -1)
+        return HostBatch(
+            batch, (np.asarray(dosages, np.float32), rotation, qhat, y)
         )

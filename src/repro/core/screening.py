@@ -3,6 +3,9 @@
     panel setup (once)                      Eq. 1, amortized across the scan
       -> relatedness exclusion (optional)   core.kinship
       -> covariate basis + residualize      core.residualize
+      -> engine setup (optional)            engine.setup_scan — the lmm
+         (streamed GRM, eigh, REML,         engine's amortized work lives
+          one-time panel rotation)          here (core.grm / core.lmm, §9)
     marker stream (planned + batched)       runtime.prefetch.BatchPlanner
       -> host: decode / repack + stats      engine.prepare_batch (prefetch threads)
       -> staging: async host->device copy   runtime.prefetch.double_buffer
@@ -37,6 +40,7 @@ from repro.core.engines import (
     ScanEngine,
     build_dense_step,
     build_fused_step,
+    build_lmm_step,
     get_engine,
 )
 from repro.core.residualize import covariate_basis, residualize_and_standardize
@@ -52,7 +56,14 @@ from repro.core.sinks import (
 from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
 from repro.runtime.prefetch import BatchPlanner, Prefetcher, double_buffer
 
-__all__ = ["ScanConfig", "ScanResult", "GenomeScan", "build_dense_step", "build_fused_step"]
+__all__ = [
+    "ScanConfig",
+    "ScanResult",
+    "GenomeScan",
+    "build_dense_step",
+    "build_fused_step",
+    "build_lmm_step",
+]
 
 
 @dataclass(frozen=True)
@@ -72,6 +83,12 @@ class ScanConfig:
     block_n: int = 512
     block_p: int = 256
     input_dtype: str = "fp32"      # fused engine GEMM input: "fp32" | "bf16"
+    # mixed-model wing (engine="lmm"; DESIGN.md §9)
+    loco: bool = False             # leave-one-chromosome-out GRM per shard
+    grm_method: str = "std"        # "std" (GCTA) | "centered" (EMMAX)
+    grm_batch_markers: int = 4096  # marker batch of the streamed GRM pass
+    lmm_delta: float | None = None # pin se^2/sg^2 (skips the REML fit)
+    lmm_epilogue: str = "dense"    # t/p epilogue: "dense" XLA | "fused" Pallas
 
     def fingerprint_payload(self) -> dict:
         d = dataclasses.asdict(self)
@@ -96,6 +113,7 @@ class ScanResult:
     lambda_gc: float           # genomic control on a null-trait subsample
     omnibus_nlp: np.ndarray | None = None   # (M,) multivariate screen
     excluded_samples: int = 0
+    lmm_info: dict | None = None  # mixed-model diagnostics (delta, h2, ...)
 
 
 class GenomeScan:
@@ -133,23 +151,33 @@ class GenomeScan:
 
         self.n_samples = int(self._keep.sum())
         self.n_traits = phenotypes.shape[1]
-        self._q = covariate_basis(
-            jnp.asarray(covariates) if covariates is not None else None, self.n_samples
-        )
-        self.panel = residualize_and_standardize(jnp.asarray(phenotypes), self._q)
-        self.n_covariates = self.panel.n_covariates
-        self.dof = config.options.dof(self.n_samples, self.n_covariates)
+        self.engine: ScanEngine = get_engine(config.engine)
 
         self._n_traits_eff = float(self.n_traits)
-        self._y = self.panel.y
         self._whitening = None
-        if config.multivariate:
-            from repro.core import multivariate as mv
+        if self.engine.uses_global_panel:
+            # OLS panel prep (Eq. 1), amortized once.  Engines that build
+            # their own panel (lmm: rotated per LOCO scope in setup_scan)
+            # skip this entirely — no (N, P) array is kept alive for them.
+            self._q = covariate_basis(
+                jnp.asarray(covariates) if covariates is not None else None,
+                self.n_samples,
+            )
+            self.panel = residualize_and_standardize(jnp.asarray(phenotypes), self._q)
+            self.n_covariates = self.panel.n_covariates
+            self._y = self.panel.y
+            if config.multivariate:
+                from repro.core import multivariate as mv
 
-            self._whitening, eig = mv.whiten_panel(self.panel.y)
-            self._n_traits_eff = float(mv.effective_tests(eig))
-
-        self.engine: ScanEngine = get_engine(config.engine)
+                self._whitening, eig = mv.whiten_panel(self.panel.y)
+                self._n_traits_eff = float(mv.effective_tests(eig))
+        else:
+            self._q = None
+            self.panel = None
+            self._y = None
+            cov = None if covariates is None else np.asarray(covariates)
+            self.n_covariates = 0 if cov is None else (1 if cov.ndim == 1 else cov.shape[1])
+        self.dof = config.options.dof(self.n_samples, self.n_covariates)
         self._ctx = EngineContext(
             n_samples=self.n_samples,
             n_covariates=self.n_covariates,
@@ -167,8 +195,22 @@ class GenomeScan:
             whitening=self._whitening,
             keep=self._keep,
             excluded_samples=self.excluded_samples,
+            loco=config.loco,
+            grm_method=config.grm_method,
+            grm_batch_markers=config.grm_batch_markers,
+            lmm_delta=config.lmm_delta,
+            lmm_epilogue=config.lmm_epilogue,
+            io_workers=config.io_workers,
         )
         self.engine.validate(self._ctx)
+        # Amortized engine setup (LMM: streamed GRM + eigendecomposition +
+        # REML + panel rotation).  Engines may override the scan dof and
+        # contribute diagnostics to the result.
+        self.lmm_info: dict | None = None
+        setup = self.engine.setup_scan(source, np.asarray(phenotypes), covariates, self._ctx)
+        if setup:
+            self.dof = int(setup.get("dof", self.dof))
+            self.lmm_info = setup.get("info")
         self._step = self.engine.build_step(self._ctx)
         self.planner = BatchPlanner(config.batch_markers)
         self.plan = self.planner.plan(source)
@@ -198,6 +240,10 @@ class GenomeScan:
         ckpt: ScanCheckpoint | None = None
         todo = self.plan
         if cfg.checkpoint_dir:
+            # Engine state (e.g. the LMM's GRM spectrum hash) is part of the
+            # scan identity: resuming against a different GRM or refitted
+            # variance components would mix incompatible statistics.
+            engine_state = self.engine.state_fingerprint()
             fp = config_fingerprint(
                 {
                     **cfg.fingerprint_payload(),
@@ -210,6 +256,7 @@ class GenomeScan:
                     "shard_boundaries": list(
                         getattr(self.source, "shard_boundaries", (0, m_total))
                     ),
+                    **({"engine_state": engine_state} if engine_state else {}),
                 }
             )
             ckpt = ScanCheckpoint(cfg.checkpoint_dir, fingerprint=fp, n_batches=self.n_batches)
@@ -218,7 +265,10 @@ class GenomeScan:
                 todo = [b for b in self.plan if b.index in pending]
 
         sinks = self._make_sinks(ckpt)
-        y_dev = jnp.asarray(self._y)
+        # OLS engines take the driver's residualized panel as the trailing
+        # step argument; the lmm engine carries per-scope panels inside
+        # device_args instead (they differ per LOCO chromosome).
+        extra = (jnp.asarray(self._y),) if self.engine.uses_global_panel else ()
 
         prefetched = Prefetcher(
             todo,
@@ -233,7 +283,7 @@ class GenomeScan:
             return host_batch, tuple(jnp.asarray(a) for a in host_batch.device_args)
 
         for host_batch, dev_args in double_buffer(prefetched, stage):
-            out = self._step(*dev_args, y_dev)
+            out = self._step(*dev_args, *extra)
             view = BatchView(host_batch, out, self.n_traits)
             payload: dict[str, np.ndarray] = {}
             for sink in sinks:
@@ -257,5 +307,6 @@ class GenomeScan:
             n_traits=self.n_traits,
             dof=self.dof,
             excluded_samples=self.excluded_samples,
+            lmm_info=self.lmm_info,
             **fields,
         )

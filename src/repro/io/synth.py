@@ -16,7 +16,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["SyntheticCohort", "make_cohort", "write_cohort_files", "write_split_plink"]
+__all__ = [
+    "SyntheticCohort",
+    "make_cohort",
+    "make_structured_cohort",
+    "write_cohort_files",
+    "write_split_plink",
+]
 
 
 @dataclass
@@ -29,6 +35,8 @@ class SyntheticCohort:
     maf: np.ndarray                 # (M,)
     effects: list[tuple[int, int, float]]  # (marker, trait, beta)
     related_pairs: list[tuple[int, int]] = field(default_factory=list)
+    populations: np.ndarray | None = None  # (N,) int subpopulation labels
+    h2: float | None = None                # planted polygenic heritability
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -98,6 +106,76 @@ def make_cohort(
         maf=maf,
         effects=effects,
         related_pairs=related_pairs,
+    )
+
+
+def make_structured_cohort(
+    *,
+    n_samples: int = 160,
+    n_markers: int = 120,
+    n_traits: int = 4,
+    n_covariates: int = 2,
+    n_pops: int = 2,
+    fst: float = 0.1,
+    h2: float = 0.4,
+    n_causal: int = 3,
+    effect_size: float = 0.5,
+    maf_range: tuple[float, float] = (0.1, 0.5),
+    seed: int = 0,
+) -> SyntheticCohort:
+    """A cohort with *population structure* and a *polygenic background* —
+    the confounded workload the mixed model exists for.
+
+    Genotypes follow the Balding-Nichols model: each marker has an
+    ancestral frequency, and each of ``n_pops`` subpopulations draws its
+    own frequency from ``Beta`` with divergence ``fst``.  Phenotypes carry
+    a polygenic term ``Z a`` built from ALL markers (variance ``h2``) plus
+    ``N(0, 1 - h2)`` noise, so the genotype-derived GRM is the true trait
+    covariance — an OLS scan inflates (lambda_GC >> 1) while the LMM scan
+    calibrates.  Planted fixed effects ride on top for power checks.
+
+    No missingness by design: the oracle tests compare against exact GLS,
+    and imputation semantics would blur the comparison.
+    """
+    rng = np.random.default_rng(seed)
+    p_anc = rng.uniform(*maf_range, size=n_markers)
+    a = p_anc * (1.0 - fst) / fst
+    b = (1.0 - p_anc) * (1.0 - fst) / fst
+    p_pop = rng.beta(a[None, :], b[None, :], size=(n_pops, n_markers))
+    p_pop = np.clip(p_pop, 0.01, 0.99)
+    pops = rng.integers(0, n_pops, size=n_samples)
+    dosages = rng.binomial(2, p_pop[pops].T).astype(np.int8)  # (M, N)
+
+    g_float = dosages.astype(np.float64)
+    g_std = g_float - g_float.mean(axis=1, keepdims=True)
+    g_std /= np.maximum(g_float.std(axis=1), 1e-9)[:, None]
+
+    covariates = rng.normal(size=(n_samples, n_covariates)).astype(np.float32)
+    # Polygenic background: u = Z^T a with Var(u_i) ~ h2 across samples.
+    poly = g_std.T @ rng.normal(scale=np.sqrt(h2 / n_markers), size=(n_markers, n_traits))
+    noise = rng.normal(scale=np.sqrt(max(1.0 - h2, 1e-6)), size=(n_samples, n_traits))
+    cov_load = rng.normal(scale=0.3, size=(n_covariates, n_traits))
+    phenotypes = (poly + noise + covariates.astype(np.float64) @ cov_load).astype(np.float32)
+
+    effects: list[tuple[int, int, float]] = []
+    causal = rng.choice(n_markers, size=min(n_causal, n_markers), replace=False)
+    for i, m in enumerate(causal):
+        trait = int(i % n_traits)
+        beta = float(effect_size * (1.0 if i % 2 == 0 else -1.0))
+        phenotypes[:, trait] += (beta * g_std[m]).astype(np.float32)
+        effects.append((int(m), trait, beta))
+
+    af = g_float.mean(axis=1) / 2.0
+    return SyntheticCohort(
+        dosages=dosages,
+        covariates=covariates,
+        phenotypes=phenotypes,
+        sample_ids=[f"S{i:06d}" for i in range(n_samples)],
+        marker_ids=[f"rs{i:08d}" for i in range(n_markers)],
+        maf=np.minimum(af, 1.0 - af).astype(np.float32),
+        effects=effects,
+        populations=pops,
+        h2=h2,
     )
 
 

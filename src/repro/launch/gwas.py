@@ -8,6 +8,11 @@
     # per-chromosome fileset: glob (quote it!) or comma list
     python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' ...
 
+    # mixed model (population structure / relatedness): streamed GRM +
+    # one-time rotation; --loco subtracts each chromosome's GRM share
+    python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' \
+        --engine lmm --loco ...
+
 Accepts PLINK (.bed), BGEN (.bgen) and NumPy (.npy/.npz) genotype
 containers — one file, a glob, or a comma-separated list opened as one
 contiguous multi-file source; aligns tables by sample id; writes a hits
@@ -42,6 +47,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dof-mode", default="paper", choices=["paper", "exact"])
     ap.add_argument("--precision", default="fp32", choices=["fp32", "bf16"])
     ap.add_argument("--batch-markers", type=int, default=8192)
+    lmm = ap.add_argument_group("mixed model (--engine lmm)")
+    lmm.add_argument("--loco", action="store_true",
+                     help="leave-one-chromosome-out GRM (needs a multi-file fileset)")
+    lmm.add_argument("--grm-method", default="std", choices=["std", "centered"])
+    lmm.add_argument("--grm-batch-markers", type=int, default=4096)
+    lmm.add_argument("--lmm-delta", type=float, default=None,
+                     help="pin the variance ratio se^2/sg^2 (skip the REML fit)")
+    lmm.add_argument("--lmm-epilogue", default="dense", choices=["dense", "fused"])
     ap.add_argument("--maf-min", type=float, default=0.0)
     ap.add_argument("--hit-threshold", type=float, default=7.301,
                     help="-log10 p threshold (default genome-wide 5e-8)")
@@ -79,6 +92,11 @@ def main(argv=None) -> None:
         multivariate=args.multivariate,
         checkpoint_dir=args.checkpoint_dir,
         io_workers=args.io_workers,
+        loco=args.loco,
+        grm_method=args.grm_method,
+        grm_batch_markers=args.grm_batch_markers,
+        lmm_delta=args.lmm_delta,
+        lmm_epilogue=args.lmm_epilogue,
     )
     scan = GenomeScan(source, y, c, config=config)
     t0 = time.time()
@@ -110,6 +128,22 @@ def main(argv=None) -> None:
         "engine": args.engine,
         "genotype_shards": getattr(source, "n_shards", 1),
     }
+    if result.lmm_info:
+        info = result.lmm_info
+        summary["lmm"] = {
+            "grm_method": info["grm_method"],
+            "loco": info["loco"],
+            "scopes": info["scopes"],
+            "spectrum_hash": info["spectrum_hash"],
+            "delta": (
+                {str(k): float(v) for k, v in info["delta"].items()}
+                if isinstance(info["delta"], dict) else float(info["delta"])
+            ),
+            **(
+                {"h2_per_trait": np.asarray(info["h2"]).round(4).tolist()}
+                if "h2" in info else {}
+            ),
+        }
     with open(os.path.join(args.out, "summary.json"), "w") as f:
         json.dump(summary, f, indent=1)
     print(json.dumps(summary, indent=1))

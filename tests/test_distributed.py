@@ -54,6 +54,16 @@ _CHILD = textwrap.dedent(
              jnp.asarray(inv.reshape(-1,1)), jnp.asarray(valid), jnp.asarray(y))
     out["fused_err"] = float(jnp.abs(a["t"] - b["t"]).max())
 
+    # ---- lmm step (rotation + whitened projection + epilogue) under pjit
+    from repro.core.screening import build_lmm_step
+    a_rot = np.linalg.qr(rng.normal(size=(N, N)))[0].astype(np.float32)
+    qhat = np.linalg.qr(rng.normal(size=(N, 3)))[0].astype(np.float32)
+    lref = build_lmm_step(n_samples=N, n_covariates=2, options=AssocOptions())
+    lsh = build_lmm_step(n_samples=N, n_covariates=2, options=AssocOptions(), mesh=mesh)
+    la = lref(jnp.asarray(g), jnp.asarray(a_rot), jnp.asarray(qhat), jnp.asarray(y))
+    lb = lsh(jnp.asarray(g), jnp.asarray(a_rot), jnp.asarray(qhat), jnp.asarray(y))
+    out["lmm_err"] = float(jnp.abs(la["t"] - lb["t"]).max())
+
     # ---- compressed psum
     from repro.runtime.compression import compressed_psum
     vals = rng.normal(size=(8, 256)).astype(np.float32)
@@ -133,6 +143,10 @@ def test_sharded_dense_modes_match_reference(child_results):
 
 def test_sharded_fused_matches_reference(child_results):
     assert child_results["fused_err"] < 1e-3
+
+
+def test_sharded_lmm_matches_reference(child_results):
+    assert child_results["lmm_err"] < 1e-3
 
 
 def test_compressed_psum_error_budget(child_results):

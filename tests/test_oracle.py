@@ -1,0 +1,385 @@
+"""Oracle conformance: the full ``GenomeScan`` pipeline, end to end, against
+*independent* reference implementations.
+
+Until now statistical correctness was asserted against our own modules; this
+suite closes that loop:
+
+  * OLS oracle  — per-(marker, trait) ordinary least squares in float64
+                  numpy/scipy, both dof conventions, for the dense and fused
+                  engines over single- and multi-file sources.
+  * GLS oracle  — the mixed model checked against a naive generalized least
+                  squares fit (explicit Cholesky whitening, nothing shared
+                  with ``core.lmm``), including LOCO over a per-chromosome
+                  fileset and both t/p epilogues.
+  * Golden values — a handful of committed numbers from the seeded cohort so
+                  silent drift (seed handling, standardization, dof) fails
+                  loudly even if both implementations drift together.
+
+Scans run with ``hit_threshold_nlp=0`` so the hit channel returns every
+(marker, trait) cell — the comparison covers the full tile as produced by
+the real engine/planner/sink pipeline, not a shortcut through the kernels.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+from scipy import stats as sps
+
+from repro.core.grm import grm_spectrum, stream_grm
+from repro.core.lmm import fit_variance_components, reml_grid
+from repro.core.screening import GenomeScan, ScanConfig
+from repro.io import open_genotypes, plink, synth
+
+# ------------------------------------------------------------------ fixtures
+
+
+@pytest.fixture(scope="module")
+def ols_cohort():
+    # No missingness: the oracle would otherwise have to reproduce the
+    # pipeline's mean-imputation instead of testing it.
+    return synth.make_cohort(
+        n_samples=180, n_markers=96, n_traits=5, n_covariates=2,
+        n_causal=4, effect_size=0.6, missing_rate=0.0, seed=11,
+    )
+
+
+@pytest.fixture(scope="module")
+def ols_paths(ols_cohort, tmp_path_factory):
+    stem = str(tmp_path_factory.mktemp("oracle") / "ols")
+    paths = synth.write_cohort_files(ols_cohort, stem)
+    paths["split"] = synth.write_split_plink(ols_cohort, stem, n_shards=3)
+    return paths
+
+
+@pytest.fixture(scope="module")
+def lmm_cohort():
+    return synth.make_structured_cohort(
+        n_samples=150, n_markers=110, n_traits=4, n_covariates=2,
+        n_pops=2, fst=0.15, h2=0.4, n_causal=3, effect_size=0.5, seed=23,
+    )
+
+
+@pytest.fixture(scope="module")
+def lmm_paths(lmm_cohort, tmp_path_factory):
+    stem = str(tmp_path_factory.mktemp("oracle") / "lmm")
+    paths = synth.write_cohort_files(lmm_cohort, stem)
+    paths["split"] = synth.write_split_plink(lmm_cohort, stem, n_shards=3)
+    return paths
+
+
+def _full_stats(source, cohort, **cfg_kw):
+    """Run the real pipeline, return dense (M, P) r/t/nlp arrays rebuilt
+    from the hit channel (threshold 0 -> every cell) plus the ScanResult."""
+    base = dict(batch_markers=32, hit_threshold_nlp=0.0,
+                block_m=16, block_n=64, block_p=16)
+    base.update(cfg_kw)
+    res = GenomeScan(
+        source, cohort.phenotypes, cohort.covariates, config=ScanConfig(**base)
+    ).run()
+    m, p = source.n_markers, cohort.phenotypes.shape[1]
+    r = np.zeros((m, p), np.float64)
+    t = np.zeros((m, p), np.float64)
+    nlp = np.zeros((m, p), np.float64)
+    for (mi, ti), (rv, tv, nv) in zip(res.hits, res.hit_stats):
+        r[mi, ti], t[mi, ti], nlp[mi, ti] = rv, tv, nv
+    return r, t, nlp, res
+
+
+# ---------------------------------------------------------------- OLS oracle
+
+
+def _ols_oracle(cohort, *, dof_mode):
+    """Per-trait OLS in float64.  ``exact``: t of the genotype coefficient in
+    ``y ~ 1 + C + g``.  ``paper``: correlation of standardized g with the
+    covariate-residualized standardized y, dof = N - 2 (the published Eq. 3).
+    Returns (r, t, neglog10p)."""
+    g = cohort.dosages.astype(np.float64)
+    n = g.shape[1]
+    g_std = g - g.mean(axis=1, keepdims=True)
+    g_std /= np.maximum(g_std.std(axis=1, keepdims=True), 1e-12)
+    y = cohort.phenotypes.astype(np.float64)
+    x = np.concatenate([np.ones((n, 1)), cohort.covariates.astype(np.float64)], axis=1)
+    m, p = g.shape[0], y.shape[1]
+    r = np.empty((m, p))
+    t = np.empty((m, p))
+    if dof_mode == "exact":
+        dof = n - x.shape[1] - 1
+        for mi in range(m):
+            d = np.concatenate([x, g_std[mi][:, None]], axis=1)
+            dtd_inv = np.linalg.inv(d.T @ d)
+            beta = dtd_inv @ (d.T @ y)
+            resid = y - d @ beta
+            s2 = np.sum(resid * resid, axis=0) / dof
+            t[mi] = beta[-1] / np.sqrt(s2 * dtd_inv[-1, -1])
+        r[:] = t / np.sqrt(dof + t**2)
+    else:
+        dof = n - 2
+        q, _ = np.linalg.qr(x)
+        y_res = y - q @ (q.T @ y)
+        y_res /= np.sqrt(np.mean(y_res**2, axis=0, keepdims=True))
+        r[:] = g_std @ y_res / n
+        t[:] = r * np.sqrt(dof / np.maximum(1.0 - r**2, 1e-12))
+    nlp = -(sps.t.logsf(np.abs(t), dof) + np.log(2.0)) / np.log(10.0)
+    return r, t, nlp
+
+
+@pytest.mark.parametrize("dof_mode", ["paper", "exact"])
+def test_dense_engine_matches_ols_oracle(ols_cohort, ols_paths, dof_mode):
+    from repro.core.association import AssocOptions
+
+    src = plink.PlinkBed(ols_paths["bed"])
+    r, t, nlp, res = _full_stats(
+        src, ols_cohort, engine="dense", options=AssocOptions(dof_mode=dof_mode)
+    )
+    r_o, t_o, nlp_o = _ols_oracle(ols_cohort, dof_mode=dof_mode)
+    np.testing.assert_allclose(r, r_o, atol=2e-5)
+    np.testing.assert_allclose(t, t_o, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(nlp, nlp_o, rtol=2e-3, atol=5e-3)
+    # beta on the standardized scale IS r (unit-variance regressor/response)
+    assert res.dof == (180 - 2 if dof_mode == "paper" else 180 - 4)
+
+
+@pytest.mark.parametrize("split", [False, True], ids=["single-file", "multi-file"])
+def test_fused_engine_matches_ols_oracle(ols_cohort, ols_paths, split):
+    src = (
+        open_genotypes(",".join(ols_paths["split"]))
+        if split else plink.PlinkBed(ols_paths["bed"])
+    )
+    r, t, nlp, _ = _full_stats(src, ols_cohort, engine="fused")
+    r_o, t_o, nlp_o = _ols_oracle(ols_cohort, dof_mode="paper")
+    np.testing.assert_allclose(r, r_o, atol=5e-5)
+    np.testing.assert_allclose(t, t_o, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(nlp, nlp_o, rtol=5e-3, atol=1e-2)
+
+
+def test_dense_multifile_equals_single(ols_cohort, ols_paths):
+    """Same cohort through a ragged per-chromosome fileset: identical cells.
+    The ragged shards change batch shapes, hence GEMM tiling, so equality is
+    to float32 reduction-order tolerance, not bitwise (the bitwise guarantee
+    for *identical* decompositions lives in tests/test_multifile.py)."""
+    single = _full_stats(plink.PlinkBed(ols_paths["bed"]), ols_cohort, engine="dense")
+    multi = _full_stats(open_genotypes(",".join(ols_paths["split"])), ols_cohort, engine="dense")
+    np.testing.assert_allclose(single[1], multi[1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(single[2], multi[2], rtol=1e-5, atol=1e-5)
+
+
+def test_golden_values_dense_paper(ols_cohort, ols_paths):
+    src = plink.PlinkBed(ols_paths["bed"])
+    _, _, _, res = _full_stats(src, ols_cohort, engine="dense")
+    got = np.asarray(res.best_nlp, np.float64)
+    expected = np.asarray(GOLDEN["dense_paper_best_nlp"])
+    np.testing.assert_allclose(got, expected, rtol=1e-3, atol=1e-3)
+    assert res.lambda_gc == pytest.approx(GOLDEN["dense_paper_lambda_gc"], abs=0.02)
+
+
+# ---------------------------------------------------------------- GLS oracle
+
+
+def _gls_oracle(cohort, k_of_marker, delta, *, shard_of=None):
+    """Naive mixed-model oracle: explicit V = K + delta*I per scope,
+    Cholesky whiten, per-cell OLS on the whitened design.  Shares no code
+    with core.lmm (numpy only, materialized V)."""
+    g = cohort.dosages.astype(np.float64)
+    m, n = g.shape
+    g_std = g - g.mean(axis=1, keepdims=True)
+    g_std /= np.maximum(g_std.std(axis=1, keepdims=True), 1e-12)
+    y = cohort.phenotypes.astype(np.float64)
+    x = np.concatenate([np.ones((n, 1)), cohort.covariates.astype(np.float64)], axis=1)
+    p = y.shape[1]
+    t = np.empty((m, p))
+    linv_cache: dict[int, np.ndarray] = {}
+    for mi in range(m):
+        sid = 0 if shard_of is None else shard_of(mi)
+        if sid not in linv_cache:
+            v = k_of_marker(mi) + delta * np.eye(n)
+            linv_cache[sid] = np.linalg.inv(np.linalg.cholesky(v))
+        linv = linv_cache[sid]
+        d = linv @ np.concatenate([x, g_std[mi][:, None]], axis=1)
+        yw = linv @ y
+        dtd_inv = np.linalg.inv(d.T @ d)
+        beta = dtd_inv @ (d.T @ yw)
+        resid = yw - d @ beta
+        s2 = np.sum(resid * resid, axis=0) / (n - d.shape[1])
+        t[mi] = beta[-1] / np.sqrt(s2 * dtd_inv[-1, -1])
+    dof = n - x.shape[1] - 1
+    nlp = -(sps.t.logsf(np.abs(t), dof) + np.log(2.0)) / np.log(10.0)
+    return t, nlp
+
+
+@pytest.mark.parametrize("epilogue", ["dense", "fused"])
+def test_lmm_matches_naive_gls(lmm_cohort, lmm_paths, epilogue):
+    src = plink.PlinkBed(lmm_paths["bed"])
+    delta = 1.5  # pinned: this test isolates the linear algebra from REML
+    _, t, nlp, res = _full_stats(
+        src, lmm_cohort, engine="lmm", lmm_delta=delta, lmm_epilogue=epilogue,
+    )
+    grm = stream_grm(src, batch_markers=32)
+    k_full = grm.full()
+    t_o, nlp_o = _gls_oracle(lmm_cohort, lambda mi: k_full, delta)
+    np.testing.assert_allclose(t, t_o, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(nlp, nlp_o, rtol=5e-3, atol=1e-2)
+    assert res.dof == 150 - 2 - 2
+
+
+def test_lmm_loco_multifile_matches_naive_gls(lmm_cohort, lmm_paths):
+    src = open_genotypes(",".join(lmm_paths["split"]))
+    assert src.n_shards == 3
+    delta = 1.5
+    _, t, nlp, res = _full_stats(
+        src, lmm_cohort, engine="lmm", loco=True, lmm_delta=delta,
+    )
+    grm = stream_grm(src, batch_markers=32)
+    bounds = np.asarray(src.shard_boundaries)
+
+    def shard_of(mi):
+        return int(np.searchsorted(bounds, mi, side="right")) - 1
+
+    t_o, nlp_o = _gls_oracle(
+        lmm_cohort, lambda mi: grm.loco(shard_of(mi)), delta, shard_of=shard_of
+    )
+    np.testing.assert_allclose(t, t_o, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(nlp, nlp_o, rtol=5e-3, atol=1e-2)
+    assert res.lmm_info["scopes"] == 3
+    assert res.lmm_info["loco"] is True
+
+
+def test_lmm_fused_epilogue_bitwise_close(lmm_cohort, lmm_paths):
+    src = plink.PlinkBed(lmm_paths["bed"])
+    out = {}
+    for epi in ("dense", "fused"):
+        _, t, nlp, _ = _full_stats(
+            src, lmm_cohort, engine="lmm", lmm_delta=1.0, lmm_epilogue=epi
+        )
+        out[epi] = (t, nlp)
+    np.testing.assert_allclose(out["dense"][0], out["fused"][0], atol=1e-4)
+    np.testing.assert_allclose(out["dense"][1], out["fused"][1], atol=1e-3)
+
+
+def test_lmm_calibrates_where_ols_inflates(tmp_path):
+    """The reason the wing exists: on a structured cohort with a polygenic
+    background and NO fixed effects, the OLS scan's genomic-control lambda
+    inflates while the mixed model stays near 1."""
+    co = synth.make_structured_cohort(
+        n_samples=150, n_markers=150, n_traits=3, n_pops=2, fst=0.2,
+        h2=0.5, n_causal=0, seed=31,
+    )
+    paths = synth.write_cohort_files(co, str(tmp_path / "cal"))
+    src = plink.PlinkBed(paths["bed"])
+    lam = {}
+    for engine in ("dense", "lmm"):
+        cfg = ScanConfig(batch_markers=64, engine=engine, block_m=16, block_p=16)
+        lam[engine] = GenomeScan(src, co.phenotypes, co.covariates, config=cfg).run().lambda_gc
+    assert lam["dense"] > 1.25, f"structured cohort should inflate OLS: {lam}"
+    assert 0.7 < lam["lmm"] < 1.25, f"LMM should calibrate: {lam}"
+
+
+def test_lmm_reml_recovers_heritability(lmm_cohort, lmm_paths):
+    """REML point estimates on the rotated panel recover the planted h2 to
+    within the (wide) tolerance a 150-sample cohort supports."""
+    src = plink.PlinkBed(lmm_paths["bed"])
+    _, _, _, res = _full_stats(src, lmm_cohort, engine="lmm")
+    h2 = np.asarray(res.lmm_info["h2"])
+    assert h2.shape == (4,)
+    assert 0.05 < float(h2.mean()) < 0.85
+    assert abs(float(h2.mean()) - lmm_cohort.h2) < 0.35
+
+
+def test_reml_profile_matches_dense_formulation(lmm_cohort, lmm_paths):
+    """The rotated-space REML profile must equal the textbook dense REML
+    (explicit V, slogdet) up to a delta-independent constant."""
+    src = plink.PlinkBed(lmm_paths["bed"])
+    grm = stream_grm(src, batch_markers=32)
+    k = grm.full()
+    s, u = grm_spectrum(k)
+    n = k.shape[0]
+    y = lmm_cohort.phenotypes[:, :2].astype(np.float64)
+    x = np.concatenate(
+        [np.ones((n, 1)), lmm_cohort.covariates.astype(np.float64)], axis=1
+    )
+    deltas = np.array([0.3, 1.0, 3.0])
+    ll_rot = reml_grid(u.T @ y, u.T @ x, s, deltas)
+
+    def dense_reml(d, yt):
+        v = k + d * np.eye(n)
+        vinv = np.linalg.inv(v)
+        xtvx = x.T @ vinv @ x
+        beta = np.linalg.solve(xtvx, x.T @ vinv @ yt)
+        resid = yt - x @ beta
+        nk = n - x.shape[1]
+        s2 = float(resid @ vinv @ resid) / nk
+        return -0.5 * (
+            nk * (np.log(2 * np.pi * s2) + 1.0)
+            + np.linalg.slogdet(v)[1]
+            + np.linalg.slogdet(xtvx)[1]
+        )
+
+    for t in range(2):
+        ll_dense = np.array([dense_reml(d, y[:, t]) for d in deltas])
+        np.testing.assert_allclose(ll_rot[:, t], ll_dense, rtol=1e-8, atol=1e-6)
+
+
+def test_streamed_grm_matches_naive(lmm_cohort, lmm_paths):
+    """One-pass streamed accumulation == materialized numpy GRM, and the
+    LOCO identity holds: loco(s) excludes exactly shard s's contribution."""
+    src = open_genotypes(",".join(lmm_paths["split"]))
+    grm = stream_grm(src, batch_markers=32)
+    g = lmm_cohort.dosages.astype(np.float64)
+    z = g - g.mean(axis=1, keepdims=True)
+    z /= np.maximum(g.std(axis=1), 1e-12)[:, None]
+    naive = z.T @ z / g.shape[0]
+    np.testing.assert_allclose(grm.full(), naive, atol=1e-4)
+    bounds = src.shard_boundaries
+    for sid in range(3):
+        rows = np.ones(g.shape[0], bool)
+        rows[bounds[sid]: bounds[sid + 1]] = False
+        naive_loco = z[rows].T @ z[rows] / rows.sum()
+        np.testing.assert_allclose(grm.loco(sid), naive_loco, atol=1e-4)
+
+
+def test_lmm_checkpoint_fingerprint_guards_grm(lmm_cohort, lmm_paths, tmp_path):
+    """Resuming a mixed-model scan against different variance components
+    (hence a different rotation) must be refused, not silently merged."""
+    src = plink.PlinkBed(lmm_paths["bed"])
+    ck = str(tmp_path / "ck")
+    cfg = dict(batch_markers=64, engine="lmm", block_m=16, block_p=16)
+    r1 = GenomeScan(
+        src, lmm_cohort.phenotypes, lmm_cohort.covariates,
+        config=ScanConfig(checkpoint_dir=ck, lmm_delta=1.0, **cfg),
+    ).run()
+    # identical scan resumes cleanly from the completed checkpoint
+    r2 = GenomeScan(
+        src, lmm_cohort.phenotypes, lmm_cohort.covariates,
+        config=ScanConfig(checkpoint_dir=ck, lmm_delta=1.0, **cfg),
+    ).run()
+    np.testing.assert_array_equal(r1.best_nlp, r2.best_nlp)
+    np.testing.assert_array_equal(r1.hits, r2.hits)
+    with pytest.raises(ValueError, match="different scan"):
+        GenomeScan(
+            src, lmm_cohort.phenotypes, lmm_cohort.covariates,
+            config=ScanConfig(checkpoint_dir=ck, lmm_delta=2.0, **cfg),
+        ).run()
+
+
+def test_lmm_validates_unsupported_combos(lmm_cohort, lmm_paths):
+    src = plink.PlinkBed(lmm_paths["bed"])
+    with pytest.raises(ValueError, match="sharding"):
+        GenomeScan(src, lmm_cohort.phenotypes, None,
+                   config=ScanConfig(engine="lmm", mode="sample"))
+    with pytest.raises(ValueError, match="multivariate"):
+        GenomeScan(src, lmm_cohort.phenotypes, None,
+                   config=ScanConfig(engine="lmm", multivariate=True))
+    with pytest.raises(ValueError, match="fileset"):
+        GenomeScan(src, lmm_cohort.phenotypes, None,
+                   config=ScanConfig(engine="lmm", loco=True))
+
+
+# Committed golden values for the seeded (seed=11) cohort, dense engine,
+# paper dof.  Regenerate by rerunning the scan in test_golden_values_dense_
+# paper if the *synthesis* recipe changes deliberately; drift for any other
+# reason is exactly the bug this guard exists to catch.
+GOLDEN = {
+    "dense_paper_best_nlp": [14.1459, 11.6955, 13.1648, 11.9401, 1.8614],
+    "dense_paper_lambda_gc": 1.2895,
+}

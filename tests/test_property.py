@@ -119,6 +119,200 @@ def test_bh_qvalues_monotone_and_bounded(nlp):
     assert np.all(np.diff(q_sorted) <= 1e-5)
 
 
+# ----------------------------------------------------- shard-merge folding
+#
+# Checkpoint-resume silently relies on one invariant: folding per-batch sink
+# payloads (committed shards) through ``merge_shard`` must reproduce exactly
+# what a single uninterrupted pass over the same marker stream accumulates.
+# These properties split a stream at arbitrary boundaries chosen by
+# hypothesis and assert the fold is bitwise-identical.
+
+
+def _sink_stream(seed: int, m: int, p: int):
+    """Deterministic synthetic device-step outputs with all-distinct nlp
+    values (distinctness makes the argmax/fold tie-free, so bitwise equality
+    is the correct expectation)."""
+    rng = np.random.default_rng(seed)
+    nlp = (rng.permutation(m * p).astype(np.float32) * 0.37).reshape(m, p)
+    r = np.tanh(rng.normal(size=(m, p))).astype(np.float32)
+    t = rng.normal(scale=3.0, size=(m, p)).astype(np.float32)
+    maf = rng.uniform(0.0, 0.5, size=m).astype(np.float32)
+    valid = rng.random(m) > 0.1
+    return nlp, r, t, maf, valid
+
+
+def _batch_view(arrays, lo: int, hi: int, index: int, n_traits: int, threshold: float):
+    """A BatchView over host arrays shaped exactly like one device output."""
+    from repro.core.engines import HostBatch
+    from repro.core.sinks import BatchView
+    from repro.runtime.prefetch import MarkerBatch
+
+    nlp, r, t, maf, valid = arrays
+    sub = nlp[lo:hi]
+    out = {
+        "nlp": sub,
+        "r": r[lo:hi],
+        "t": t[lo:hi],
+        "maf": maf[lo:hi],
+        "valid": valid[lo:hi],
+        "batch_best_nlp": sub.max(axis=0),
+        "batch_best_row": sub.argmax(axis=0).astype(np.int32),
+        "hit_count": np.int32((sub >= threshold).sum()),
+    }
+    batch = MarkerBatch(index=index, lo=lo, hi=hi, source_id=0, local_lo=lo, local_hi=hi)
+    return BatchView(HostBatch(batch, ()), out, n_traits)
+
+
+def _make_sinks(m: int, p: int, threshold: float):
+    from repro.core.sinks import BestTraitSink, HitSink, LambdaGCSink, QCSink
+
+    return [BestTraitSink(p), HitSink(threshold), QCSink(m), LambdaGCSink(rows=16)]
+
+
+def _results(sinks):
+    out = {}
+    for s in sinks:
+        out.update(s.result())
+    return out
+
+
+_stream_split = st.tuples(
+    st.integers(0, 2**31 - 1),       # stream seed
+    st.integers(4, 72),              # markers
+    st.integers(1, 5),               # traits
+    st.floats(0.0, 1.0),             # hit-threshold quantile
+    st.lists(st.integers(1, 71), max_size=6, unique=True),  # cut points
+)
+
+
+@given(_stream_split)
+@settings(max_examples=30, deadline=None)
+def test_shard_fold_equals_single_pass(case):
+    """Split at arbitrary batch boundaries; committing each piece's payload
+    and folding the shards == one uninterrupted pass.  Bitwise."""
+    seed, m, p, q, raw_cuts = case
+    arrays = _sink_stream(seed, m, p)
+    threshold = float(np.quantile(arrays[0], q))
+    cuts = sorted({c for c in raw_cuts if c < m})
+    bounds = [0, *cuts, m]
+
+    # uninterrupted run: every piece consumed live via on_batch, committing
+    # its payload shard along the way (exactly what CheckpointSink persists)
+    shards = []
+    writer = _make_sinks(m, p, threshold)
+    for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        pay: dict = {}
+        v = _batch_view(arrays, lo, hi, i, p, threshold)
+        for s in writer:
+            s.on_batch(v, pay)
+        shards.append((pay, lo, hi))
+
+    # resumed run: fresh sinks see only the committed shards
+    merged = _make_sinks(m, p, threshold)
+    for pay, lo, hi in shards:
+        for s in merged:
+            s.merge_shard(pay, lo, hi)
+
+    rw, rm = _results(writer), _results(merged)
+    np.testing.assert_array_equal(rw["best_nlp"], rm["best_nlp"])
+    np.testing.assert_array_equal(rw["best_marker"], rm["best_marker"])
+    np.testing.assert_array_equal(rw["hits"], rm["hits"])
+    np.testing.assert_array_equal(rw["hit_stats"], rm["hit_stats"])
+    np.testing.assert_array_equal(rw["maf"], rm["maf"])
+    np.testing.assert_array_equal(rw["valid"], rm["valid"])
+    assert rw["lambda_gc"] == rm["lambda_gc"]
+
+    # and the decomposition-independent outputs match a one-batch pass
+    # (lambda_gc legitimately depends on the probe decomposition, so it is
+    # excluded here — the probe is a per-batch subsample by design)
+    single = _make_sinks(m, p, threshold)
+    pay_all: dict = {}
+    view = _batch_view(arrays, 0, m, 0, p, threshold)
+    for s in single:
+        s.on_batch(view, pay_all)
+    rs = _results(single)
+    np.testing.assert_array_equal(rs["best_nlp"], rm["best_nlp"])
+    np.testing.assert_array_equal(rs["best_marker"], rm["best_marker"])
+    np.testing.assert_array_equal(rs["hits"], rm["hits"])
+    np.testing.assert_array_equal(rs["hit_stats"], rm["hit_stats"])
+    np.testing.assert_array_equal(rs["maf"], rm["maf"])
+
+
+@given(_stream_split, st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_shard_fold_is_order_insensitive(case, perm_seed):
+    """Resume folds freshly-computed batches before replayed shards, so the
+    fold must not depend on shard arrival order (up to hit row order, which
+    is canonicalized by sorting)."""
+    seed, m, p, q, raw_cuts = case
+    arrays = _sink_stream(seed, m, p)
+    threshold = float(np.quantile(arrays[0], q))
+    cuts = sorted({c for c in raw_cuts if c < m})
+    bounds = [0, *cuts, m]
+    shards = []
+    writer = _make_sinks(m, p, threshold)
+    for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        pay: dict = {}
+        v = _batch_view(arrays, lo, hi, i, p, threshold)
+        for s in writer:
+            s.on_batch(v, pay)
+        shards.append((pay, lo, hi))
+
+    results = []
+    for order in (range(len(shards)), np.random.default_rng(perm_seed).permutation(len(shards))):
+        merged = _make_sinks(m, p, threshold)
+        for i in order:
+            pay, lo, hi = shards[i]
+            for s in merged:
+                s.merge_shard(pay, lo, hi)
+        results.append(_results(merged))
+    a, b = results
+    np.testing.assert_array_equal(a["best_nlp"], b["best_nlp"])
+    np.testing.assert_array_equal(a["best_marker"], b["best_marker"])
+    oa, ob = np.lexsort(a["hits"].T), np.lexsort(b["hits"].T)
+    np.testing.assert_array_equal(a["hits"][oa], b["hits"][ob])
+    np.testing.assert_array_equal(a["hit_stats"][oa], b["hit_stats"][ob])
+    np.testing.assert_array_equal(a["maf"], b["maf"])
+    assert a["lambda_gc"] == b["lambda_gc"]
+
+
+@given(_stream_split)
+@settings(max_examples=15, deadline=None)
+def test_shard_fold_survives_npz_roundtrip(case):
+    """Shards travel through ``np.savez`` on the real resume path; the
+    round trip must not perturb a single bit of the fold."""
+    import io as _io
+
+    seed, m, p, q, raw_cuts = case
+    arrays = _sink_stream(seed, m, p)
+    threshold = float(np.quantile(arrays[0], q))
+    cuts = sorted({c for c in raw_cuts if c < m})
+    bounds = [0, *cuts, m]
+    direct = _make_sinks(m, p, threshold)
+    rehydrated = _make_sinks(m, p, threshold)
+    writer = _make_sinks(m, p, threshold)
+    for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        pay: dict = {}
+        v = _batch_view(arrays, lo, hi, i, p, threshold)
+        for s in writer:
+            s.on_batch(v, pay)
+        for s in direct:
+            s.merge_shard(pay, lo, hi)
+        buf = _io.BytesIO()
+        np.savez(buf, **pay)
+        buf.seek(0)
+        with np.load(buf) as z:
+            pay2 = {k: z[k] for k in z.files}
+        for s in rehydrated:
+            s.merge_shard(pay2, lo, hi)
+    a, b = _results(direct), _results(rehydrated)
+    np.testing.assert_array_equal(a["best_nlp"], b["best_nlp"])
+    np.testing.assert_array_equal(a["best_marker"], b["best_marker"])
+    np.testing.assert_array_equal(a["hits"], b["hits"])
+    np.testing.assert_array_equal(a["hit_stats"], b["hit_stats"])
+    assert a["lambda_gc"] == b["lambda_gc"]
+
+
 @given(st.integers(1, 6), st.integers(1, 3))
 @settings(max_examples=15, deadline=None)
 def test_correlation_bounded(m_markers, p_traits):
