@@ -6,6 +6,9 @@
     engines       — dense (paper-faithful) vs fused 2-bit path, equal stats
     lmm           — mixed-model wing: GRM/eigen/REML setup amortization vs
                     the per-marker rotation overhead (the fastGWA analogue)
+    trait_block   — 2-D scan grid sweep: wall time + peak panel residency
+                    vs trait-block width (device memory bounded by the
+                    block, not the panel; statistics bitwise-identical)
     kernels       — us/call of the association GEMM across batch geometries
     scaling_n     — runtime vs cohort size N (linear, §2.2)
 
@@ -195,6 +198,47 @@ def bench_lmm() -> None:
              f"scan_slowdown={dt_scan / dt_ols:.2f}x,lambda_gc={res.lambda_gc:.3f}")
 
 
+def bench_trait_blocks() -> None:
+    """The 2-D (marker x trait-block) scan grid: wall time and panel
+    residency across block widths.  The derived column that matters for
+    capacity planning is ``resident_panel_mib`` — the peak device bytes the
+    panel can pin (LRU capacity x N x block width x 4), which is bounded by
+    the block size rather than the panel width P; ``panel_mib`` is what the
+    unblocked scan pins.  Statistics are bitwise-identical across rows
+    (asserted here, property-tested in tests/test_traitblocks.py)."""
+    import os
+    import tempfile
+
+    co = synth.make_cohort(n_samples=512, n_markers=1024, n_traits=256,
+                           n_causal=6, seed=5)
+    d = tempfile.mkdtemp()
+    paths = synth.write_cohort_files(co, os.path.join(d, "bench_tb"))
+    src = plink.PlinkBed(paths["bed"])
+    n, p = co.phenotypes.shape
+    resident_cap = 4
+    base = dict(batch_markers=256, block_m=64, block_n=128, block_p=32,
+                panel_resident_blocks=resident_cap)
+    ref = None
+    for tb in (0, 32, 64, 128):
+        cfg = ScanConfig(trait_block=tb, **base)
+        t0 = time.perf_counter()
+        scan = GenomeScan(src, co.phenotypes, co.covariates, config=cfg)
+        res = scan.run()
+        dt = time.perf_counter() - t0
+        if ref is None:
+            ref = res
+        else:
+            assert np.array_equal(ref.best_nlp, res.best_nlp), "grid changed stats"
+        width = max(b.n_traits for b in scan.trait_blocks)
+        resident = min(resident_cap, scan.n_trait_blocks) * n * width * 4
+        emit(
+            f"trait_block_{tb or 'off'}", dt * 1e6,
+            f"grid={scan.n_batches}x{scan.n_trait_blocks},"
+            f"resident_panel_mib={resident / 2**20:.2f},"
+            f"panel_mib={n * p * 4 / 2**20:.2f}",
+        )
+
+
 def bench_kernels() -> None:
     """Association GEMM across geometries (us/call + achieved GFLOP/s)."""
     rng = np.random.default_rng(0)
@@ -238,6 +282,7 @@ def main() -> None:
         ("throughput", bench_throughput),
         ("engines", bench_engines),
         ("lmm", bench_lmm),
+        ("trait_block", bench_trait_blocks),
         ("kernels", bench_kernels),
         ("scaling_n", bench_scaling_n),
     ]

@@ -125,21 +125,44 @@ def correlation(
     n_samples: int | jax.Array,
     *,
     precision: str = "fp32",
+    trait_tile: int | None = None,
 ) -> jax.Array:
-    """Paper Eq. (2): ``R = G Y / N`` with an explicit precision contract."""
+    """Paper Eq. (2): ``R = G Y / N`` with an explicit precision contract.
+
+    ``trait_tile`` fixes the panel-axis compute tile: the GEMM is evaluated
+    in ``trait_tile``-wide column chunks (last chunk ragged) instead of one
+    panel-wide dot.  This is the same discipline the fused Pallas kernel
+    applies with ``block_p``, and it is what makes the blocked 2-D scan grid
+    bitwise-identical to the unblocked scan (DESIGN.md §10): BLAS/XLA GEMM
+    micro-kernels group accumulators differently per output width, so the
+    only way two decompositions of the trait axis agree bitwise is to run
+    the *same* fixed-width tiles in both.  ``None`` keeps the single-dot
+    behavior (standalone use; the scan always passes its ``block_p``).
+    """
     if precision == "bf16":
         g_std = g_std.astype(jnp.bfloat16)
         y_std = y_std.astype(jnp.bfloat16)
         dot_precision = jax.lax.Precision.DEFAULT
     else:
         dot_precision = jax.lax.Precision.HIGHEST
-    r = jax.lax.dot_general(
-        g_std,
-        y_std,
-        (((1,), (0,)), ((), ())),
-        precision=dot_precision,
-        preferred_element_type=jnp.float32,
-    )
+
+    def dot(y_cols: jax.Array) -> jax.Array:
+        return jax.lax.dot_general(
+            g_std,
+            y_cols,
+            (((1,), (0,)), ((), ())),
+            precision=dot_precision,
+            preferred_element_type=jnp.float32,
+        )
+
+    p = y_std.shape[1]
+    if trait_tile is not None and 0 < trait_tile < p:
+        r = jnp.concatenate(
+            [dot(y_std[:, i : i + trait_tile]) for i in range(0, p, trait_tile)],
+            axis=1,
+        )
+    else:
+        r = dot(y_std)
     return r / jnp.asarray(n_samples, jnp.float32)
 
 
@@ -150,11 +173,15 @@ def assoc_from_standardized(
     n_samples: int,
     n_covariates: int,
     options: AssocOptions = AssocOptions(),
+    trait_tile: int | None = None,
 ) -> AssocResult:
     """Association statistics from pre-standardized inputs (both zero-mean,
     unit population variance).  This is the function the distributed scan
-    jits; shapes ``(M, N) x (N, P) -> (M, P)``."""
-    r = correlation(g_std, y_std, n_samples, precision=options.precision)
+    jits; shapes ``(M, N) x (N, P) -> (M, P)``.  ``trait_tile`` — see
+    ``correlation``."""
+    r = correlation(
+        g_std, y_std, n_samples, precision=options.precision, trait_tile=trait_tile
+    )
     # Guard: standardization guarantees |r| <= 1 up to rounding; clamp so the
     # epilogue stays finite even for degenerate columns.
     r = jnp.clip(r, -1.0, 1.0)

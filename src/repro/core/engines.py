@@ -31,13 +31,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import stats as _stats
 from repro.core.association import AssocOptions, assoc_from_standardized, standardize_genotype_batch
 from repro.runtime.compat import shard_map
-from repro.runtime.prefetch import MarkerBatch
+from repro.runtime.prefetch import MarkerBatch, TraitBlock
 from repro.runtime.sharding import batch_axes, gwas_shardings
 
 __all__ = [
     "EngineContext",
     "HostBatch",
     "ScanEngine",
+    "DeviceLRU",
     "DenseEngine",
     "FusedEngine",
     "LMMEngine",
@@ -48,6 +49,47 @@ __all__ = [
     "build_fused_step",
     "build_lmm_step",
 ]
+
+
+class DeviceLRU:
+    """Small keyed cache of device-staged arrays with LRU eviction.
+
+    One idiom, three users (the driver's ``PanelStore`` blocks, the lmm
+    engine's per-(scope, block) panels and per-scope rotation pairs): stage
+    through ``loader`` on miss, refresh recency on hit, evict the least
+    recently used entry past ``capacity``.  ``on_evict`` lets dependent
+    caches cascade (a LOCO scope's panel blocks die with its rotation).
+    Thread-safe: loaders may be reached from prefetch workers.
+    """
+
+    def __init__(self, capacity: int, loader: Callable[[Any], Any],
+                 *, on_evict: Callable[[Any], None] | None = None):
+        self.capacity = max(1, capacity)
+        self._loader = loader
+        self._on_evict = on_evict
+        self._data: dict[Any, Any] = {}
+        self._lock = threading.Lock()
+
+    def get(self, key: Any) -> Any:
+        with self._lock:
+            if key in self._data:
+                self._data[key] = self._data.pop(key)  # refresh recency
+            else:
+                while len(self._data) >= self.capacity:
+                    gone = next(iter(self._data))
+                    self._data.pop(gone)
+                    if self._on_evict is not None:
+                        self._on_evict(gone)
+                self._data[key] = self._loader(key)
+            return self._data[key]
+
+    def drop_if(self, pred: Callable[[Any], bool]) -> None:
+        with self._lock:
+            for key in [k for k in self._data if pred(k)]:
+                self._data.pop(key)
+
+    def __len__(self) -> int:
+        return len(self._data)
 
 
 @dataclass
@@ -70,6 +112,10 @@ class EngineContext:
     whitening: jax.Array | None = None
     keep: np.ndarray | None = None     # host-side sample mask (None: keep all)
     excluded_samples: int = 0
+    # the trait axis of the 2-D scan grid (DESIGN.md §10): the planned
+    # blocks, and how many panel blocks an engine may keep device-resident
+    trait_blocks: tuple[TraitBlock, ...] = ()
+    panel_resident_blocks: int = 4
     # mixed-model knobs (consumed by the lmm engine only)
     loco: bool = False
     grm_method: str = "std"
@@ -94,10 +140,11 @@ class HostBatch:
 class ScanEngine:
     """Engine interface; subclasses register with ``@register_engine``.
 
-    ``uses_global_panel`` tells the driver whether the step consumes the
-    driver-prepared residualized panel as its trailing argument (OLS
-    engines) or carries its own panel(s) inside ``device_args`` (the lmm
-    engine, whose panel varies per LOCO scope).
+    Every engine's step takes the cell's trait-block panel slice as its
+    trailing argument.  ``uses_global_panel`` tells the driver who serves
+    that slice: the driver's own residualized ``PanelStore`` (OLS engines),
+    or the engine's ``panel_block`` hook (the lmm engine, whose panels vary
+    per LOCO scope as well as per block).
     """
 
     name: str = "?"
@@ -128,6 +175,12 @@ class ScanEngine:
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
         raise NotImplementedError
+
+    def panel_block(self, batch: MarkerBatch, block: TraitBlock) -> jax.Array:
+        """Device panel slice for one grid cell (engines with
+        ``uses_global_panel = False`` only; the driver's ``PanelStore``
+        serves global-panel engines)."""
+        raise NotImplementedError(f"engine {self.name!r} uses the driver's panel store")
 
 
 _REGISTRY: dict[str, type[ScanEngine]] = {}
@@ -172,8 +225,12 @@ def build_dense_step(
     multivariate: bool = False,
     n_traits_eff: float = 1.0,
     whitening: jax.Array | None = None,
+    trait_tile: int | None = None,
 ) -> Callable[..., dict[str, jax.Array]]:
-    """Paper-faithful dense step: float dosages in, summary tiles out."""
+    """Paper-faithful dense step: float dosages in, summary tiles out.
+    ``trait_tile`` fixes the panel-axis GEMM tile (the scan passes its
+    ``block_p``) so every trait-block decomposition computes identical
+    tiles — the §10 bitwise contract."""
     dof = options.dof(n_samples, n_covariates)
 
     def step(g_raw: jax.Array, y_std: jax.Array) -> dict[str, jax.Array]:
@@ -183,7 +240,8 @@ def build_dense_step(
 
             g_std = residualize_genotypes(g_std, q_basis)
         res = assoc_from_standardized(
-            g_std, y_std, n_samples=n_samples, n_covariates=n_covariates, options=options
+            g_std, y_std, n_samples=n_samples, n_covariates=n_covariates,
+            options=options, trait_tile=trait_tile,
         )
         valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
         mask = valid[:, None]
@@ -342,6 +400,18 @@ def build_lmm_step(
     ``epilogue="dense"`` computes t/p in plain XLA; ``"fused"`` routes
     Eq. 3 through the standalone Pallas t-statistic kernel
     (``kernels.tstat``) — identical numbers, exercised by the oracle suite.
+
+    ``block_p`` doubles as the panel-axis GEMM tile (``trait_tile`` of
+    ``core.association.correlation``) so blocked and unblocked scans
+    compute identical tiles (§10).
+
+    Internally the step is a once-per-marker-batch *prolog* (standardize,
+    rotation GEMM, whitened-design projection — everything trait-
+    independent, including the dominant (M,N)x(N,N) GEMM) plus a per-cell
+    *epilogue* (the panel GEMM + t/p).  The prolog result is memoized on
+    the staged batch's array identity, so a blocked scan's inner trait-
+    block loop pays the genotype-side work once per marker batch, not once
+    per grid cell.  The public signature is unchanged.
     """
     if epilogue not in ("dense", "fused"):
         raise ValueError(f"unknown lmm epilogue {epilogue!r}")
@@ -351,7 +421,7 @@ def build_lmm_step(
     from repro.core.association import correlation
     from repro.core.residualize import residualize_genotypes
 
-    def step(g_raw, rotation, qhat, y_std):
+    def prolog(g_raw, rotation, qhat):
         g_std, ms = standardize_genotype_batch(g_raw)
         g_rot = jax.lax.dot_general(
             g_std, rotation, (((1,), (0,)), ((), ())),
@@ -359,11 +429,16 @@ def build_lmm_step(
             preferred_element_type=jnp.float32,
         )
         g_fin = residualize_genotypes(g_rot, qhat)
+        valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
+        return g_fin, ms.maf, valid
+
+    def cell(g_fin, maf, valid, y_std):
         if epilogue == "fused":
             from repro.kernels.tstat import tstat
 
             r = jnp.clip(
-                correlation(g_fin, y_std, n_samples, precision=opts.precision),
+                correlation(g_fin, y_std, n_samples, precision=opts.precision,
+                            trait_tile=block_p),
                 -1.0, 1.0,
             )
             t = tstat(r, dof, block_m=block_m, block_p=block_p)
@@ -371,17 +446,16 @@ def build_lmm_step(
         else:
             res = assoc_from_standardized(
                 g_fin, y_std, n_samples=n_samples, n_covariates=n_covariates,
-                options=opts,
+                options=opts, trait_tile=block_p,
             )
             r, t, nlp = res.r, res.t, res.neglog10p
-        valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
         mask = valid[:, None]
         nlp = jnp.where(mask, nlp, 0.0)
         return {
             "r": jnp.where(mask, r, 0.0),
             "t": jnp.where(mask, t, 0.0),
             "nlp": nlp,
-            "maf": ms.maf,
+            "maf": maf,
             "valid": valid,
             "batch_best_nlp": jnp.max(nlp, axis=0),
             "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
@@ -389,25 +463,44 @@ def build_lmm_step(
         }
 
     if mesh is None:
-        return jax.jit(step)
+        prolog_j = jax.jit(prolog)
+        cell_j = jax.jit(cell)
+    else:
+        sh = gwas_shardings(mesh, mode="mp")
+        rep = NamedSharding(mesh, P())
+        model_vec = NamedSharding(mesh, P("model"))
+        prolog_j = jax.jit(
+            prolog,
+            in_shardings=(sh["g"], rep, rep),
+            out_shardings=(sh["g"], sh["marker_vec"], sh["marker_vec"]),
+        )
+        cell_j = jax.jit(
+            cell,
+            in_shardings=(sh["g"], sh["marker_vec"], sh["marker_vec"], sh["y"]),
+            out_shardings={
+                "r": sh["out"],
+                "t": sh["out"],
+                "nlp": sh["out"],
+                "maf": sh["marker_vec"],
+                "valid": sh["marker_vec"],
+                "batch_best_nlp": model_vec,
+                "batch_best_row": model_vec,
+                "hit_count": rep,
+            },
+        )
 
-    sh = gwas_shardings(mesh, mode="mp")
-    rep = NamedSharding(mesh, P())
-    model_vec = NamedSharding(mesh, P("model"))
-    return jax.jit(
-        step,
-        in_shardings=(sh["g"], rep, rep, sh["y"]),
-        out_shardings={
-            "r": sh["out"],
-            "t": sh["out"],
-            "nlp": sh["out"],
-            "maf": sh["marker_vec"],
-            "valid": sh["marker_vec"],
-            "batch_best_nlp": model_vec,
-            "batch_best_row": model_vec,
-            "hit_count": rep,
-        },
-    )
+    # One-slot memo keyed on the staged genotype array's identity: the
+    # driver passes the same device array for every trait block of a batch,
+    # and a fresh one per batch.  Holding the reference pins the id.
+    memo: dict[str, Any] = {"g": None, "out": None}
+
+    def step(g_raw, rotation, qhat, y_std):
+        if memo["g"] is not g_raw:
+            memo["out"] = prolog_j(g_raw, rotation, qhat)
+            memo["g"] = g_raw
+        return cell_j(*memo["out"], y_std)
+
+    return step
 
 
 # ------------------------------------------------------------------- engines
@@ -431,6 +524,7 @@ class DenseEngine(ScanEngine):
             multivariate=ctx.multivariate,
             n_traits_eff=ctx.n_traits_eff,
             whitening=ctx.whitening,
+            trait_tile=ctx.block_p,
         )
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
@@ -499,15 +593,33 @@ class LMMEngine(ScanEngine):
     core.lmm).  ``setup_scan`` amortizes the expensive work — GRM pass,
     eigendecomposition, REML — once per scan (per LOCO chromosome);
     ``prepare_batch`` then only reads dosages and attaches the scope's
-    device-cached rotation/basis/panel, so the per-batch device cost is one
-    extra (M, N) x (N, N) GEMM on top of the OLS scan."""
+    device-cached rotation/basis, so the per-batch device cost is one
+    extra (M, N) x (N, N) GEMM on top of the OLS scan.  The rotated panel
+    itself is served per (scope, trait-block) cell through ``panel_block``
+    (``uses_global_panel = False``), LRU-bounded on device."""
 
     uses_global_panel = False
 
+    # Scopes arrive shard-sequentially (the planner never interleaves
+    # shards), but the prefetch window may straddle one boundary — so two
+    # resident scopes bound device memory at ~2 (N,N) rotations, not one
+    # per chromosome.
+    _DEV_SCOPES_MAX = 2
+
     def __init__(self) -> None:
         self._scopes: dict[int, Any] = {}       # scope -> core.lmm.RotatedPanel
-        self._dev: dict[int, tuple] = {}        # scope -> staged device arrays
-        self._dev_lock = threading.Lock()
+        # scope -> staged (rotation, qhat); evicting a scope drops its
+        # resident panel blocks with it
+        self._dev = DeviceLRU(
+            self._DEV_SCOPES_MAX,
+            lambda sid: (
+                jnp.asarray(self._scopes[sid].rotation),
+                jnp.asarray(self._scopes[sid].qhat),
+            ),
+            on_evict=lambda sid: self._dev_y.drop_if(lambda k: k[0] == sid),
+        )
+        # (scope, block) -> staged panel slice; capacity set in setup_scan
+        self._dev_y = DeviceLRU(4, self._load_panel_block)
         self._loco = False
         self._fingerprint: str | None = None
         self._dof: int | None = None
@@ -525,6 +637,8 @@ class LMMEngine(ScanEngine):
         from repro.core.grm import grm_spectrum, spectrum_fingerprint, stream_grm
         from repro.core.lmm import rotate_panel
 
+        self._dev_y.capacity = max(1, ctx.panel_resident_blocks)
+        self._trait_blocks = ctx.trait_blocks
         grm = stream_grm(
             source,
             keep=ctx.keep if ctx.excluded_samples else None,
@@ -586,34 +700,34 @@ class LMMEngine(ScanEngine):
             block_p=ctx.block_p,
         )
 
-    # Scopes arrive shard-sequentially (the planner never interleaves
-    # shards), but the prefetch window may straddle one boundary — so two
-    # resident scopes bound device memory at ~2 (N,N) rotations, not one
-    # per chromosome.
-    _DEV_SCOPES_MAX = 2
-
     def _scope_arrays(self, sid: int) -> tuple:
-        """Per-scope (rotation, qhat, y) staged to device once and shared by
+        """Per-scope (rotation, qhat) staged to device once and shared by
         every batch of that scope (prepare_batch runs on worker threads),
         with LRU eviction so a 22-chromosome LOCO scan never holds all 22
-        rotation matrices on device at once."""
-        with self._dev_lock:
-            if sid not in self._dev:
-                p = self._scopes[sid]
-                while len(self._dev) >= self._DEV_SCOPES_MAX:
-                    self._dev.pop(next(iter(self._dev)))
-                self._dev[sid] = (
-                    jnp.asarray(p.rotation),
-                    jnp.asarray(p.qhat),
-                    jnp.asarray(p.y),
-                )
-            return self._dev[sid]
+        rotation matrices on device at once.  The scope's panel is served
+        separately, per trait block, by ``panel_block``."""
+        return self._dev.get(sid)
+
+    def _load_panel_block(self, key: tuple[int, int]) -> jax.Array:
+        sid, block_index = key
+        blk = self._trait_blocks[block_index]
+        return jnp.asarray(self._scopes[sid].y_block(blk.lo, blk.hi))
+
+    def panel_block(self, batch: MarkerBatch, block: TraitBlock) -> jax.Array:
+        """Rotated-panel slice for one grid cell, LRU-cached on device so a
+        panel that fits stays resident while a paper-scale one streams
+        block-by-block.  The slice comes from the scope's host float32 panel,
+        which keeps the blocked scan bitwise-identical to the unblocked one —
+        the float64 whitening ran panel-wide at setup (the global REML fit
+        materializes the rotated panel anyway, DESIGN.md §10)."""
+        sid = batch.source_id if self._loco else -1
+        return self._dev_y.get((sid, block.index))
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
         dosages = source.read_dosages(batch.lo, batch.hi)
         if ctx.excluded_samples:
             dosages = dosages[:, ctx.keep]
-        rotation, qhat, y = self._scope_arrays(batch.source_id if self._loco else -1)
+        rotation, qhat = self._scope_arrays(batch.source_id if self._loco else -1)
         return HostBatch(
-            batch, (np.asarray(dosages, np.float32), rotation, qhat, y)
+            batch, (np.asarray(dosages, np.float32), rotation, qhat)
         )

@@ -41,6 +41,7 @@ __all__ = [
     "reml_grid",
     "fit_variance_components",
     "rotate_panel",
+    "whiten_project_standardize",
     "default_delta_grid",
 ]
 
@@ -185,7 +186,16 @@ def fit_variance_components(
 @dataclass
 class RotatedPanel:
     """Everything the scan needs for one LMM scope (global or one LOCO
-    chromosome), amortized once."""
+    chromosome), amortized once.
+
+    The whitened panel ``y`` lives host-side in float32; the blocked scan
+    (DESIGN.md §10) ships ``y_block`` slices to the device on demand, so
+    device residency is bounded by the trait-block width, not the panel.
+    The float64 whitening itself runs panel-wide at setup: the global REML
+    fit materializes the rotated panel anyway, and BLAS float64 GEMMs are
+    not column-partition-invariant, so re-deriving blocks independently
+    would break the blocked == unblocked bitwise contract.
+    """
 
     rotation: np.ndarray       # (N, N) float32  A = U diag(sqrt(w))
     qhat: np.ndarray           # (N, k) float32 orthonormal whitened design basis
@@ -195,6 +205,31 @@ class RotatedPanel:
     dof: int                   # N - 2 - n_covariates
     delta: float               # pooled variance ratio driving the rotation
     reml: REMLResult | None    # per-trait fits (None when delta was pinned)
+
+    def y_block(self, lo: int, hi: int) -> np.ndarray:
+        """The whitened panel restricted to one trait block ``[lo, hi)`` —
+        what a grid cell's device step consumes."""
+        return self.y[:, lo:hi]
+
+
+def whiten_project_standardize(
+    y_rot: np.ndarray,
+    w_sqrt: np.ndarray,
+    qhat: np.ndarray,
+    *,
+    var_tol: float = 1e-10,
+) -> tuple[np.ndarray, np.ndarray]:
+    """The whitening stage of the rotation, on an already-rotated panel (or
+    a trait block of one): scale rows by ``w^(1/2)``, project the whitened
+    design basis out, rescale columns to unit RMS.  Returns ``(y_std,
+    trait_valid)``.  The scaling and standardization are column-wise; the
+    projection is one small GEMM against ``qhat``."""
+    y_hat = y_rot * w_sqrt[:, None]
+    y_res = y_hat - qhat @ (qhat.T @ y_hat)
+    var = np.mean(np.square(y_res), axis=0)
+    trait_valid = var > var_tol
+    inv = np.where(trait_valid, 1.0 / np.sqrt(np.maximum(var, var_tol)), 0.0)
+    return y_res * inv[None, :], trait_valid
 
 
 def _orthonormal_basis(mat: np.ndarray, *, rank_tol: float = 1e-7) -> np.ndarray:
@@ -249,14 +284,10 @@ def rotate_panel(
     w_sqrt = 1.0 / np.sqrt(np.asarray(s, np.float64) + delta_used)
     rotation = u * w_sqrt[None, :]            # A = U diag(sqrt(w)); ghat = g_std @ A
     x_hat = x_rot * w_sqrt[:, None]
-    y_hat = y_rot * w_sqrt[:, None]
     qhat = _orthonormal_basis(x_hat)
-
-    y_res = y_hat - qhat @ (qhat.T @ y_hat)
-    var = np.mean(np.square(y_res), axis=0)
-    trait_valid = var > var_tol
-    inv = np.where(trait_valid, 1.0 / np.sqrt(np.maximum(var, var_tol)), 0.0)
-    y_std = y_res * inv[None, :]
+    y_std, trait_valid = whiten_project_standardize(
+        y_rot, w_sqrt, qhat, var_tol=var_tol
+    )
 
     return RotatedPanel(
         rotation=rotation.astype(np.float32),

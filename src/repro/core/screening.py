@@ -2,16 +2,23 @@
 
     panel setup (once)                      Eq. 1, amortized across the scan
       -> relatedness exclusion (optional)   core.kinship
-      -> covariate basis + residualize      core.residualize
+      -> covariate basis + residualize      core.residualize (per trait
+         (host-side PanelStore,             block; device residency bounded
+          block slices on an LRU)           by trait_block, DESIGN.md §10)
       -> engine setup (optional)            engine.setup_scan — the lmm
          (streamed GRM, eigh, REML,         engine's amortized work lives
           one-time panel rotation)          here (core.grm / core.lmm, §9)
-    marker stream (planned + batched)       runtime.prefetch.BatchPlanner
+    2-D scan grid (marker x trait block)    runtime.prefetch planners
       -> host: decode / repack + stats      engine.prepare_batch (prefetch threads)
       -> staging: async host->device copy   runtime.prefetch.double_buffer
-      -> device: GEMM + epilogue            engine step (dense XLA or fused Pallas)
-      -> sinks: best / hits / QC / lambda   core.sinks (hit-driven host pull)
-      -> sink: commit shard + manifest      runtime.checkpoint (atomic, resumable)
+      -> device: GEMM + epilogue            engine step per grid cell — each
+         (trait blocks inner loop)          staged genotype batch is reused
+                                            across every trait block before
+                                            the next H2D copy
+      -> sinks: best / hits / QC / lambda   core.sinks (hit-driven host pull,
+                                            folds offset by block origin)
+      -> sink: commit cell shard+manifest   runtime.checkpoint (atomic,
+                                            resumable mid-panel)
 
 The driver is engine-agnostic: ``core.engines`` resolves ``cfg.engine``
 through a registry, and each engine owns both its host-side batch
@@ -19,6 +26,14 @@ preparation and its device step, so new engines require no driver changes
 (DESIGN.md §1-§4).  Genotype input may be one container or a per-chromosome
 fileset (``io.MultiFileSource``); the planner keeps every batch within one
 shard so different files stream and prefetch concurrently.
+
+``trait_block=0`` (the default) is the unblocked degenerate grid — one
+block spanning the panel — and reproduces the classic 1-D scan bitwise.
+A blocked scan is *also* bitwise-identical to the unblocked one for every
+engine (tests/test_traitblocks.py): every step computes the panel axis in
+fixed ``block_p``-wide tiles and scheduling blocks are aligned to them, so
+each tile's GEMM is the same shape over the same columns no matter how the
+axis is blocked — tiling changes scheduling and memory, never statistics.
 
 Distribution: the step builders accept a Mesh and return pjit'd (dense) or
 shard_map'd (fused) steps obeying ``runtime.sharding.gwas_shardings``.
@@ -36,6 +51,7 @@ from jax.sharding import Mesh
 
 from repro.core.association import AssocOptions
 from repro.core.engines import (
+    DeviceLRU,
     EngineContext,
     ScanEngine,
     build_dense_step,
@@ -54,21 +70,84 @@ from repro.core.sinks import (
     ResultSink,
 )
 from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
-from repro.runtime.prefetch import BatchPlanner, Prefetcher, double_buffer
+from repro.runtime.prefetch import (
+    BatchPlanner,
+    Prefetcher,
+    TraitBlock,
+    TraitBlockPlanner,
+    double_buffer,
+)
 
 __all__ = [
     "ScanConfig",
     "ScanResult",
     "GenomeScan",
+    "PanelStore",
     "build_dense_step",
     "build_fused_step",
     "build_lmm_step",
 ]
 
 
+class PanelStore:
+    """Host-resident residualized phenotype panel, tiled on the trait axis.
+
+    The store residualizes + standardizes the panel in fixed ``quantum``-wide
+    column chunks on the device (peak device footprint during setup: one
+    ``(N, quantum)`` slice, never ``(N, P)``), keeps the float32 results
+    host-side, and serves device-resident block slices through a small LRU —
+    panels that fit stay resident, paper-scale panels stream.  The chunk
+    decomposition is the same regardless of ``trait_block`` (it is the
+    compute quantum, not the scheduling block), so blocked and unblocked
+    stores hold bitwise-identical panels.
+    """
+
+    def __init__(self, blocks: list[TraitBlock], panel: np.ndarray,
+                 *, max_resident: int = 4):
+        self.blocks = list(blocks)
+        self._panel = panel               # (N, P) float32, host
+        self._dev = DeviceLRU(            # block index -> staged device array
+            max_resident,
+            lambda idx: jnp.asarray(self.host_block(self.blocks[idx])),
+        )
+
+    @classmethod
+    def residualized(
+        cls,
+        phenotypes: np.ndarray,
+        q_basis: Any,
+        blocks: list[TraitBlock],
+        *,
+        quantum: int,
+        max_resident: int = 4,
+    ) -> "PanelStore":
+        n, p = phenotypes.shape
+        panel = np.empty((n, p), np.float32)
+        for lo in range(0, p, quantum):
+            hi = min(lo + quantum, p)
+            chunk = residualize_and_standardize(
+                jnp.asarray(phenotypes[:, lo:hi]), q_basis
+            )
+            panel[:, lo:hi] = np.asarray(chunk.y)
+        return cls(blocks, panel, max_resident=max_resident)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def host_block(self, block: TraitBlock) -> np.ndarray:
+        return self._panel[:, block.lo : block.hi]
+
+    def device_block(self, block: TraitBlock) -> Any:
+        """Device array for one block; ``jnp.asarray`` launches the copy
+        asynchronously, so staging overlaps the previous cell's compute."""
+        return self._dev.get(block.index)
+
+
 @dataclass(frozen=True)
 class ScanConfig:
     batch_markers: int = 4096
+    trait_block: int = 0           # trait-axis tile width; 0 = unblocked (§10)
     options: AssocOptions = AssocOptions()
     engine: str = "dense"          # registry name: core.engines.available_engines()
     mode: str = "mp"               # sharding mode; "sample" implies engine="dense"
@@ -79,6 +158,9 @@ class ScanConfig:
     checkpoint_dir: str | None = None
     prefetch_depth: int = 3
     io_workers: int = 2
+    panel_resident_blocks: int = 4 # device LRU capacity for panel blocks
+    spill_dir: str | None = None   # HitSink spill location (None: all in RAM)
+    hit_spill_rows: int = 2_000_000  # spill past this many resident hit rows
     block_m: int = 256
     block_n: int = 512
     block_p: int = 256
@@ -93,8 +175,12 @@ class ScanConfig:
     def fingerprint_payload(self) -> dict:
         d = dataclasses.asdict(self)
         d["options"] = dataclasses.asdict(self.options)
-        # Mesh topology and host counts never enter the fingerprint (elastic).
-        d.pop("prefetch_depth"), d.pop("io_workers"), d.pop("checkpoint_dir")
+        # Mesh topology, host counts, and host-memory/spill knobs never
+        # enter the fingerprint (elastic restarts may retune them).
+        # trait_block STAYS: it defines the checkpoint grid decomposition.
+        for k in ("prefetch_depth", "io_workers", "checkpoint_dir",
+                  "panel_resident_blocks", "spill_dir", "hit_spill_rows"):
+            d.pop(k)
         return d
 
 
@@ -153,28 +239,48 @@ class GenomeScan:
         self.n_traits = phenotypes.shape[1]
         self.engine: ScanEngine = get_engine(config.engine)
 
+        # The trait axis of the 2-D scan grid (DESIGN.md §10).  block_p is
+        # the panel-axis compute tile of every engine's step; aligning the
+        # scheduling blocks to it is what makes the blocked scan
+        # bitwise-identical to the unblocked one.
+        self.trait_blocks = TraitBlockPlanner(
+            config.trait_block, quantum=config.block_p
+        ).plan(self.n_traits)
+        if config.multivariate and len(self.trait_blocks) > 1:
+            raise ValueError(
+                "the multivariate omnibus screen needs the whole panel per "
+                "marker (it combines evidence across every trait); run it "
+                "unblocked (trait_block=0)"
+            )
+
         self._n_traits_eff = float(self.n_traits)
         self._whitening = None
+        self.panels: PanelStore | None = None
         if self.engine.uses_global_panel:
-            # OLS panel prep (Eq. 1), amortized once.  Engines that build
-            # their own panel (lmm: rotated per LOCO scope in setup_scan)
-            # skip this entirely — no (N, P) array is kept alive for them.
+            # OLS panel prep (Eq. 1), amortized once per trait block into a
+            # host-side store.  Engines that build their own panel (lmm:
+            # rotated per LOCO scope in setup_scan) skip this entirely — no
+            # (N, P) device array is ever kept alive.
             self._q = covariate_basis(
                 jnp.asarray(covariates) if covariates is not None else None,
                 self.n_samples,
             )
-            self.panel = residualize_and_standardize(jnp.asarray(phenotypes), self._q)
-            self.n_covariates = self.panel.n_covariates
-            self._y = self.panel.y
+            phenotypes = np.asarray(phenotypes)
+            self.panels = PanelStore.residualized(
+                phenotypes, self._q, self.trait_blocks,
+                quantum=config.block_p,
+                max_resident=config.panel_resident_blocks,
+            )
+            self.n_covariates = int(self._q.shape[1]) - 1
             if config.multivariate:
                 from repro.core import multivariate as mv
 
-                self._whitening, eig = mv.whiten_panel(self.panel.y)
+                # unblocked by the check above: block 0 IS the full panel
+                y_full = self.panels.device_block(self.trait_blocks[0])
+                self._whitening, eig = mv.whiten_panel(y_full)
                 self._n_traits_eff = float(mv.effective_tests(eig))
         else:
             self._q = None
-            self.panel = None
-            self._y = None
             cov = None if covariates is None else np.asarray(covariates)
             self.n_covariates = 0 if cov is None else (1 if cov.ndim == 1 else cov.shape[1])
         self.dof = config.options.dof(self.n_samples, self.n_covariates)
@@ -195,6 +301,8 @@ class GenomeScan:
             whitening=self._whitening,
             keep=self._keep,
             excluded_samples=self.excluded_samples,
+            trait_blocks=tuple(self.trait_blocks),
+            panel_resident_blocks=config.panel_resident_blocks,
             loco=config.loco,
             grm_method=config.grm_method,
             grm_batch_markers=config.grm_batch_markers,
@@ -215,18 +323,34 @@ class GenomeScan:
         self.planner = BatchPlanner(config.batch_markers)
         self.plan = self.planner.plan(source)
 
-    # ---------------------------------------------------------------- batches
+    # ------------------------------------------------------------------ grid
 
     @property
     def n_batches(self) -> int:
         return len(self.plan)
+
+    @property
+    def n_trait_blocks(self) -> int:
+        return len(self.trait_blocks)
+
+    def _panel_block(self, batch, block: TraitBlock):
+        """The trailing step argument for one grid cell: the driver's
+        residualized store for OLS engines, the engine's own per-scope
+        rotated panel for the rest."""
+        if self.engine.uses_global_panel:
+            return self.panels.device_block(block)
+        return self.engine.panel_block(batch, block)
 
     # ------------------------------------------------------------------- run
 
     def _make_sinks(self, ckpt: ScanCheckpoint | None) -> list[ResultSink]:
         sinks: list[ResultSink] = [
             BestTraitSink(self.n_traits),
-            HitSink(self.config.hit_threshold_nlp),
+            HitSink(
+                self.config.hit_threshold_nlp,
+                spill_dir=self.config.spill_dir,
+                spill_rows=self.config.hit_spill_rows,
+            ),
             QCSink(self.source.n_markers, multivariate=self.config.multivariate),
             LambdaGCSink(),
         ]
@@ -237,8 +361,10 @@ class GenomeScan:
     def run(self, *, resume: bool = True) -> ScanResult:
         cfg = self.config
         m_total = self.source.n_markers
+        blocks = self.trait_blocks
         ckpt: ScanCheckpoint | None = None
         todo = self.plan
+        pending: set[tuple[int, int]] | None = None   # (batch, block) cells
         if cfg.checkpoint_dir:
             # Engine state (e.g. the LMM's GRM spectrum hash) is part of the
             # scan identity: resuming against a different GRM or refitted
@@ -259,16 +385,22 @@ class GenomeScan:
                     **({"engine_state": engine_state} if engine_state else {}),
                 }
             )
-            ckpt = ScanCheckpoint(cfg.checkpoint_dir, fingerprint=fp, n_batches=self.n_batches)
+            ckpt = ScanCheckpoint(
+                cfg.checkpoint_dir,
+                fingerprint=fp,
+                n_batches=self.n_batches,
+                n_blocks=len(blocks),
+            )
             if resume:
-                pending = set(ckpt.pending_batches())
-                todo = [b for b in self.plan if b.index in pending]
+                pending = set(ckpt.pending_cells())
+                # A marker batch is re-staged iff ANY of its cells is
+                # pending; completed cells of a re-staged batch are skipped
+                # in the inner loop and replayed from their shards below.
+                batches_pending = {b for b, _ in pending}
+                todo = [b for b in self.plan if b.index in batches_pending]
 
         sinks = self._make_sinks(ckpt)
-        # OLS engines take the driver's residualized panel as the trailing
-        # step argument; the lmm engine carries per-scope panels inside
-        # device_args instead (they differ per LOCO chromosome).
-        extra = (jnp.asarray(self._y),) if self.engine.uses_global_panel else ()
+        computed: set[tuple[int, int]] = set()
 
         prefetched = Prefetcher(
             todo,
@@ -282,18 +414,35 @@ class GenomeScan:
             # while the device chews on the previous batch (double buffer).
             return host_batch, tuple(jnp.asarray(a) for a in host_batch.device_args)
 
-        for host_batch, dev_args in double_buffer(prefetched, stage):
-            out = self._step(*dev_args, *extra)
-            view = BatchView(host_batch, out, self.n_traits)
-            payload: dict[str, np.ndarray] = {}
-            for sink in sinks:
-                sink.on_batch(view, payload)
+        stream = double_buffer(prefetched, stage)
+        try:
+            for host_batch, dev_args in stream:
+                bidx = host_batch.batch.index
+                # Trait blocks are the INNER loop: one staged genotype batch
+                # feeds every block before the next H2D copy (DESIGN.md §10).
+                for blk in blocks:
+                    cell = (bidx, blk.index)
+                    if pending is not None and cell not in pending:
+                        continue
+                    out = self._step(*dev_args, self._panel_block(host_batch.batch, blk))
+                    view = BatchView(
+                        host_batch, out, blk.n_traits,
+                        t_lo=blk.lo, block_index=blk.index,
+                    )
+                    payload: dict[str, np.ndarray] = {}
+                    for sink in sinks:
+                        sink.on_batch(view, payload)
+                    computed.add(cell)
+        finally:
+            # Error path included: a raising sink or engine step must not
+            # leave decode workers alive or the in-flight staged copy pinned.
+            stream.close()
+            prefetched.shutdown()
 
-        # Resume path: replay previously committed shards through the sinks.
+        # Resume path: replay committed-but-not-recomputed cells' shards.
         if ckpt is not None:
-            done_now = {b.index for b in todo}
-            for idx in sorted(ckpt.completed - done_now):
-                shard = ckpt.load_batch(idx)
+            for bidx, kidx in sorted(ckpt.completed_cells() - computed):
+                shard = ckpt.load_cell(bidx, kidx)
                 lo, hi = int(shard["lo"]), int(shard["hi"])
                 for sink in sinks:
                     sink.merge_shard(shard, lo, hi)

@@ -16,9 +16,18 @@ tile across PCIe at most once, lazily — the "hit-driven host pull" invariant
 hits, no matter how many sinks are attached).  The checkpoint committer is
 itself just the last sink in the chain, so crash-resume is one line of
 composition instead of special cases in the driver.
+
+Since the scan became a 2-D (marker-batch x trait-block) grid (DESIGN.md
+§10), one ``BatchView`` covers one grid *cell*: a marker range crossed with
+a trait range ``[t_lo, t_lo + n_traits)``.  Sinks fold cells — trait-indexed
+accumulators offset by the cell's block origin, marker-indexed accumulators
+written once per marker batch (the ``t_lo == 0`` cell carries them).  An
+unblocked scan is the degenerate single-block grid, so nothing changes for
+it.
 """
 from __future__ import annotations
 
+import os
 from typing import Any
 
 import jax.numpy as jnp
@@ -41,19 +50,34 @@ __all__ = [
 
 
 class BatchView:
-    """Lazy, cached host view over one device step output.
+    """Lazy, cached host view over one device step output — one grid cell.
 
     Every ``np.asarray`` on a device output is a host pull; multiple sinks
     share one view so each tile crosses at most once.  ``t_probe`` slices on
     the device *before* pulling, so the calibration probe never forces the
     full t tile across.
+
+    ``n_traits`` is the cell's trait-block width (the full panel width for
+    an unblocked scan); ``t_lo``/``block_index`` locate the block on the
+    global trait axis so sinks can offset their folds.
     """
 
-    def __init__(self, host: HostBatch, out: dict, n_traits: int):
+    def __init__(
+        self,
+        host: HostBatch,
+        out: dict,
+        n_traits: int,
+        *,
+        t_lo: int = 0,
+        block_index: int = 0,
+    ):
         self.batch: MarkerBatch = host.batch
         self.host = host
         self._out = out
         self.n_traits = n_traits
+        self.t_lo = t_lo
+        self.t_hi = t_lo + n_traits
+        self.block_index = block_index
         self.m_batch = host.batch.n_markers
         self._cache: dict[str, np.ndarray] = {}
 
@@ -124,26 +148,33 @@ class ResultSink:
 
 
 class BestTraitSink(ResultSink):
-    """Per-trait running best -log10 p and the global marker achieving it."""
+    """Per-trait running best -log10 p and the global marker achieving it.
+
+    Accumulators span the full panel; each grid cell folds into the trait
+    slice its block covers.  Blocks partition the trait axis, so per trait
+    the fold sequence is exactly the marker-batch order regardless of how
+    blocks interleave — block-fold order cannot change the result.
+    """
 
     def __init__(self, n_traits: int):
         self.best_nlp = np.zeros(n_traits, np.float32)
         self.best_marker = np.full(n_traits, -1, np.int64)
 
-    def _fold(self, b_best: np.ndarray, b_row: np.ndarray, lo: int) -> None:
-        improved = b_best > self.best_nlp
-        self.best_nlp = np.where(improved, b_best, self.best_nlp)
-        self.best_marker = np.where(
-            improved, lo + b_row.astype(np.int64), self.best_marker
+    def _fold(self, b_best: np.ndarray, b_row: np.ndarray, lo: int, t_lo: int) -> None:
+        sl = slice(t_lo, t_lo + b_best.shape[0])
+        improved = b_best > self.best_nlp[sl]
+        self.best_nlp[sl] = np.where(improved, b_best, self.best_nlp[sl])
+        self.best_marker[sl] = np.where(
+            improved, lo + b_row.astype(np.int64), self.best_marker[sl]
         )
 
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
         payload["best_nlp"] = view.best_nlp
         payload["best_row"] = view.best_row
-        self._fold(view.best_nlp, view.best_row, view.batch.lo)
+        self._fold(view.best_nlp, view.best_row, view.batch.lo, view.t_lo)
 
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
-        self._fold(shard["best_nlp"], shard["best_row"], lo)
+        self._fold(shard["best_nlp"], shard["best_row"], lo, int(shard.get("t_lo", 0)))
 
     def result(self) -> dict[str, Any]:
         return {"best_nlp": self.best_nlp, "best_marker": self.best_marker}
@@ -151,12 +182,68 @@ class BestTraitSink(ResultSink):
 
 class HitSink(ResultSink):
     """Collect (marker, trait) cells above the genome-wide line, pulling the
-    full tiles only for batches whose device-side hit counter is non-zero."""
+    full tiles only for cells whose device-side hit counter is non-zero.
 
-    def __init__(self, threshold_nlp: float):
+    Trait columns are globalized with the cell's block origin at collection
+    time, so committed shards and the final result always carry global trait
+    indices.
+
+    Scan-time host RAM is bounded: once more than ``spill_rows`` hit rows
+    accumulate (dense hit regions on a wide panel are unbounded over a
+    whole scan), the in-RAM buffers are flushed to appendable ``.npz`` part
+    files under ``spill_dir`` and the RAM is released.  ``result()``
+    re-reads the parts in order (then unlinks them), so spilling never
+    changes the returned arrays — append order is preserved exactly.  Note
+    the bound covers the *scan*: ``result()`` still materializes the full
+    hit set once, for the final ``ScanResult`` — replacing that with
+    streaming summary-stat writers is a ROADMAP item.  ``spill_dir=None``
+    (the default) disables spilling and keeps the historical
+    everything-in-RAM behavior.
+    """
+
+    def __init__(
+        self,
+        threshold_nlp: float,
+        *,
+        spill_dir: str | None = None,
+        spill_rows: int = 2_000_000,
+    ):
         self.threshold = threshold_nlp
+        self.spill_dir = spill_dir
+        self.spill_rows = max(1, spill_rows)
         self._hits: list[np.ndarray] = []
         self._stats: list[np.ndarray] = []
+        self._rows_in_ram = 0
+        self._spill_paths: list[str] = []
+        self.spilled_rows = 0
+        if spill_dir is not None and os.path.isdir(spill_dir):
+            # The spill dir is per-run scratch (the CLI points it at --out):
+            # parts a crashed previous run left behind would collide by
+            # index with ours and masquerade as results — clear them.
+            for stale in os.listdir(spill_dir):
+                if stale.startswith("hits_spill_") and stale.endswith(".npz"):
+                    os.unlink(os.path.join(spill_dir, stale))
+
+    def _append(self, hits: np.ndarray, stats: np.ndarray) -> None:
+        self._hits.append(hits)
+        self._stats.append(stats)
+        self._rows_in_ram += len(hits)
+        if self.spill_dir is not None and self._rows_in_ram >= self.spill_rows:
+            self._flush()
+
+    def _flush(self) -> None:
+        os.makedirs(self.spill_dir, exist_ok=True)
+        part = os.path.join(
+            self.spill_dir, f"hits_spill_{len(self._spill_paths):05d}.npz"
+        )
+        tmp = part + ".tmp.npz"
+        np.savez(tmp, hits=np.concatenate(self._hits), hit_stats=np.concatenate(self._stats))
+        os.replace(tmp, part)
+        self._spill_paths.append(part)
+        self.spilled_rows += self._rows_in_ram
+        self._hits.clear()
+        self._stats.clear()
+        self._rows_in_ram = 0
 
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
         batch_hits = np.zeros((0, 2), np.int32)
@@ -166,27 +253,44 @@ class HitSink(ResultSink):
             rows, cols = np.nonzero(nlp >= self.threshold)
             r_np, t_np = view.r, view.t
             batch_hits = np.stack(
-                [rows.astype(np.int32) + view.batch.lo, cols.astype(np.int32)], 1
+                [
+                    rows.astype(np.int32) + view.batch.lo,
+                    cols.astype(np.int32) + view.t_lo,
+                ],
+                1,
             )
             batch_stats = np.stack(
                 [r_np[rows, cols], t_np[rows, cols], nlp[rows, cols]], 1
             ).astype(np.float32)
         payload["hits"] = batch_hits
         payload["hit_stats"] = batch_stats
-        self._hits.append(batch_hits)
-        self._stats.append(batch_stats)
+        self._append(batch_hits, batch_stats)
 
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
-        self._hits.append(shard["hits"])
-        self._stats.append(shard["hit_stats"])
+        self._append(shard["hits"], shard["hit_stats"])
 
     def result(self) -> dict[str, Any]:
-        return {
-            "hits": np.concatenate(self._hits) if self._hits else np.zeros((0, 2), np.int32),
-            "hit_stats": (
-                np.concatenate(self._stats) if self._stats else np.zeros((0, 3), np.float32)
-            ),
-        }
+        hits = [np.zeros((0, 2), np.int32)]
+        stats = [np.zeros((0, 3), np.float32)]
+        for part in self._spill_paths:
+            with np.load(part) as z:
+                hits.append(z["hits"])
+                stats.append(z["hit_stats"])
+        hits.extend(self._hits)
+        stats.extend(self._stats)
+        out = {"hits": np.concatenate(hits), "hit_stats": np.concatenate(stats)}
+        # Fold everything back into the RAM buffers BEFORE unlinking the
+        # consumed parts: result() stays repeatable (a second call returns
+        # the same arrays), and parts — intermediate state, not run
+        # artifacts — don't pile up next to hits.tsv across reruns.
+        self._hits = [out["hits"]]
+        self._stats = [out["hit_stats"]]
+        self._rows_in_ram = len(out["hits"])
+        for part in self._spill_paths:
+            if os.path.exists(part):
+                os.unlink(part)
+        self._spill_paths.clear()
+        return out
 
 
 class QCSink(ResultSink):
@@ -199,6 +303,11 @@ class QCSink(ResultSink):
         self.omnibus_nlp = np.zeros(n_markers, np.float32) if multivariate else None
 
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        # Marker-level tracks are identical across trait blocks; the t_lo==0
+        # cell carries them (one device pull and one persisted copy per
+        # marker batch, not one per grid cell).
+        if view.t_lo != 0:
+            return
         lo, hi = view.batch.lo, view.batch.hi
         self.maf[lo:hi] = view.maf
         self.valid[lo:hi] = view.valid
@@ -209,6 +318,8 @@ class QCSink(ResultSink):
             payload["omnibus_nlp"] = self.omnibus_nlp[lo:hi]
 
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
+        if "maf" not in shard:  # a t_lo > 0 cell: no marker-level tracks
+            return
         self.maf[lo:hi] = shard["maf"]
         self.valid[lo:hi] = shard["valid"]
         if self.omnibus_nlp is not None and "omnibus_nlp" in shard:
@@ -229,6 +340,11 @@ class LambdaGCSink(ResultSink):
         self._samples: list[np.ndarray] = []
 
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
+        # The probe samples the *global* first trait, which lives in the
+        # t_lo==0 block; other cells contribute nothing, so a blocked scan
+        # estimates lambda from exactly the same sample as an unblocked one.
+        if view.t_lo != 0:
+            return
         probe = np.asarray(view.t_probe(self.rows), np.float32)
         payload["t_probe"] = probe
         self._samples.append(probe)
@@ -246,9 +362,10 @@ class LambdaGCSink(ResultSink):
 
 
 class CheckpointSink(ResultSink):
-    """Commit each batch's accumulated payload as an atomic shard.  Must be
-    the LAST sink in the chain: it persists whatever the sinks before it
-    put into ``payload``."""
+    """Commit each grid cell's accumulated payload as an atomic shard.  Must
+    be the LAST sink in the chain: it persists whatever the sinks before it
+    put into ``payload``.  Shards carry the cell's trait extent so resume
+    folds land at the right block origin."""
 
     def __init__(self, ckpt: ScanCheckpoint):
         self.ckpt = ckpt
@@ -257,6 +374,8 @@ class CheckpointSink(ResultSink):
         shard = {
             "lo": np.asarray(view.batch.lo),
             "hi": np.asarray(view.batch.hi),
+            "t_lo": np.asarray(view.t_lo),
+            "t_hi": np.asarray(view.t_hi),
             **payload,
         }
-        self.ckpt.commit_batch(view.batch.index, shard)
+        self.ckpt.commit_cell(view.batch.index, view.block_index, shard)

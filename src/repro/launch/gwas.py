@@ -8,6 +8,12 @@
     # per-chromosome fileset: glob (quote it!) or comma list
     python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' ...
 
+    # paper-scale trait panels: tile the trait axis (2-D scan grid with
+    # out-of-core panel blocks; bitwise-identical results, device memory
+    # bounded by the block width instead of the panel width)
+    python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' \
+        --trait-block 2048 ...
+
     # mixed model (population structure / relatedness): streamed GRM +
     # one-time rotation; --loco subtracts each chromosome's GRM share
     python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' \
@@ -47,6 +53,22 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dof-mode", default="paper", choices=["paper", "exact"])
     ap.add_argument("--precision", default="fp32", choices=["fp32", "bf16"])
     ap.add_argument("--batch-markers", type=int, default=8192)
+    ap.add_argument("--trait-block", type=int, default=0,
+                    help="tile the trait axis into blocks of this width "
+                         "(2-D scan grid; 0 = unblocked; rounded up to a "
+                         "multiple of the block-p compute tile).  Peak "
+                         "device memory then scales with the block, not "
+                         "the panel; results are bitwise-identical either "
+                         "way")
+    ap.add_argument("--block-p", type=int, default=256,
+                    help="panel-axis compute tile: the fused kernel's p-tile "
+                         "and the dense/lmm GEMM chunk; trait blocks align "
+                         "to it")
+    ap.add_argument("--panel-resident-blocks", type=int, default=4,
+                    help="how many panel blocks the device LRU keeps staged")
+    ap.add_argument("--hit-spill-rows", type=int, default=2_000_000,
+                    help="spill collected hits to npz parts under --out "
+                         "once this many rows are resident in RAM")
     lmm = ap.add_argument_group("mixed model (--engine lmm)")
     lmm.add_argument("--loco", action="store_true",
                      help="leave-one-chromosome-out GRM (needs a multi-file fileset)")
@@ -83,6 +105,7 @@ def main(argv=None) -> None:
 
     config = ScanConfig(
         batch_markers=args.batch_markers,
+        trait_block=args.trait_block,
         engine=args.engine,
         mode=args.mode,
         options=AssocOptions(dof_mode=args.dof_mode, precision=args.precision),
@@ -92,6 +115,10 @@ def main(argv=None) -> None:
         multivariate=args.multivariate,
         checkpoint_dir=args.checkpoint_dir,
         io_workers=args.io_workers,
+        block_p=args.block_p,
+        panel_resident_blocks=args.panel_resident_blocks,
+        spill_dir=args.out,
+        hit_spill_rows=args.hit_spill_rows,
         loco=args.loco,
         grm_method=args.grm_method,
         grm_batch_markers=args.grm_batch_markers,
@@ -127,6 +154,9 @@ def main(argv=None) -> None:
         "markers_per_s": result.n_markers / wall,
         "engine": args.engine,
         "genotype_shards": getattr(source, "n_shards", 1),
+        "trait_block": args.trait_block,
+        "trait_blocks": scan.n_trait_blocks,
+        "grid_cells": scan.n_batches * scan.n_trait_blocks,
     }
     if result.lmm_info:
         info = result.lmm_info

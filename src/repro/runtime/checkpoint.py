@@ -1,11 +1,12 @@
 """Fault-tolerant checkpointing for both wings.
 
-``ScanCheckpoint`` — the GWAS scan is a deterministic stream of marker
-batches; each completed batch commits a result shard plus an atomic manifest
-update (write-tmp, fsync, rename).  Restart resumes from the manifest; the
-batch decomposition is independent of the device mesh, so a resume may use a
-*different* mesh/host count (elastic scaling) — remaining batches are simply
-re-partitioned.
+``ScanCheckpoint`` — the GWAS scan is a deterministic stream of
+(marker-batch x trait-block) grid cells; each completed cell commits a
+result shard plus an atomic manifest update (write-tmp, fsync, rename).
+Restart resumes from the manifest — mid-panel if the cut landed between
+trait blocks of one batch; the grid decomposition is independent of the
+device mesh, so a resume may use a *different* mesh/host count (elastic
+scaling) — remaining cells are simply re-partitioned.
 
 ``TrainCheckpoint`` — step-granular pytree checkpoints for the LM wing:
 flat ``{path: ndarray}`` .npz shards plus a JSON manifest, same atomic
@@ -49,26 +50,39 @@ def _atomic_write_json(path: str, payload: dict) -> None:
 
 
 class ScanCheckpoint:
-    """Batch-granular scan progress under ``root/``:
+    """Grid-cell-granular scan progress under ``root/``:
 
-        manifest.json                    {fingerprint, n_batches, completed,
-                                          failed, created, updated}
-        batch_<idx>.npz                  committed result shard
+        manifest.json                    {fingerprint, n_batches, n_blocks,
+                                          completed, failed, created, updated}
+        batch_<idx>.npz                  committed result shard (n_blocks == 1)
+        cell_<idx>_<blk>.npz             committed result shard (blocked scan)
+
+    The unit of progress is one (marker-batch, trait-block) cell of the 2-D
+    scan grid (DESIGN.md §10).  Unblocked scans have ``n_blocks == 1`` and
+    keep the historical batch-keyed shard layout; blocked scans key every
+    shard and manifest entry by cell, so a resume can pick up mid-panel —
+    some trait blocks of a marker batch committed, the rest recomputed.
+    (Checkpoints written by pre-grid versions are refused by the config
+    fingerprint — ``trait_block`` is scan identity, and the grid version
+    also changed the step's GEMM tiling — the same strictness as any other
+    scan-defining config change.)
     """
 
     MANIFEST = "manifest.json"
 
-    def __init__(self, root: str, *, fingerprint: str, n_batches: int):
+    def __init__(self, root: str, *, fingerprint: str, n_batches: int, n_blocks: int = 1):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.fingerprint = fingerprint
         self.n_batches = n_batches
+        self.n_blocks = n_blocks
         self._manifest_path = os.path.join(root, self.MANIFEST)
         existing = self._load_manifest()
         if existing is None:
             self._manifest = {
                 "fingerprint": fingerprint,
                 "n_batches": n_batches,
+                "n_blocks": n_blocks,
                 "completed": {},
                 "failed": {},
                 "created": time.time(),
@@ -86,6 +100,15 @@ class ScanCheckpoint:
                     f"batch decomposition changed ({existing['n_batches']} -> {n_batches}); "
                     "keep batch size stable across restarts"
                 )
+            # Manifests written before the 2-D grid carry no n_blocks: they
+            # are unblocked scans by construction.
+            if existing.get("n_blocks", 1) != n_blocks:
+                raise ValueError(
+                    f"trait-block decomposition changed "
+                    f"({existing.get('n_blocks', 1)} -> {n_blocks}); "
+                    "keep trait_block stable across restarts"
+                )
+            existing.setdefault("n_blocks", n_blocks)
             self._manifest = existing
 
     def _load_manifest(self) -> dict | None:
@@ -94,39 +117,80 @@ class ScanCheckpoint:
         with open(self._manifest_path) as f:
             return json.load(f)
 
+    # ------------------------------------------------------------- cell keys
+
+    def _key(self, batch: int, block: int) -> str:
+        return str(batch) if self.n_blocks == 1 else f"{batch}.{block}"
+
+    def _shard_name(self, batch: int, block: int) -> str:
+        if self.n_blocks == 1:
+            return f"batch_{batch:06d}.npz"
+        return f"cell_{batch:06d}_{block:04d}.npz"
+
     @property
     def completed(self) -> set[int]:
-        return {int(k) for k in self._manifest["completed"]}
+        """Batch indices with at least one committed cell (all cells, when
+        unblocked).  Prefer ``completed_cells`` for grid-aware callers."""
+        return {b for b, _ in self.completed_cells()}
+
+    def completed_cells(self) -> set[tuple[int, int]]:
+        out: set[tuple[int, int]] = set()
+        for k in self._manifest["completed"]:
+            if "." in k:
+                b, blk = k.split(".", 1)
+                out.add((int(b), int(blk)))
+            else:
+                out.add((int(k), 0))
+        return out
+
+    def pending_cells(self) -> list[tuple[int, int]]:
+        done = self.completed_cells()
+        return [
+            (b, k)
+            for b in range(self.n_batches)
+            for k in range(self.n_blocks)
+            if (b, k) not in done
+        ]
 
     def pending_batches(self) -> list[int]:
-        done = self.completed
-        return [i for i in range(self.n_batches) if i not in done]
+        """Batches with any pending cell (every pending batch, unblocked)."""
+        pending = {b for b, _ in self.pending_cells()}
+        return sorted(pending)
 
-    def commit_batch(self, idx: int, arrays: dict[str, np.ndarray]) -> str:
+    # --------------------------------------------------------------- commits
+
+    def commit_cell(self, batch: int, block: int, arrays: dict[str, np.ndarray]) -> str:
         """Write the shard, then the manifest — in that order, so a crash
-        between the two just re-does one batch."""
-        shard = os.path.join(self.root, f"batch_{idx:06d}.npz")
+        between the two just re-does one grid cell."""
+        shard = os.path.join(self.root, self._shard_name(batch, block))
         tmp = shard + ".tmp.npz"
         np.savez_compressed(tmp, **arrays)
         os.replace(tmp, shard)
-        self._manifest["completed"][str(idx)] = os.path.basename(shard)
-        self._manifest["failed"].pop(str(idx), None)
+        key = self._key(batch, block)
+        self._manifest["completed"][key] = os.path.basename(shard)
+        self._manifest["failed"].pop(key, None)
         self._manifest["updated"] = time.time()
         _atomic_write_json(self._manifest_path, self._manifest)
         return shard
 
-    def record_failure(self, idx: int, err: str) -> None:
-        self._manifest["failed"][str(idx)] = err[:500]
+    def commit_batch(self, idx: int, arrays: dict[str, np.ndarray]) -> str:
+        return self.commit_cell(idx, 0, arrays)
+
+    def record_failure(self, idx: int, err: str, block: int = 0) -> None:
+        self._manifest["failed"][self._key(idx, block)] = err[:500]
         self._manifest["updated"] = time.time()
         _atomic_write_json(self._manifest_path, self._manifest)
 
-    def load_batch(self, idx: int) -> dict[str, np.ndarray]:
-        name = self._manifest["completed"][str(idx)]
+    def load_cell(self, batch: int, block: int) -> dict[str, np.ndarray]:
+        name = self._manifest["completed"][self._key(batch, block)]
         with np.load(os.path.join(self.root, name)) as z:
             return {k: z[k] for k in z.files}
 
+    def load_batch(self, idx: int) -> dict[str, np.ndarray]:
+        return self.load_cell(idx, 0)
+
     def is_complete(self) -> bool:
-        return len(self._manifest["completed"]) == self.n_batches
+        return len(self._manifest["completed"]) == self.n_batches * self.n_blocks
 
 
 class TrainCheckpoint:

@@ -2,18 +2,23 @@
 overlap with device compute through a bounded queue, and double-buffer the
 host->device transfer.
 
-Three cooperating pieces (DESIGN.md §3):
+Four cooperating pieces (DESIGN.md §3, §10):
 
-``BatchPlanner``   maps the global marker range onto ``MarkerBatch`` work
-                   items.  Batches never cross a shard boundary of a
-                   multi-file source, so every item is one contiguous read
-                   from one file — items from different files then stream
-                   and prefetch concurrently on the worker pool.
-``Prefetcher``     runs the engine's host-side batch preparation on worker
-                   threads, yielding in submission order with a bounded
-                   in-flight window.
-``double_buffer``  issues the (async) host->device transfer for batch k+1
-                   while the device computes on batch k.
+``BatchPlanner``      maps the global marker range onto ``MarkerBatch`` work
+                      items.  Batches never cross a shard boundary of a
+                      multi-file source, so every item is one contiguous read
+                      from one file — items from different files then stream
+                      and prefetch concurrently on the worker pool.
+``TraitBlockPlanner`` maps the trait (phenotype) axis onto ``TraitBlock``
+                      tiles, making the scan a 2-D (marker-batch x
+                      trait-block) grid.  The marker stream is the outer
+                      loop, so each staged genotype batch is reused across
+                      every resident trait block before the next H2D copy.
+``Prefetcher``        runs the engine's host-side batch preparation on worker
+                      threads, yielding in submission order with a bounded
+                      in-flight window.
+``double_buffer``     issues the (async) host->device transfer for batch k+1
+                      while the device computes on batch k.
 
 The GWAS scan is IO-bound on the genotype stream when the fused kernel path
 is active (2-bit slabs are only N/4 bytes per marker), so a shallow queue and
@@ -29,7 +34,14 @@ T = TypeVar("T")
 U = TypeVar("U")
 V = TypeVar("V")
 
-__all__ = ["MarkerBatch", "BatchPlanner", "Prefetcher", "double_buffer"]
+__all__ = [
+    "MarkerBatch",
+    "BatchPlanner",
+    "TraitBlock",
+    "TraitBlockPlanner",
+    "Prefetcher",
+    "double_buffer",
+]
 
 _SENTINEL = object()
 
@@ -87,6 +99,61 @@ class BatchPlanner:
         return out
 
 
+@dataclass(frozen=True)
+class TraitBlock:
+    """One tile of the trait (phenotype) axis — the second dimension of the
+    2-D scan grid.  ``index`` is the block ordinal; ``lo:hi`` the global
+    trait range the block covers."""
+
+    index: int
+    lo: int          # global trait start (inclusive)
+    hi: int          # global trait end (exclusive)
+
+    @property
+    def n_traits(self) -> int:
+        return self.hi - self.lo
+
+
+class TraitBlockPlanner:
+    """Deterministically tile the trait axis into ``TraitBlock``s.
+
+    ``trait_block=0`` (the default) means unblocked: one block spanning the
+    whole panel, which reproduces the classic 1-D scan exactly.  Like the
+    marker plan, the decomposition depends only on (n_traits, trait_block,
+    quantum), never on topology, so checkpoint grid cells stay valid across
+    restarts.
+
+    ``quantum`` is the panel-axis *compute tile* of the device steps
+    (``ScanConfig.block_p``; the fused kernel's p-tile and the dense/lmm
+    GEMM's ``trait_tile``).  A non-zero ``trait_block`` is rounded UP to a
+    multiple of it, so every block is a union of whole, globally-aligned
+    compute tiles: each tile's GEMM is then the *same shape over the same
+    columns* no matter how the trait axis is blocked — the mechanism behind
+    the blocked == unblocked bitwise contract (DESIGN.md §10).  GEMM
+    micro-kernels group accumulators by output width, so unaligned blocks
+    would compute last bits differently.
+    """
+
+    def __init__(self, trait_block: int = 0, *, quantum: int = 1):
+        if trait_block < 0:
+            raise ValueError(f"trait_block must be >= 0, got {trait_block}")
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        if trait_block:
+            trait_block = ((trait_block + quantum - 1) // quantum) * quantum
+        self.trait_block = trait_block
+        self.quantum = quantum
+
+    def plan(self, n_traits: int) -> list[TraitBlock]:
+        if n_traits <= 0:
+            raise ValueError(f"n_traits must be positive, got {n_traits}")
+        b = self.trait_block or n_traits
+        return [
+            TraitBlock(index=i, lo=lo, hi=min(lo + b, n_traits))
+            for i, lo in enumerate(range(0, n_traits, b))
+        ]
+
+
 def double_buffer(items: Iterable[T], stage: Callable[[T], V]) -> Iterator[V]:
     """Stage item k+1 (issue its async host->device transfer) before the
     consumer finishes computing on item k — classic two-deep pipelining.
@@ -134,7 +201,8 @@ class Prefetcher:
         self._next_yield = 0
         self._stop = False
         self._workers = [
-            threading.Thread(target=self._worker, daemon=True) for _ in range(max(1, num_workers))
+            threading.Thread(target=self._worker, daemon=True, name=f"prefetch-worker-{i}")
+            for i in range(max(1, num_workers))
         ]
 
     def _claim(self) -> int | None:
@@ -165,6 +233,20 @@ class Prefetcher:
                     self._errors[idx] = e
                     self._ready.notify_all()
 
+    def shutdown(self, *, join_timeout: float = 5.0) -> None:
+        """Stop the worker pool and join the threads (idempotent).
+
+        Called by the consumer's error path as well as normal exhaustion:
+        a sink or engine step raising mid-scan must not leave decode workers
+        alive, still pulling from the genotype source.
+        """
+        with self._lock:
+            self._stop = True
+            self._ready.notify_all()
+        for w in self._workers:
+            if w.is_alive() and w is not threading.current_thread():
+                w.join(timeout=join_timeout)
+
     def __iter__(self) -> Iterator[U]:
         for w in self._workers:
             w.start()
@@ -185,9 +267,4 @@ class Prefetcher:
                     raise err
                 yield out  # type: ignore[misc]
         finally:
-            with self._lock:
-                self._stop = True
-                self._ready.notify_all()
-            for w in self._workers:
-                if w.is_alive():
-                    w.join(timeout=1.0)
+            self.shutdown()

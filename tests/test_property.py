@@ -313,6 +313,102 @@ def test_shard_fold_survives_npz_roundtrip(case):
     assert a["lambda_gc"] == b["lambda_gc"]
 
 
+# ------------------------------------------------- 2-D grid cell folding
+#
+# The blocked scan (DESIGN.md §10) folds (marker-batch x trait-block) grid
+# cells instead of whole batches.  Blocks partition the trait axis, so the
+# order cells are folded in — the driver's marker-major order, a resume's
+# replay order, anything — must never change what the sinks accumulate.
+
+
+def _cell_view(arrays, lo, hi, t_lo, t_hi, index, block_index, threshold):
+    """A BatchView over one (marker, trait-block) grid cell."""
+    from repro.core.engines import HostBatch
+    from repro.core.sinks import BatchView
+    from repro.runtime.prefetch import MarkerBatch
+
+    nlp, r, t, maf, valid = arrays
+    sub = nlp[lo:hi, t_lo:t_hi]
+    out = {
+        "nlp": sub,
+        "r": r[lo:hi, t_lo:t_hi],
+        "t": t[lo:hi, t_lo:t_hi],
+        "maf": maf[lo:hi],
+        "valid": valid[lo:hi],
+        "batch_best_nlp": sub.max(axis=0),
+        "batch_best_row": sub.argmax(axis=0).astype(np.int32),
+        "hit_count": np.int32((sub >= threshold).sum()),
+    }
+    batch = MarkerBatch(index=index, lo=lo, hi=hi, source_id=0, local_lo=lo, local_hi=hi)
+    return BatchView(
+        HostBatch(batch, ()), out, t_hi - t_lo, t_lo=t_lo, block_index=block_index
+    )
+
+
+_grid_case = st.tuples(
+    st.integers(0, 2**31 - 1),       # stream seed
+    st.integers(8, 48),              # markers
+    st.integers(4, 12),              # traits
+    st.floats(0.0, 1.0),             # hit-threshold quantile
+    st.lists(st.integers(1, 47), max_size=3, unique=True),   # marker cuts
+    st.lists(st.integers(2, 11), max_size=2, unique=True),   # trait cuts
+    st.integers(0, 2**31 - 1),       # cell-order permutation seed
+)
+
+
+@given(_grid_case)
+@settings(max_examples=30, deadline=None)
+def test_block_fold_order_never_changes_sink_results(case):
+    seed, m, p, q, raw_cuts, raw_tcuts, perm_seed = case
+    arrays = _sink_stream(seed, m, p)
+    threshold = float(np.quantile(arrays[0], q))
+    bounds = [0, *sorted({c for c in raw_cuts if c < m}), m]
+    tbounds = [0, *sorted({c for c in raw_tcuts if c < p}), p]
+    cells = [
+        (i, lo, hi, k, t_lo, t_hi)
+        for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:]))
+        for k, (t_lo, t_hi) in enumerate(zip(tbounds[:-1], tbounds[1:]))
+    ]
+
+    results = []
+    orders = [
+        list(range(len(cells))),
+        list(np.random.default_rng(perm_seed).permutation(len(cells))),
+        list(reversed(range(len(cells)))),
+    ]
+    for order in orders:
+        sinks = _make_sinks(m, p, threshold)
+        for ci in order:
+            i, lo, hi, k, t_lo, t_hi = cells[ci]
+            view = _cell_view(arrays, lo, hi, t_lo, t_hi, i, k, threshold)
+            pay: dict = {}
+            for s in sinks:
+                s.on_batch(view, pay)
+        results.append(_results(sinks))
+
+    ref = results[0]
+    # the fold must also equal a plain single-cell (unblocked) pass —
+    # except lambda_gc, whose probe is a per-marker-batch subsample by
+    # design (same exclusion as the shard-fold properties above)
+    single = _make_sinks(m, p, threshold)
+    pay: dict = {}
+    v = _cell_view(arrays, 0, m, 0, p, 0, 0, threshold)
+    for s in single:
+        s.on_batch(v, pay)
+    rs = _results(single)
+
+    for got, check_lambda in [(r, True) for r in results[1:]] + [(rs, False)]:
+        np.testing.assert_array_equal(ref["best_nlp"], got["best_nlp"])
+        np.testing.assert_array_equal(ref["best_marker"], got["best_marker"])
+        oa, ob = np.lexsort(ref["hits"].T), np.lexsort(got["hits"].T)
+        np.testing.assert_array_equal(ref["hits"][oa], got["hits"][ob])
+        np.testing.assert_array_equal(ref["hit_stats"][oa], got["hit_stats"][ob])
+        np.testing.assert_array_equal(ref["maf"], got["maf"])
+        np.testing.assert_array_equal(ref["valid"], got["valid"])
+        if check_lambda:
+            assert ref["lambda_gc"] == got["lambda_gc"]
+
+
 @given(st.integers(1, 6), st.integers(1, 3))
 @settings(max_examples=15, deadline=None)
 def test_correlation_bounded(m_markers, p_traits):

@@ -1,0 +1,333 @@
+"""The 2-D (marker-batch x trait-block) scan grid (DESIGN.md §10).
+
+The contract under test: a blocked scan is *bitwise-identical* to the
+unblocked scan for every engine (hit rows compared up to ordering — the
+grid emits them block-major), resume works from a checkpoint cut
+mid-trait-block, the checkpoint refuses a changed grid decomposition, and
+the error path tears the prefetch pool down.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.screening import GenomeScan, PanelStore, ScanConfig
+from repro.core.sinks import ResultSink
+from repro.io import open_genotypes, plink, synth
+from repro.runtime.prefetch import TraitBlockPlanner
+
+
+@pytest.fixture(scope="module")
+def source(cohort_files):
+    return plink.PlinkBed(cohort_files["bed"])
+
+
+@pytest.fixture(scope="module")
+def split_beds(cohort, tmp_path_factory):
+    stem = str(tmp_path_factory.mktemp("tb_multifile") / "cohort")
+    return synth.write_split_plink(cohort, stem, n_shards=3)
+
+
+def _cfg(**kw):
+    # block_p=4 keeps the compute tile narrower than the 12-trait fixture
+    # panel, so small trait_block values yield real multi-block grids
+    base = dict(batch_markers=128, block_m=64, block_n=128, block_p=4)
+    base.update(kw)
+    return ScanConfig(**base)
+
+
+def _assert_same_scan(a, b):
+    """Bitwise equality of two ScanResults, hits canonicalized by sort."""
+    np.testing.assert_array_equal(a.best_nlp, b.best_nlp)
+    np.testing.assert_array_equal(a.best_marker, b.best_marker)
+    np.testing.assert_array_equal(a.maf, b.maf)
+    np.testing.assert_array_equal(a.valid, b.valid)
+    assert a.lambda_gc == b.lambda_gc
+    oa, ob = np.lexsort(a.hits.T), np.lexsort(b.hits.T)
+    np.testing.assert_array_equal(a.hits[oa], b.hits[ob])
+    np.testing.assert_array_equal(a.hit_stats[oa], b.hit_stats[ob])
+
+
+# ------------------------------------------------------------------- planner
+
+
+def test_trait_block_planner_unblocked_is_single_block():
+    plan = TraitBlockPlanner(0).plan(17)
+    assert len(plan) == 1 and (plan[0].lo, plan[0].hi) == (0, 17)
+
+
+def test_trait_block_planner_covers_axis_in_order():
+    for p, k in [(13, 4), (5, 2), (12, 5), (16, 16), (100, 7), (2, 2)]:
+        plan = TraitBlockPlanner(k).plan(p)
+        assert plan[0].lo == 0 and plan[-1].hi == p
+        assert all(a.hi == b.lo for a, b in zip(plan[:-1], plan[1:]))
+        assert [b.index for b in plan] == list(range(len(plan)))
+        assert all(b.n_traits <= k for b in plan)
+
+
+def test_trait_block_planner_rounds_to_quantum():
+    # trait_block is rounded UP to a multiple of the compute tile, so every
+    # block is a union of whole, globally-aligned GEMM tiles (the bitwise
+    # contract's mechanism)
+    pl = TraitBlockPlanner(5, quantum=4)
+    assert pl.trait_block == 8
+    plan = pl.plan(19)
+    assert [(b.lo, b.hi) for b in plan] == [(0, 8), (8, 16), (16, 19)]
+    assert all(b.lo % 4 == 0 for b in plan)
+    # already-aligned widths pass through; 0 stays unblocked
+    assert TraitBlockPlanner(8, quantum=4).trait_block == 8
+    assert TraitBlockPlanner(0, quantum=4).plan(19)[0].n_traits == 19
+
+
+def test_trait_block_planner_rejects_degenerate():
+    with pytest.raises(ValueError, match=">= 0"):
+        TraitBlockPlanner(-3)
+    with pytest.raises(ValueError, match=">= 1"):
+        TraitBlockPlanner(4, quantum=0)
+    with pytest.raises(ValueError, match="positive"):
+        TraitBlockPlanner(4).plan(0)
+
+
+# --------------------------------------------------- blocked == unblocked
+
+
+@pytest.mark.parametrize("trait_block", [4, 8, 5, 12])
+def test_blocked_dense_bitwise_identical(source, cohort, trait_block):
+    # 5 rounds up to the tile multiple 8; 4/8/12 are aligned already
+    a = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=_cfg()).run()
+    b = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(trait_block=trait_block)).run()
+    _assert_same_scan(a, b)
+
+
+def test_blocked_dense_bitwise_identical_ragged_tile(source, cohort):
+    # block_p=5 over 12 traits: tiles (and tail blocks) of width 5, 5, 2 —
+    # the ragged tail tile is computed identically in both decompositions
+    a = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(block_p=5)).run()
+    b = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(block_p=5, trait_block=5)).run()
+    _assert_same_scan(a, b)
+
+
+def test_blocked_fused_bitwise_identical(source, cohort):
+    a = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(engine="fused")).run()
+    b = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(engine="fused", trait_block=4)).run()
+    _assert_same_scan(a, b)
+
+
+@pytest.mark.parametrize("loco", [False, True])
+def test_blocked_lmm_bitwise_identical(cohort, split_beds, loco):
+    src = open_genotypes(",".join(split_beds))
+    a = GenomeScan(src, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(engine="lmm", loco=loco)).run()
+    b = GenomeScan(src, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(engine="lmm", loco=loco, trait_block=4)).run()
+    _assert_same_scan(a, b)
+
+
+def test_blocked_exact_dof_mode(source, cohort):
+    from repro.core.association import AssocOptions
+
+    opt = AssocOptions(dof_mode="exact")
+    a = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(options=opt)).run()
+    b = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(options=opt, trait_block=4)).run()
+    _assert_same_scan(a, b)
+
+
+def test_blocked_with_tiny_lru_still_identical(source, cohort):
+    """Thrashing the device LRU (capacity 1, 3 blocks) re-stages every
+    block per batch but must not change a single bit."""
+    a = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=_cfg()).run()
+    b = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(trait_block=4, panel_resident_blocks=1)).run()
+    _assert_same_scan(a, b)
+
+
+def test_multivariate_requires_unblocked(source, cohort):
+    with pytest.raises(ValueError, match="unblocked"):
+        GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(multivariate=True, trait_block=4))
+
+
+# ------------------------------------------------------- checkpoint + resume
+
+
+def test_resume_from_mid_block_cut(source, cohort, tmp_path):
+    """Cut the checkpoint mid-panel — one whole batch plus a strict subset
+    of another batch's trait blocks — and resume: bitwise-identical."""
+    ckdir = str(tmp_path / "ck")
+    cfg = _cfg(trait_block=5, checkpoint_dir=ckdir)
+    full = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=cfg).run()
+
+    mpath = os.path.join(ckdir, "manifest.json")
+    mani = json.load(open(mpath))
+    assert any("." in k for k in mani["completed"])  # cell-keyed manifest
+    lost = [k for k in mani["completed"] if k.startswith("1.")]  # whole batch
+    lost += ["2.1"]                                              # mid-panel cut
+    for k in lost:
+        mani["completed"].pop(k)
+    json.dump(mani, open(mpath, "w"))
+
+    res = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=cfg).run()
+    _assert_same_scan(full, res)
+    # and a fully-resumed scan (zero recomputed cells) matches too
+    res2 = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=cfg).run()
+    _assert_same_scan(full, res2)
+
+
+def test_blocked_checkpoint_equals_unblocked_scan(source, cohort, tmp_path):
+    unblocked = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                           config=_cfg()).run()
+    blocked = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                         config=_cfg(trait_block=4,
+                                     checkpoint_dir=str(tmp_path / "ck"))).run()
+    _assert_same_scan(unblocked, blocked)
+
+
+def test_checkpoint_refuses_changed_trait_block(source, cohort, tmp_path):
+    ckdir = str(tmp_path / "ck")
+    GenomeScan(source, cohort.phenotypes, cohort.covariates,
+               config=_cfg(trait_block=5, checkpoint_dir=ckdir)).run()
+    with pytest.raises(ValueError, match="different scan"):
+        GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                   config=_cfg(trait_block=4, checkpoint_dir=ckdir)).run()
+
+
+# ------------------------------------------------------------ panel store
+
+
+def test_panel_store_lru_bounds_residency(cohort):
+    import jax.numpy as jnp
+
+    from repro.core.residualize import covariate_basis
+
+    q = covariate_basis(jnp.asarray(cohort.covariates), cohort.phenotypes.shape[0])
+    blocks = TraitBlockPlanner(4, quantum=4).plan(cohort.phenotypes.shape[1])
+    store = PanelStore.residualized(cohort.phenotypes, q, blocks, quantum=4,
+                                    max_resident=2)
+    assert store.n_blocks == len(blocks)
+    for blk in blocks:
+        dev = store.device_block(blk)
+        assert dev.shape == (cohort.phenotypes.shape[0], blk.n_traits)
+        np.testing.assert_array_equal(np.asarray(dev), store.host_block(blk))
+        assert len(store._dev) <= 2
+    # re-touching a resident block must not grow residency
+    store.device_block(blocks[-1])
+    assert len(store._dev) <= 2
+
+
+# ------------------------------------------------------- error-path teardown
+
+
+class _ExplodingSink(ResultSink):
+    def __init__(self, after: int):
+        self.after = after
+        self.calls = 0
+
+    def on_batch(self, view, payload):
+        self.calls += 1
+        if self.calls > self.after:
+            raise RuntimeError("sink exploded mid-scan")
+
+
+def _prefetch_threads():
+    return [t for t in threading.enumerate()
+            if t.name.startswith("prefetch-worker") and t.is_alive()]
+
+
+def test_raising_sink_tears_down_prefetch_pool(source, cohort):
+    """A sink raising mid-scan must propagate AND shut the prefetch worker
+    pool down (no orphan decode threads, no wedged in-flight staging)."""
+    assert _prefetch_threads() == []
+
+    class Scan(GenomeScan):
+        def _make_sinks(self, ckpt):
+            return [*super()._make_sinks(ckpt), _ExplodingSink(after=1)]
+
+    scan = Scan(source, cohort.phenotypes, cohort.covariates,
+                config=_cfg(io_workers=3, prefetch_depth=3))
+    with pytest.raises(RuntimeError, match="sink exploded"):
+        scan.run()
+    assert _prefetch_threads() == []
+    # the machinery is not poisoned: a fresh scan on the same source works
+    res = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=_cfg()).run()
+    assert res.n_markers == source.n_markers
+
+
+def test_raising_engine_step_tears_down_prefetch_pool(source, cohort):
+    scan = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                      config=_cfg(io_workers=2))
+
+    def boom(*a, **k):
+        raise RuntimeError("step exploded")
+
+    scan._step = boom
+    with pytest.raises(RuntimeError, match="step exploded"):
+        scan.run()
+    assert _prefetch_threads() == []
+
+
+# ------------------------------------------------------------- hit spilling
+
+
+def test_hit_sink_spills_past_cap_without_changing_result(tmp_path):
+    from repro.core.sinks import HitSink
+
+    spill = str(tmp_path / "spill")
+    rng = np.random.default_rng(0)
+    chunks = [
+        (rng.integers(0, 500, size=(n, 2)).astype(np.int32),
+         rng.normal(size=(n, 3)).astype(np.float32))
+        for n in (20, 1, 40, 0, 33, 17)
+    ]
+    plain = HitSink(5.0)
+    spilling = HitSink(5.0, spill_dir=spill, spill_rows=32)
+    for hits, stats in chunks:
+        for sink in (plain, spilling):
+            sink._append(hits, stats)
+    parts = sorted(p for p in os.listdir(spill) if p.startswith("hits_spill_"))
+    assert parts and spilling.spilled_rows >= 32, "cap must force parts to disk"
+    a, b = plain.result(), spilling.result()
+    np.testing.assert_array_equal(a["hits"], b["hits"])          # order kept
+    np.testing.assert_array_equal(a["hit_stats"], b["hit_stats"])
+    # consumed parts are intermediate state, removed once result() folds them
+    assert not [p for p in os.listdir(spill) if p.startswith("hits_spill_")]
+    # result() is repeatable: spilled rows were folded back, not lost
+    again = spilling.result()
+    np.testing.assert_array_equal(a["hits"], again["hits"])
+    np.testing.assert_array_equal(a["hit_stats"], again["hit_stats"])
+    # a crashed run's leftover parts are cleared by the next run's sink
+    stale = os.path.join(spill, "hits_spill_00042.npz")
+    np.savez(stale, hits=np.zeros((3, 2), np.int32), hit_stats=np.zeros((3, 3), np.float32))
+    HitSink(5.0, spill_dir=spill, spill_rows=32)
+    assert not os.path.exists(stale)
+
+
+def test_hit_spill_through_the_scan(source, cohort, tmp_path):
+    spill = str(tmp_path / "spill")
+    ref = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                     config=_cfg(hit_threshold_nlp=1.0)).run()
+    assert len(ref.hits) > 64  # the loose threshold floods the sink
+    res = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                     config=_cfg(hit_threshold_nlp=1.0, spill_dir=spill,
+                                 hit_spill_rows=32)).run()
+    np.testing.assert_array_equal(ref.hits, res.hits)
+    np.testing.assert_array_equal(ref.hit_stats, res.hit_stats)
+    assert not [p for p in os.listdir(spill) if p.startswith("hits_spill_")]
+
+
+def test_hit_sink_spill_composes_with_blocking_and_resume(source, cohort, tmp_path):
+    ckdir, spill = str(tmp_path / "ck"), str(tmp_path / "spill")
+    cfg = _cfg(hit_threshold_nlp=2.0, trait_block=5, checkpoint_dir=ckdir,
+               spill_dir=spill, hit_spill_rows=16)
+    full = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=cfg).run()
+    ref = GenomeScan(source, cohort.phenotypes, cohort.covariates,
+                     config=_cfg(hit_threshold_nlp=2.0)).run()
+    _assert_same_scan(ref, full)
