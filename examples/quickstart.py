@@ -1,10 +1,19 @@
-"""Quickstart: simulate a cohort, write PLINK files, run the scan, print hits.
+"""Quickstart: simulate a cohort, bind a Study, stream a scan, write TSVs.
 
     PYTHONPATH=src python examples/quickstart.py [--trait-block 32]
 
+Demonstrates the layered public API (DESIGN.md §11):
+
+    bind     Study.from_files        — open genotypes, align tables
+    plan     study.plan(...)         — typed specs, validated
+    execute  plan.run().events()     — per-grid-cell streaming results
+    emit     TsvWriter               — sorted hits.tsv, never dense in RAM
+
 ``--trait-block`` also runs the scan as a 2-D (marker-batch x trait-block)
 grid (DESIGN.md §10) and asserts it is bitwise-identical to the unblocked
-scan — CI exercises the blocked path this way on every push.
+scan — CI exercises the blocked path this way on every push.  The final
+section checks the deprecated ``GenomeScan`` shim agrees with the API
+bitwise.
 """
 import argparse
 import os
@@ -12,8 +21,8 @@ import tempfile
 
 import numpy as np
 
-from repro.core.screening import GenomeScan, ScanConfig
-from repro.io import plink, synth
+from repro.api import GridSpec, Study, TsvWriter
+from repro.io import synth
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -21,7 +30,8 @@ def main() -> None:
                     help="trait-axis tile width for the blocked-scan check")
     args = ap.parse_args()
 
-    # 1. A small synthetic cohort with six planted marker->trait effects.
+    # 1. A small synthetic cohort with six planted marker->trait effects,
+    #    shipped the way real cohorts are: PLINK files + TSV tables.
     cohort = synth.make_cohort(
         n_samples=600, n_markers=2_000, n_traits=48,
         n_causal=6, effect_size=0.5, missing_rate=0.01, seed=42,
@@ -31,54 +41,81 @@ def main() -> None:
     print(f"cohort on disk: {paths['bed']}  ({cohort.shape[0]} markers x "
           f"{cohort.shape[1]} samples x {cohort.shape[2]} traits)")
 
-    # 2. Scan: phenotype panel residualized once, genome streamed in batches.
-    source = plink.PlinkBed(paths["bed"])
-    config = ScanConfig(batch_markers=512, engine="dense", multivariate=True,
-                        block_m=64, block_n=128, block_p=64)
-    scan = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=config)
-    result = scan.run()
+    # 2. Bind -> plan -> execute -> emit.
+    study = Study.from_files(paths["bed"], paths["pheno"], paths["cov"])
+    grid = GridSpec(batch_markers=512, block_m=64, block_n=128, block_p=64)
+    plan = study.plan(engine="dense", grid=grid, multivariate=True)
+    session = plan.run()
+    out_dir = os.path.join(workdir, "results")
+    summary = session.stream_to(TsvWriter(out_dir))
+    print(f"\nlambda_GC = {summary['lambda_gc']:.3f}   "
+          f"hits(p<5e-8) = {summary['hits']}   dof = {session.dof}")
+    print(f"results: {summary['hits_tsv']}")
 
-    # 3. Report.
-    print(f"\nlambda_GC = {result.lambda_gc:.3f}   "
-          f"hits(p<5e-8) = {len(result.hits)}   dof = {result.dof}")
-    print("\n marker      trait   r        t        -log10p")
-    order = np.argsort(-result.hit_stats[:, 2])
-    for (m, t), (r, tstat, nlp) in zip(result.hits[order], result.hit_stats[order]):
-        print(f" {source.marker_ids[m]:<10s} trait{t:<3d} {r:+.3f}  {tstat:+8.2f}  {nlp:8.2f}")
+    # 3. Streaming consumption: walk the event stream yourself.  Each cell
+    #    is one (marker-batch x trait-block) tile; nothing dense is kept.
+    session2 = study.plan(engine="dense", grid=grid).run()
+    found = set()
+    for cell in session2.events():
+        found.update(map(tuple, cell.hits))
     planted = {(m, t) for m, t, _ in cohort.effects}
-    found = {(int(m), int(t)) for m, t in result.hits}
-    print(f"\nplanted effects recovered: {len(planted & found)}/{len(planted)}")
+    print(f"planted effects recovered from the event stream: "
+          f"{len(planted & found)}/{len(planted)}")
+    assert planted <= found
 
     # 4. The same cohort as a per-chromosome fileset (how real cohorts ship):
-    #    a glob opens all shards as one source; hits/best are identical.
-    from repro.io import open_genotypes
-
+    #    a glob opens all shards as one source; best-hit results identical.
     synth.write_split_plink(cohort, os.path.join(workdir, "cohort"), n_shards=4)
-    multi = open_genotypes(os.path.join(workdir, "cohort_chr*.bed"))
-    multi_result = GenomeScan(multi, cohort.phenotypes, cohort.covariates, config=config).run()
-    same = np.array_equal(result.best_nlp, multi_result.best_nlp)
-    print(f"\nper-chromosome fileset: {multi.n_shards} shards, "
-          f"{multi.n_markers} markers; best-hit match vs single file: {same}")
-    assert same
+    multi = Study.from_files(os.path.join(workdir, "cohort_chr*.bed"),
+                             paths["pheno"], paths["cov"])
+    multi_out = os.path.join(workdir, "results_multi")
+    multi.plan(engine="dense", grid=grid).run().stream_to(TsvWriter(multi_out))
+    single_best = open(os.path.join(out_dir, "per_trait_best.tsv")).read()
+    multi_best = open(os.path.join(multi_out, "per_trait_best.tsv")).read()
+    print(f"per-chromosome fileset: {multi.source.n_shards} shards, "
+          f"{multi.n_markers} markers; best-hit match vs single file: "
+          f"{single_best == multi_best}")
+    assert single_best == multi_best
 
     # 5. The blocked 2-D scan grid: tile the trait axis so peak device
     #    memory scales with the block, not the panel — bitwise-identical.
     #    (block_p is the panel compute tile; trait blocks align to it.)
-    blocked_cfg = ScanConfig(batch_markers=512, engine="dense",
-                             trait_block=args.trait_block,
-                             block_m=64, block_n=128, block_p=16)
-    ref = GenomeScan(source, cohort.phenotypes, cohort.covariates,
-                     config=ScanConfig(batch_markers=512, engine="dense",
-                                       block_m=64, block_n=128, block_p=16)).run()
-    blk_scan = GenomeScan(source, cohort.phenotypes, cohort.covariates, config=blocked_cfg)
-    blocked = blk_scan.run()
-    same_blk = (np.array_equal(ref.best_nlp, blocked.best_nlp)
-                and np.array_equal(ref.best_marker, blocked.best_marker)
-                and ref.lambda_gc == blocked.lambda_gc)
-    print(f"blocked scan grid: {blk_scan.n_batches} marker batches x "
-          f"{blk_scan.n_trait_blocks} trait blocks "
+    small = GridSpec(batch_markers=512, block_m=64, block_n=128, block_p=16)
+    blocked_grid = GridSpec(batch_markers=512, block_m=64, block_n=128,
+                            block_p=16, trait_block=args.trait_block)
+    ref_out, blk_out = (os.path.join(workdir, d) for d in ("ref", "blk"))
+    study.plan(engine="dense", grid=small).run().stream_to(TsvWriter(ref_out))
+    blk_session = study.plan(engine="dense", grid=blocked_grid).run()
+    blk_session.stream_to(TsvWriter(blk_out))
+    same_blk = all(
+        open(os.path.join(ref_out, f)).read() == open(os.path.join(blk_out, f)).read()
+        for f in ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+    )
+    print(f"blocked scan grid: {blk_session.n_batches} marker batches x "
+          f"{blk_session.n_trait_blocks} trait blocks "
           f"(trait_block={args.trait_block}); bitwise match: {same_blk}")
     assert same_blk
+
+    # 6. The deprecated shim still agrees with the API, bitwise.
+    from repro.core.screening import GenomeScan, ScanConfig
+    from repro.io import plink
+
+    res = GenomeScan(
+        plink.PlinkBed(paths["bed"]), cohort.phenotypes, cohort.covariates,
+        config=ScanConfig(batch_markers=512, engine="dense",
+                          block_m=64, block_n=128, block_p=16),
+    ).run()
+    order = np.lexsort((res.hits[:, 1], res.hits[:, 0]))
+    shim_rows = {tuple(map(int, r)) for r in res.hits[order]}
+    api_rows = set()
+    with open(os.path.join(ref_out, "hits.tsv")) as f:
+        next(f)
+        for line in f:
+            mid, tname = line.split("\t")[:2]
+            api_rows.add((int(mid.lstrip("rs")), int(tname.lstrip("trait"))))
+    print(f"deprecated GenomeScan shim hit set == API hit set: "
+          f"{shim_rows == api_rows}")
+    assert shim_rows == api_rows
 
 if __name__ == "__main__":
     main()

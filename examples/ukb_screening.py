@@ -1,7 +1,8 @@
 """End-to-end phenotype-rich screening workflow (the paper's production
 scenario, scaled to run on CPU): BGEN input, covariate adjustment,
-relatedness-aware exclusion, fault-tolerant batched scan with a simulated
-mid-scan crash + restart, multivariate omnibus, BH q-values, TSV report.
+relatedness-aware exclusion at Study binding, fault-tolerant streamed scan
+with a simulated mid-scan crash + resume through the event stream,
+multivariate omnibus, BH q-values, TSV report.
 
     PYTHONPATH=src python examples/ukb_screening.py [--traits 256]
 """
@@ -13,9 +14,10 @@ import tempfile
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import GridSpec, Study, TsvWriter
 from repro.core import stats as S
-from repro.core.screening import GenomeScan, ScanConfig
-from repro.io import bgen, pheno, synth
+
+from repro.io import synth
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -34,46 +36,63 @@ def main() -> None:
     print(f"[1/4] cohort: {args.markers} markers x {args.samples} samples x "
           f"{args.traits} traits (BGEN: {paths['bgen']})")
 
-    # Align tables by sample id (the BGEN reader carries ids).
-    source = bgen.BgenFile(paths["bgen"])
-    pt = pheno.read_table(paths["pheno"])
-    ct = pheno.read_table(paths["cov"])
-    y, c, keep = pheno.align_tables(source.sample_ids, pt, ct)
-    assert keep.all()
-
+    # Bind: open the BGEN, align tables by sample id, run the relatedness
+    # probe — all before any plan exists.
+    study = Study.from_files(paths["bgen"], paths["pheno"], paths["cov"],
+                             exclude_related=True)
     ckdir = os.path.join(workdir, "checkpoints")
-    config = ScanConfig(
-        batch_markers=512, engine="dense", exclude_related=True,
-        multivariate=True, checkpoint_dir=ckdir,
-        block_m=64, block_n=128, block_p=64,
+    plan = study.plan(
+        engine="dense", multivariate=True, checkpoint_dir=ckdir,
+        grid=GridSpec(batch_markers=512, block_m=64, block_n=128, block_p=64),
     )
 
     # [2/4] First pass; then simulate a node crash losing two batches.
-    scan = GenomeScan(source, y, c, config=config)
-    print(f"[2/4] relatedness exclusion dropped {scan.excluded_samples} samples; "
-          f"{scan.n_batches} batches")
-    scan.run()
+    session = plan.run()
+    print(f"[2/4] relatedness exclusion dropped {study.excluded_samples} "
+          f"samples; {session.n_batches} batches")
+    for _ in session.events():
+        pass  # stream to nowhere: the checkpoint commits every cell anyway
     mani_path = os.path.join(ckdir, "manifest.json")
     mani = json.load(open(mani_path))
     for k in list(mani["completed"])[1:3]:
         mani["completed"].pop(k)
     json.dump(mani, open(mani_path, "w"))
-    print("[3/4] simulated crash: dropped 2 committed batches; restarting...")
-    result = GenomeScan(source, y, c, config=config).run(resume=True)
+    print("[3/4] simulated crash: dropped 2 committed batches; resuming...")
 
-    # [4/4] Report with BH q-values.
-    out_tsv = os.path.join(workdir, "hits.tsv")
+    # [3/4] Resume: only the lost cells recompute, the rest replay from
+    # shards; the TSV writer cannot tell the difference.
+    out_dir = os.path.join(workdir, "results")
+    resumed = plan.run(resume=True)
+    hits = []
+    stats = []
+    writer = TsvWriter(out_dir)
+    writer.open(resumed)
+    n_recomputed = 0
+    for cell in resumed.events():
+        n_recomputed += not cell.replayed
+        writer.write(cell)
+        hits.append(cell.hits)
+        stats.append(cell.hit_stats)
+    summary = writer.close()
+    hits = np.concatenate(hits)
+    stats = np.concatenate(stats)
+    print(f"      resumed: {n_recomputed} cells recomputed, "
+          f"{resumed.n_batches * resumed.n_trait_blocks - n_recomputed} replayed")
+
+    # [4/4] Report with BH q-values over the streamed hit set.
+    out_tsv = os.path.join(out_dir, "hits_q.tsv")
     with open(out_tsv, "w") as f:
         f.write("marker\ttrait\tr\tt\tneglog10p\tneglog10q\n")
-        if len(result.hits):
-            nlq = np.asarray(S.bh_qvalues(jnp.asarray(result.hit_stats[:, 2])))
-            for (m, t), (r, tt, nlp), q in zip(result.hits, result.hit_stats, nlq):
-                f.write(f"{source.marker_ids[m]}\t{t}\t{r:.4f}\t{tt:.3f}\t{nlp:.2f}\t{q:.2f}\n")
+        if len(hits):
+            nlq = np.asarray(S.bh_qvalues(jnp.asarray(stats[:, 2])))
+            for (m, t), (r, tt, nlp), q in zip(hits, stats, nlq):
+                f.write(f"{study.marker_ids[m]}\t{t}\t{r:.4f}\t{tt:.3f}"
+                        f"\t{nlp:.2f}\t{q:.2f}\n")
     planted = {(m, t) for m, t, _ in cohort.effects}
-    found = {(int(m), int(t)) for m, t in result.hits}
-    print(f"[4/4] lambda_GC={result.lambda_gc:.3f}  hits={len(result.hits)}  "
+    found = {(int(m), int(t)) for m, t in hits}
+    print(f"[4/4] lambda_GC={summary['lambda_gc']:.3f}  hits={summary['hits']}  "
           f"recovered {len(planted & found)}/{len(planted)} planted effects")
-    print(f"      report: {out_tsv}")
+    print(f"      report: {out_tsv}  (sorted hits: {summary['hits_tsv']})")
 
 if __name__ == "__main__":
     main()

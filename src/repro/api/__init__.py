@@ -1,0 +1,59 @@
+"""The composable public API: bind -> plan -> execute -> emit.
+
+    from repro.api import Study, GridSpec
+
+    study = Study.from_files("cohort_chr*.bed", "panel.tsv", covar="covars.tsv")
+    plan = study.plan(engine="fused", grid=GridSpec(trait_block=2048),
+                      checkpoint_dir="ck/")
+    session = plan.run()                       # amortized setup happens here
+    summary = session.stream_to(TsvWriter("results/"))
+
+Or stream the grid cells yourself:
+
+    for cell in plan.run().events():
+        ...  # cell.hits, cell.best_nlp, cell.maf — one grid cell at a time
+
+The four layers (DESIGN.md §11):
+
+    bind     ``Study``       file opening, table alignment, sample QC
+    plan     ``Study.plan``  typed specs (GridSpec/LmmSpec/IOSpec) validated
+                             and normalized into the internal ``ScanConfig``
+    execute  ``ScanSession`` the streaming grid executor; ``events()``
+                             yields per-cell ``CellResult``s, checkpoint/
+                             resume included
+    emit     ``ResultWriter`` registry; ``"tsv"`` and ``"npz"`` built in
+
+``repro.core.screening.GenomeScan`` remains as a deprecated shim over this
+API (it collects events into the historical dense ``ScanResult``).
+"""
+from repro.api.session import CellResult, PreparedScan, ScanPlan, ScanSession
+from repro.api.specs import GridSpec, IOSpec, LmmSpec, ScanConfig
+from repro.api.study import Study
+from repro.api.writers import (
+    NpzShardWriter,
+    ResultWriter,
+    TsvWriter,
+    available_writers,
+    get_writer,
+    register_writer,
+    stream_session,
+)
+
+__all__ = [
+    "Study",
+    "GridSpec",
+    "LmmSpec",
+    "IOSpec",
+    "ScanConfig",
+    "ScanPlan",
+    "ScanSession",
+    "PreparedScan",
+    "CellResult",
+    "ResultWriter",
+    "TsvWriter",
+    "NpzShardWriter",
+    "register_writer",
+    "get_writer",
+    "available_writers",
+    "stream_session",
+]

@@ -1,0 +1,657 @@
+"""Plan -> execute: ``ScanPlan`` compiles a Study + specs into a prepared
+scan; ``ScanSession.events()`` streams per-grid-cell ``CellResult``s.
+
+This module *is* the scan executor — the loop that used to live inside
+``GenomeScan.run``.  The redesign inverts the old shape: instead of one
+blocking call that folds every cell into a dense ``ScanResult``, the
+session yields each completed (marker-batch x trait-block) cell as a
+``CellResult`` the moment it is computed (or replayed from a checkpoint
+shard), and *consumers* decide what to keep:
+
+    for cell in session.events():      # streams; never holds (M, P) arrays
+        writer.write(cell)
+
+The deprecated ``GenomeScan`` shim is one such consumer (it folds cells
+into the historical sinks to rebuild ``ScanResult``); the streaming result
+writers (``repro.api.writers``) are the native one.
+
+Checkpointing rides the session: each live cell's payload is committed to
+the cell-keyed manifest before the cell is yielded, and on resume the
+committed cells of previous runs are replayed as ``CellResult``s after the
+live stream — consumers cannot tell the difference (``cell.replayed`` says,
+for the curious).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterator
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.api.specs import ScanConfig
+from repro.api.study import Study
+from repro.core.engines import EngineContext, ScanEngine, get_engine
+from repro.core.panels import PanelPrefetcher, PanelStore
+from repro.core.residualize import covariate_basis
+from repro.core.sinks import BatchView, extract_hits
+from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
+from repro.runtime.prefetch import (
+    BatchPlanner,
+    MarkerBatch,
+    Prefetcher,
+    TraitBlock,
+    TraitBlockPlanner,
+    double_buffer,
+)
+
+__all__ = ["CellResult", "PreparedScan", "ScanPlan", "ScanSession", "CheckpointReplay"]
+
+
+LAMBDA_PROBE_ROWS = 64  # rows of the first-trait t probe persisted per batch
+
+
+class CellResult:
+    """One completed grid cell: a marker range crossed with a trait range.
+
+    Live cells wrap the device step's ``BatchView`` and extract their
+    summary arrays lazily (the hit-driven-pull invariant holds: the full
+    per-cell tiles only cross PCIe when the cell has hits).  Replayed cells
+    carry a committed checkpoint shard's arrays.  Either way ``arrays`` is
+    the cell's *payload* — the exact dict the checkpoint persists — and the
+    accessors below read from it, so consumers never branch on provenance.
+
+    A cell's memory footprint is bounded by its own extent (block-width
+    vectors plus its hit rows) — accumulating across cells is the
+    consumer's business, which is what keeps ``events()`` streaming.
+    """
+
+    def __init__(
+        self,
+        *,
+        batch_index: int,
+        block_index: int,
+        lo: int,
+        hi: int,
+        t_lo: int,
+        t_hi: int,
+        view: BatchView | None = None,
+        shard: dict[str, np.ndarray] | None = None,
+        hit_threshold: float = 7.301,
+    ):
+        self.batch_index = batch_index
+        self.block_index = block_index
+        self.lo = lo
+        self.hi = hi
+        self.t_lo = t_lo
+        self.t_hi = t_hi
+        self.view = view
+        self._shard = shard
+        self._threshold = hit_threshold
+        self._arrays: dict[str, np.ndarray] | None = None
+
+    @classmethod
+    def from_shard(
+        cls, batch_index: int, block_index: int, shard: dict[str, np.ndarray]
+    ) -> "CellResult":
+        return cls(
+            batch_index=batch_index,
+            block_index=block_index,
+            lo=int(shard["lo"]),
+            hi=int(shard["hi"]),
+            t_lo=int(shard.get("t_lo", 0)),
+            t_hi=int(shard.get("t_hi", shard["best_nlp"].shape[0])),
+            shard=shard,
+        )
+
+    # ------------------------------------------------------------- geometry
+
+    @property
+    def n_markers(self) -> int:
+        return self.hi - self.lo
+
+    @property
+    def n_traits(self) -> int:
+        return self.t_hi - self.t_lo
+
+    @property
+    def replayed(self) -> bool:
+        return self.view is None
+
+    @property
+    def carries_marker_tracks(self) -> bool:
+        """Marker-level tracks (maf/valid/omnibus/probe) ride the t_lo==0
+        cell of each marker batch — once per batch, not once per cell."""
+        return self.t_lo == 0
+
+    # -------------------------------------------------------------- payload
+
+    @property
+    def arrays(self) -> dict[str, np.ndarray]:
+        """The cell's checkpoint payload (computed once, cached).
+
+        Keys: ``best_nlp``/``best_row`` always; ``hits``/``hit_stats``
+        always (possibly empty); ``maf``/``valid`` (+ ``omnibus_nlp`` when
+        the multivariate screen ran, + ``t_probe``) on t_lo==0 cells.
+        """
+        if self._arrays is None:
+            if self._shard is not None:
+                self._arrays = {
+                    k: v for k, v in self._shard.items()
+                    if k not in ("lo", "hi", "t_lo", "t_hi")
+                }
+            else:
+                v = self.view
+                payload: dict[str, np.ndarray] = {
+                    "best_nlp": v.best_nlp,
+                    "best_row": v.best_row,
+                }
+                hits, stats = extract_hits(v, self._threshold)
+                payload["hits"] = hits
+                payload["hit_stats"] = stats
+                if self.carries_marker_tracks:
+                    payload["maf"] = v.maf
+                    payload["valid"] = v.valid
+                    if v.omnibus_nlp is not None:
+                        payload["omnibus_nlp"] = v.omnibus_nlp
+                    payload["t_probe"] = np.asarray(
+                        v.t_probe(LAMBDA_PROBE_ROWS), np.float32
+                    )
+                self._arrays = payload
+        return self._arrays
+
+    def payload(self) -> dict[str, np.ndarray]:
+        """The shard the checkpoint commits: payload plus cell extent."""
+        return {
+            "lo": np.asarray(self.lo),
+            "hi": np.asarray(self.hi),
+            "t_lo": np.asarray(self.t_lo),
+            "t_hi": np.asarray(self.t_hi),
+            **self.arrays,
+        }
+
+    # ------------------------------------------------------------ accessors
+
+    @property
+    def best_nlp(self) -> np.ndarray:
+        """(n_traits,) per-trait best -log10 p within this cell's markers."""
+        return self.arrays["best_nlp"]
+
+    @property
+    def best_row(self) -> np.ndarray:
+        """(n_traits,) *batch-local* marker row of the best; globalize with
+        ``cell.lo + best_row``."""
+        return self.arrays["best_row"]
+
+    @property
+    def hits(self) -> np.ndarray:
+        """(H, 2) int32 (global marker, global trait) above the threshold."""
+        return self.arrays["hits"]
+
+    @property
+    def hit_stats(self) -> np.ndarray:
+        """(H, 3) float32 (r, t, -log10 p) aligned with ``hits``."""
+        return self.arrays["hit_stats"]
+
+    @property
+    def maf(self) -> np.ndarray | None:
+        return self.arrays.get("maf")
+
+    @property
+    def valid(self) -> np.ndarray | None:
+        return self.arrays.get("valid")
+
+    @property
+    def omnibus_nlp(self) -> np.ndarray | None:
+        return self.arrays.get("omnibus_nlp")
+
+    @property
+    def t_probe(self) -> np.ndarray | None:
+        return self.arrays.get("t_probe")
+
+
+@dataclass
+class PreparedScan:
+    """Everything ``ScanPlan.prepare`` amortizes once per scan: the resolved
+    engine (setup run — GRM/REML for lmm), the compiled device step, the
+    residualized panel store, and the 2-D grid decomposition."""
+
+    study: Study
+    config: ScanConfig
+    mesh: Mesh | None
+    engine: ScanEngine
+    ctx: EngineContext
+    step: Callable[..., dict]
+    trait_blocks: list[TraitBlock]
+    panels: PanelStore | None
+    batches: list[MarkerBatch]
+    dof: int
+    lmm_info: dict | None
+    n_covariates: int
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.batches)
+
+    @property
+    def n_trait_blocks(self) -> int:
+        return len(self.trait_blocks)
+
+    def panel_block(self, batch: MarkerBatch, block: TraitBlock):
+        """The trailing step argument for one grid cell: the driver's
+        residualized store for OLS engines, the engine's own per-scope
+        rotated panel for the rest."""
+        if self.engine.uses_global_panel:
+            return self.panels.device_block(block)
+        return self.engine.panel_block(batch, block)
+
+    def fingerprint(self) -> str:
+        """The checkpoint identity of this scan (mesh/host-topology free)."""
+        cfg, study = self.config, self.study
+        engine_state = self.engine.state_fingerprint()
+        m_total = study.source.n_markers
+        return config_fingerprint(
+            {
+                **cfg.fingerprint_payload(),
+                "n_markers": m_total,
+                "n_samples": study.n_samples,
+                "n_traits": study.n_traits,
+                # The plan's index->(lo,hi) mapping depends on the shard
+                # layout; resuming against a re-sharded fileset would
+                # silently mix two incompatible batch decompositions.
+                "shard_boundaries": list(
+                    getattr(study.source, "shard_boundaries", (0, m_total))
+                ),
+                **({"engine_state": engine_state} if engine_state else {}),
+            }
+        )
+
+
+class ScanPlan:
+    """A validated, normalized scan specification bound to a Study.
+
+    ``prepare()`` runs the amortized setup (residualization, engine setup —
+    the lmm engine's streamed GRM + eigh + REML live here — and step
+    construction); ``run()`` prepares and returns the executable
+    ``ScanSession``.  A plan may be prepared once and run many times.
+    """
+
+    def __init__(self, study: Study, config: ScanConfig, *, mesh: Mesh | None = None):
+        self.study = study
+        self.config = config
+        self.mesh = mesh
+        self._prepared: PreparedScan | None = None
+
+    # ---------------------------------------------------------------- build
+
+    def prepare(self) -> PreparedScan:
+        if self._prepared is not None:
+            return self._prepared
+        study, config, mesh = self.study, self.config, self.mesh
+        engine = get_engine(config.engine)
+        n_samples = study.n_samples
+        n_traits = study.n_traits
+        phenotypes = np.asarray(study.phenotypes)
+        covariates = study.covariates
+
+        # The trait axis of the 2-D scan grid (DESIGN.md §10).  block_p is
+        # the panel-axis compute tile of every engine's step; aligning the
+        # scheduling blocks to it is what makes the blocked scan
+        # bitwise-identical to the unblocked one.
+        trait_blocks = TraitBlockPlanner(
+            config.trait_block, quantum=config.block_p
+        ).plan(n_traits)
+        if config.multivariate and len(trait_blocks) > 1:
+            raise ValueError(
+                "the multivariate omnibus screen needs the whole panel per "
+                "marker (it combines evidence across every trait); run it "
+                "unblocked (trait_block=0)"
+            )
+
+        n_traits_eff = float(n_traits)
+        whitening = None
+        panels: PanelStore | None = None
+        q = None
+        if engine.uses_global_panel:
+            # OLS panel prep (Eq. 1), amortized once per trait block into a
+            # host-side store.  Engines that build their own panel (lmm:
+            # rotated per LOCO scope in setup_scan) skip this entirely — no
+            # (N, P) device array is ever kept alive.
+            q = covariate_basis(
+                jnp.asarray(covariates) if covariates is not None else None,
+                n_samples,
+            )
+            panels = PanelStore.residualized(
+                phenotypes, q, trait_blocks,
+                quantum=config.block_p,
+                max_resident=config.panel_resident_blocks,
+            )
+            n_covariates = int(q.shape[1]) - 1
+            if config.multivariate:
+                from repro.core import multivariate as mv
+
+                # unblocked by the check above: block 0 IS the full panel
+                y_full = panels.device_block(trait_blocks[0])
+                whitening, eig = mv.whiten_panel(y_full)
+                n_traits_eff = float(mv.effective_tests(eig))
+        else:
+            cov = None if covariates is None else np.asarray(covariates)
+            n_covariates = 0 if cov is None else (1 if cov.ndim == 1 else cov.shape[1])
+
+        dof = config.options.dof(n_samples, n_covariates)
+        ctx = EngineContext(
+            n_samples=n_samples,
+            n_covariates=n_covariates,
+            options=config.options,
+            mesh=mesh,
+            mode=config.mode,
+            hit_threshold=config.hit_threshold_nlp,
+            maf_min=config.maf_min,
+            block_m=config.block_m,
+            block_n=config.block_n,
+            block_p=config.block_p,
+            q_basis=q,
+            multivariate=config.multivariate,
+            n_traits_eff=n_traits_eff,
+            whitening=whitening,
+            keep=study.keep,
+            excluded_samples=study.excluded_samples,
+            trait_blocks=tuple(trait_blocks),
+            panel_resident_blocks=config.panel_resident_blocks,
+            input_dtype=config.input_dtype,
+            loco=config.loco,
+            grm_method=config.grm_method,
+            grm_batch_markers=config.grm_batch_markers,
+            lmm_delta=config.lmm_delta,
+            lmm_epilogue=config.lmm_epilogue,
+            io_workers=config.io_workers,
+        )
+        engine.validate(ctx)
+        # Amortized engine setup (LMM: streamed GRM + eigendecomposition +
+        # REML + panel rotation).  Engines may override the scan dof and
+        # contribute diagnostics to the result.
+        lmm_info: dict | None = None
+        setup = engine.setup_scan(study.source, phenotypes, covariates, ctx)
+        if setup:
+            dof = int(setup.get("dof", dof))
+            lmm_info = setup.get("info")
+        step = engine.build_step(ctx)
+        batches = BatchPlanner(config.batch_markers).plan(study.source)
+        self._prepared = PreparedScan(
+            study=study,
+            config=config,
+            mesh=mesh,
+            engine=engine,
+            ctx=ctx,
+            step=step,
+            trait_blocks=trait_blocks,
+            panels=panels,
+            batches=batches,
+            dof=dof,
+            lmm_info=lmm_info,
+            n_covariates=n_covariates,
+        )
+        return self._prepared
+
+    # ----------------------------------------------------------------- run
+
+    def run(self, *, resume: bool = True) -> "ScanSession":
+        """Prepare (if not already) and open an executable session."""
+        return ScanSession(self.prepare(), resume=resume)
+
+
+class ScanSession:
+    """One executable pass over the scan grid, streaming ``CellResult``s.
+
+    ``events()`` is a one-shot generator: live cells in grid order (marker
+    batches outer, trait blocks inner), then — when resuming — the replayed
+    cells committed by previous runs.  All pipeline teardown (prefetch
+    workers, the in-flight staged copy, the panel look-ahead thread) happens
+    in its ``finally``, so consumers that raise mid-stream must ``close()``
+    the generator (or just iterate with a ``for`` loop, which does).
+    """
+
+    def __init__(
+        self,
+        prepared: PreparedScan,
+        *,
+        resume: bool = True,
+        step: Callable[..., dict] | None = None,
+    ):
+        self.prepared = prepared
+        self.study = prepared.study
+        self.config = prepared.config
+        self.resume = resume
+        self._step = step if step is not None else prepared.step
+        self._consumed = False
+
+        self.checkpoint: ScanCheckpoint | None = None
+        if self.config.checkpoint_dir:
+            # Engine state (e.g. the LMM's GRM spectrum hash) is part of the
+            # scan identity: resuming against a different GRM or refitted
+            # variance components would mix incompatible statistics.
+            self.checkpoint = ScanCheckpoint(
+                self.config.checkpoint_dir,
+                fingerprint=prepared.fingerprint(),
+                n_batches=prepared.n_batches,
+                n_blocks=prepared.n_trait_blocks,
+            )
+
+    # ---------------------------------------------------------------- shape
+
+    @property
+    def n_batches(self) -> int:
+        return self.prepared.n_batches
+
+    @property
+    def n_trait_blocks(self) -> int:
+        return self.prepared.n_trait_blocks
+
+    @property
+    def n_markers(self) -> int:
+        return self.study.n_markers
+
+    @property
+    def n_samples(self) -> int:
+        return self.study.n_samples
+
+    @property
+    def n_traits(self) -> int:
+        return self.study.n_traits
+
+    @property
+    def dof(self) -> int:
+        return self.prepared.dof
+
+    @property
+    def lmm_info(self) -> dict | None:
+        return self.prepared.lmm_info
+
+    @property
+    def hit_threshold(self) -> float:
+        return self.config.hit_threshold_nlp
+
+    @property
+    def multivariate(self) -> bool:
+        return self.config.multivariate
+
+    @property
+    def marker_ids(self):
+        return self.study.marker_ids
+
+    @property
+    def trait_names(self):
+        return self.study.trait_names
+
+    # --------------------------------------------------------------- events
+
+    def events(self) -> Iterator[CellResult]:
+        """Stream the grid: compute pending cells, commit + yield each as a
+        ``CellResult``, then replay previously committed cells (resume)."""
+        if self._consumed:
+            raise RuntimeError("ScanSession.events() is one-shot; open a new session")
+        self._consumed = True
+        prep = self.prepared
+        cfg = self.config
+        engine = prep.engine
+        blocks = prep.trait_blocks
+        ckpt = self.checkpoint
+
+        todo = prep.batches
+        pending: set[tuple[int, int]] | None = None   # (batch, block) cells
+        if ckpt is not None and self.resume:
+            pending = set(ckpt.pending_cells())
+            # A marker batch is re-staged iff ANY of its cells is pending;
+            # completed cells of a re-staged batch are skipped in the inner
+            # loop and replayed from their shards below.
+            batches_pending = {b for b, _ in pending}
+            todo = [b for b in prep.batches if b.index in batches_pending]
+
+        computed: set[tuple[int, int]] = set()
+        prefetched = Prefetcher(
+            todo,
+            lambda b: engine.prepare_batch(self.study.source, b, prep.ctx),
+            depth=cfg.prefetch_depth,
+            num_workers=cfg.io_workers,
+        )
+        # Trait-axis look-ahead (DESIGN.md §10): stage the next cell's panel
+        # block while the device computes the current cell.
+        panel_la = PanelPrefetcher(prep.panel_block)
+
+        def stage(host_batch):
+            # jnp.asarray launches the copy; on accelerators it completes
+            # while the device chews on the previous batch (double buffer).
+            return host_batch, tuple(jnp.asarray(a) for a in host_batch.device_args)
+
+        stream = double_buffer(prefetched, stage)
+        try:
+            todo_pos = {b.index: i for i, b in enumerate(todo)}
+            for host_batch, dev_args in stream:
+                batch = host_batch.batch
+                bidx = batch.index
+                # Trait blocks are the INNER loop: one staged genotype batch
+                # feeds every block before the next H2D copy (DESIGN.md §10).
+                cells = [
+                    blk for blk in blocks
+                    if pending is None or (bidx, blk.index) in pending
+                ]
+                nxt = todo_pos.get(bidx, len(todo)) + 1
+                next_batch = todo[nxt] if nxt < len(todo) else None
+                for pos, blk in enumerate(cells):
+                    out = self._step(*dev_args, prep.panel_block(batch, blk))
+                    # Look ahead one cell on the trait axis (then wrap to the
+                    # next batch's first block, which the LRU may have evicted).
+                    if pos + 1 < len(cells):
+                        panel_la.request(batch, cells[pos + 1])
+                    elif next_batch is not None and blocks:
+                        panel_la.request(next_batch, blocks[0])
+                    view = BatchView(
+                        host_batch, out, blk.n_traits,
+                        t_lo=blk.lo, block_index=blk.index,
+                    )
+                    cell = CellResult(
+                        batch_index=bidx,
+                        block_index=blk.index,
+                        lo=batch.lo,
+                        hi=batch.hi,
+                        t_lo=blk.lo,
+                        t_hi=blk.hi,
+                        view=view,
+                        hit_threshold=cfg.hit_threshold_nlp,
+                    )
+                    if ckpt is not None:
+                        # Commit the shard, then the manifest — a crash
+                        # between the two just re-does one grid cell.
+                        ckpt.commit_cell(bidx, blk.index, cell.payload())
+                    computed.add((bidx, blk.index))
+                    yield cell
+        finally:
+            # Error path included: a raising consumer or engine step must not
+            # leave decode workers alive or the in-flight staged copy pinned.
+            stream.close()
+            prefetched.shutdown()
+            panel_la.shutdown()
+            # Drop the step memo's pinned last batch (raw + prolog output)
+            # so a cached plan doesn't hold device memory between runs.
+            getattr(self._step, "reset", lambda: None)()
+
+        # Resume path: replay committed-but-not-recomputed cells' shards.
+        if ckpt is not None:
+            for bidx, kidx in sorted(ckpt.completed_cells() - computed):
+                yield CellResult.from_shard(bidx, kidx, ckpt.load_cell(bidx, kidx))
+
+    # -------------------------------------------------------------- writers
+
+    def stream_to(self, *writers) -> dict:
+        """Drive ``events()`` through result writers: open each, feed every
+        cell, close in order; abort them all if anything raises.  Returns
+        the merged summary dict of the writers' ``close()`` results."""
+        from repro.api.writers import stream_session
+
+        return stream_session(self, writers)
+
+
+class CheckpointReplay:
+    """An offline session over a committed checkpoint directory.
+
+    Replays every committed cell as a ``CellResult`` without touching
+    genotypes or recomputing anything — the substrate of the CLI ``merge``
+    subcommand (turn a crashed-but-mostly-done scan's shards into final
+    outputs) and of any postprocessing that wants the event stream shape.
+    Grid extents are inferred from the shards; marker/trait names may be
+    supplied when the caller has them (``merge --genotypes/--pheno``).
+    """
+
+    def __init__(
+        self,
+        root: str,
+        *,
+        marker_ids=None,
+        trait_names=None,
+    ):
+        self.checkpoint = ScanCheckpoint.open_existing(root)
+        self.marker_ids = marker_ids
+        self.trait_names = trait_names
+        cells = sorted(self.checkpoint.completed_cells())
+        if not cells:
+            raise ValueError(f"checkpoint at {root} has no committed cells")
+        self._cells = cells
+        # Infer the grid extent from two committed shards: the largest batch
+        # index carries the global marker end, the largest block index the
+        # trait end.  (Shards store their extents precisely for this.)
+        last_batch = max(b for b, _ in cells)
+        last_block = max(k for _, k in cells)
+        probe_b = self.checkpoint.load_cell(
+            last_batch, max(k for b, k in cells if b == last_batch)
+        )
+        probe_k = self.checkpoint.load_cell(
+            max(b for b, k in cells if k == last_block), last_block
+        )
+        self.n_markers = int(probe_b["hi"])
+        self.n_traits = int(probe_k.get("t_hi", probe_k["best_nlp"].shape[0]))
+        self.n_trait_blocks = self.checkpoint.n_blocks
+        self.n_batches = self.checkpoint.n_batches
+        # Marker-level tracks (hence the omnibus) ride block-0 cells only.
+        blk0 = next(((b, k) for b, k in cells if k == 0), None)
+        self.multivariate = (
+            blk0 is not None and "omnibus_nlp" in self.checkpoint.load_cell(*blk0)
+        )
+        self.dof = None
+        self.lmm_info = None
+        self.hit_threshold = None
+
+    @property
+    def complete(self) -> bool:
+        return self.checkpoint.is_complete()
+
+    def events(self) -> Iterator[CellResult]:
+        for bidx, kidx in self._cells:
+            yield CellResult.from_shard(
+                bidx, kidx, self.checkpoint.load_cell(bidx, kidx)
+            )
+
+    def stream_to(self, *writers) -> dict:
+        from repro.api.writers import stream_session
+
+        return stream_session(self, writers)

@@ -1,0 +1,240 @@
+"""Typed scan specifications — the *plan* layer of the public API.
+
+``ScanConfig`` grew one flag at a time into a 24-field sprawl where grid
+geometry, engine selection, mixed-model knobs, IO tuning, and output policy
+all share one namespace.  The public surface groups them into typed specs:
+
+    GridSpec   the 2-D scan-grid geometry (batch/block sizes, compute tiles)
+    LmmSpec    mixed-model knobs (engine="lmm" only; rejected elsewhere)
+    IOSpec     host pipeline tuning (prefetch depth, decode workers, spill)
+
+``Study.plan(...)`` validates a spec combination and *normalizes* it into a
+``ScanConfig`` — which remains the single internal currency: the checkpoint
+fingerprint is computed from it exactly as before, so sessions planned
+through specs resume checkpoints written by the deprecated ``GenomeScan``
+shim and vice versa.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.core.association import AssocOptions
+
+__all__ = ["GridSpec", "LmmSpec", "IOSpec", "ScanConfig"]
+
+
+@dataclass(frozen=True)
+class GridSpec:
+    """Geometry of the 2-D (marker-batch x trait-block) scan grid.
+
+    ``trait_block=0`` is the unblocked degenerate grid (one block spanning
+    the panel).  ``block_m``/``block_n``/``block_p`` are the device compute
+    tiles; trait blocks are rounded up to multiples of ``block_p`` so every
+    decomposition computes identical GEMM tiles (DESIGN.md §10).
+    """
+
+    batch_markers: int = 4096
+    trait_block: int = 0
+    block_m: int = 256
+    block_n: int = 512
+    block_p: int = 256
+    panel_resident_blocks: int = 4
+
+    def validate(self) -> None:
+        for name in ("batch_markers", "block_m", "block_n", "block_p"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"GridSpec.{name} must be positive, got {getattr(self, name)}")
+        if self.trait_block < 0:
+            raise ValueError(f"GridSpec.trait_block must be >= 0, got {self.trait_block}")
+        if self.panel_resident_blocks < 1:
+            raise ValueError(
+                f"GridSpec.panel_resident_blocks must be >= 1, got {self.panel_resident_blocks}"
+            )
+
+
+@dataclass(frozen=True)
+class LmmSpec:
+    """Mixed-model wing knobs (DESIGN.md §9); only valid with engine="lmm"."""
+
+    loco: bool = False
+    grm_method: str = "std"        # "std" (GCTA) | "centered" (EMMAX)
+    grm_batch_markers: int = 4096
+    delta: float | None = None     # pin se^2/sg^2 (skips the REML fit)
+    epilogue: str = "dense"        # "dense" XLA | "fused" Pallas t-stat
+
+    def validate(self) -> None:
+        if self.grm_method not in ("std", "centered"):
+            raise ValueError(f"unknown grm_method {self.grm_method!r}")
+        if self.epilogue not in ("dense", "fused"):
+            raise ValueError(f"unknown lmm epilogue {self.epilogue!r}")
+        if self.grm_batch_markers <= 0:
+            raise ValueError(f"LmmSpec.grm_batch_markers must be positive")
+
+
+@dataclass(frozen=True)
+class IOSpec:
+    """Host-side pipeline tuning.  None of these enter the checkpoint
+    fingerprint — elastic restarts may retune them freely."""
+
+    prefetch_depth: int = 3
+    io_workers: int = 2
+    spill_dir: str | None = None       # HitSink spill location (None: in RAM)
+    hit_spill_rows: int = 2_000_000
+
+    def validate(self) -> None:
+        if self.prefetch_depth < 1 or self.io_workers < 1:
+            raise ValueError("IOSpec.prefetch_depth and io_workers must be >= 1")
+        if self.hit_spill_rows < 1:
+            raise ValueError("IOSpec.hit_spill_rows must be >= 1")
+
+
+@dataclass(frozen=True)
+class ScanConfig:
+    """The normalized internal scan configuration.
+
+    Deprecated as a public construction surface — prefer
+    ``Study.plan(engine=..., grid=GridSpec(...), ...)``, which validates and
+    produces one of these.  It remains the checkpoint-fingerprint currency
+    (``fingerprint_payload``), so its field set and semantics are stable.
+    """
+
+    batch_markers: int = 4096
+    trait_block: int = 0           # trait-axis tile width; 0 = unblocked (§10)
+    options: AssocOptions = AssocOptions()
+    engine: str = "dense"          # registry name: core.engines.available_engines()
+    mode: str = "mp"               # sharding mode; "sample" implies engine="dense"
+    hit_threshold_nlp: float = 7.301  # 5e-8, the GWAS genome-wide line
+    maf_min: float = 0.0
+    exclude_related: bool = False
+    multivariate: bool = False
+    checkpoint_dir: str | None = None
+    prefetch_depth: int = 3
+    io_workers: int = 2
+    panel_resident_blocks: int = 4 # device LRU capacity for panel blocks
+    spill_dir: str | None = None   # HitSink spill location (None: all in RAM)
+    hit_spill_rows: int = 2_000_000  # spill past this many resident hit rows
+    block_m: int = 256
+    block_n: int = 512
+    block_p: int = 256
+    input_dtype: str = "fp32"      # fused engine GEMM input: "fp32" | "bf16"
+    # mixed-model wing (engine="lmm"; DESIGN.md §9)
+    loco: bool = False             # leave-one-chromosome-out GRM per shard
+    grm_method: str = "std"        # "std" (GCTA) | "centered" (EMMAX)
+    grm_batch_markers: int = 4096  # marker batch of the streamed GRM pass
+    lmm_delta: float | None = None # pin se^2/sg^2 (skips the REML fit)
+    lmm_epilogue: str = "dense"    # t/p epilogue: "dense" XLA | "fused" Pallas
+
+    def fingerprint_payload(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["options"] = dataclasses.asdict(self.options)
+        # Mesh topology, host counts, and host-memory/spill knobs never
+        # enter the fingerprint (elastic restarts may retune them).
+        # trait_block STAYS: it defines the checkpoint grid decomposition.
+        for k in ("prefetch_depth", "io_workers", "checkpoint_dir",
+                  "panel_resident_blocks", "spill_dir", "hit_spill_rows"):
+            d.pop(k)
+        return d
+
+    # ------------------------------------------------------ spec round-trip
+
+    @classmethod
+    def from_specs(
+        cls,
+        *,
+        engine: str = "dense",
+        grid: GridSpec | None = None,
+        lmm: LmmSpec | None = None,
+        io: IOSpec | None = None,
+        options: AssocOptions | None = None,
+        mode: str = "mp",
+        hit_threshold_nlp: float = 7.301,
+        maf_min: float = 0.0,
+        exclude_related: bool = False,
+        multivariate: bool = False,
+        checkpoint_dir: str | None = None,
+        input_dtype: str = "fp32",
+    ) -> "ScanConfig":
+        """Validate a spec combination and normalize it (the plan step)."""
+        from repro.core.engines import available_engines
+
+        grid = grid or GridSpec()
+        io = io or IOSpec()
+        options = options or AssocOptions()
+        grid.validate()
+        io.validate()
+        if engine not in available_engines():
+            raise ValueError(
+                f"unknown scan engine {engine!r}; available: {available_engines()}"
+            )
+        if lmm is not None:
+            lmm.validate()
+            if engine != "lmm":
+                raise ValueError(
+                    f"LmmSpec given but engine={engine!r}; mixed-model knobs "
+                    "only apply to engine='lmm'"
+                )
+        if input_dtype not in ("fp32", "bf16"):
+            raise ValueError(f"unknown input_dtype {input_dtype!r}")
+        if input_dtype == "bf16" and engine != "fused":
+            raise ValueError(
+                "input_dtype='bf16' selects the fused kernel's GEMM input "
+                "dtype; use options=AssocOptions(precision='bf16') for the "
+                "dense engine"
+            )
+        if mode not in ("mp", "sample"):
+            raise ValueError(f"unknown sharding mode {mode!r}")
+        lmm = lmm or LmmSpec()
+        return cls(
+            batch_markers=grid.batch_markers,
+            trait_block=grid.trait_block,
+            options=options,
+            engine=engine,
+            mode=mode,
+            hit_threshold_nlp=hit_threshold_nlp,
+            maf_min=maf_min,
+            exclude_related=exclude_related,
+            multivariate=multivariate,
+            checkpoint_dir=checkpoint_dir,
+            prefetch_depth=io.prefetch_depth,
+            io_workers=io.io_workers,
+            panel_resident_blocks=grid.panel_resident_blocks,
+            spill_dir=io.spill_dir,
+            hit_spill_rows=io.hit_spill_rows,
+            block_m=grid.block_m,
+            block_n=grid.block_n,
+            block_p=grid.block_p,
+            input_dtype=input_dtype,
+            loco=lmm.loco,
+            grm_method=lmm.grm_method,
+            grm_batch_markers=lmm.grm_batch_markers,
+            lmm_delta=lmm.delta,
+            lmm_epilogue=lmm.epilogue,
+        )
+
+    def grid_spec(self) -> GridSpec:
+        return GridSpec(
+            batch_markers=self.batch_markers,
+            trait_block=self.trait_block,
+            block_m=self.block_m,
+            block_n=self.block_n,
+            block_p=self.block_p,
+            panel_resident_blocks=self.panel_resident_blocks,
+        )
+
+    def lmm_spec(self) -> LmmSpec:
+        return LmmSpec(
+            loco=self.loco,
+            grm_method=self.grm_method,
+            grm_batch_markers=self.grm_batch_markers,
+            delta=self.lmm_delta,
+            epilogue=self.lmm_epilogue,
+        )
+
+    def io_spec(self) -> IOSpec:
+        return IOSpec(
+            prefetch_depth=self.prefetch_depth,
+            io_workers=self.io_workers,
+            spill_dir=self.spill_dir,
+            hit_spill_rows=self.hit_spill_rows,
+        )

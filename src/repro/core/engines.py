@@ -116,6 +116,10 @@ class EngineContext:
     # blocks, and how many panel blocks an engine may keep device-resident
     trait_blocks: tuple[TraitBlock, ...] = ()
     panel_resident_blocks: int = 4
+    # fused kernel GEMM input dtype ("fp32" | "bf16"); the epilogue (t,
+    # -log10 p, argmax) always runs fp32 regardless (tests/test_oracle.py
+    # bf16 audit)
+    input_dtype: str = "fp32"
     # mixed-model knobs (consumed by the lmm engine only)
     loco: bool = False
     grm_method: str = "std"
@@ -226,31 +230,49 @@ def build_dense_step(
     n_traits_eff: float = 1.0,
     whitening: jax.Array | None = None,
     trait_tile: int | None = None,
+    split_prolog: bool = True,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Paper-faithful dense step: float dosages in, summary tiles out.
     ``trait_tile`` fixes the panel-axis GEMM tile (the scan passes its
     ``block_p``) so every trait-block decomposition computes identical
-    tiles — the §10 bitwise contract."""
+    tiles — the §10 bitwise contract.
+
+    Like the lmm step, the computation splits into a once-per-marker-batch
+    *prolog* (standardize + the exact-mode FWL residualization — everything
+    trait-independent) and a per-cell *epilogue* (the panel GEMM + t/p).
+    With ``split_prolog`` (the default) the prolog is jitted separately and
+    memoized on the staged batch's array identity, so a blocked scan's
+    inner trait-block loop pays the O(MN) standardization once per marker
+    batch instead of once per grid cell (the ROADMAP "dense/fused prolog
+    split" item).  ``split_prolog=False`` keeps the historical single-jit
+    shape — same numbers bitwise (tests/test_screening.py asserts it): the
+    cell GEMM consumes the identical float32 ``g_std`` either way, and
+    standardization is elementwise/per-marker, so materializing it at the
+    jit boundary cannot change a bit.
+    """
     dof = options.dof(n_samples, n_covariates)
 
-    def step(g_raw: jax.Array, y_std: jax.Array) -> dict[str, jax.Array]:
+    def prolog(g_raw: jax.Array):
         g_std, ms = standardize_genotype_batch(g_raw)
         if options.dof_mode == "exact":
             from repro.core.residualize import residualize_genotypes
 
             g_std = residualize_genotypes(g_std, q_basis)
+        valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
+        return g_std, ms.maf, valid
+
+    def cell(g_std, maf, valid, y_std) -> dict[str, jax.Array]:
         res = assoc_from_standardized(
             g_std, y_std, n_samples=n_samples, n_covariates=n_covariates,
             options=options, trait_tile=trait_tile,
         )
-        valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
         mask = valid[:, None]
         nlp = jnp.where(mask, res.neglog10p, 0.0)
         out = {
             "r": jnp.where(mask, res.r, 0.0),
             "t": jnp.where(mask, res.t, 0.0),
             "nlp": nlp,
-            "maf": ms.maf,
+            "maf": maf,
             "valid": valid,
             "batch_best_nlp": jnp.max(nlp, axis=0),
             "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
@@ -266,25 +288,61 @@ def build_dense_step(
             out["omnibus_nlp"] = omni_nlp
         return out
 
-    if mesh is None:
-        return jax.jit(step)
+    def step_monolithic(g_raw: jax.Array, y_std: jax.Array) -> dict[str, jax.Array]:
+        return cell(*prolog(g_raw), y_std)
 
-    sh = gwas_shardings(mesh, mode=mode)
-    mv_spec = {"omnibus": sh["marker_vec"], "omnibus_nlp": sh["marker_vec"]} if multivariate else {}
-    rep = NamedSharding(mesh, P())
-    model_vec = NamedSharding(mesh, P("model"))
-    out_shardings = {
-        "r": sh["out"],
-        "t": sh["out"],
-        "nlp": sh["out"],
-        "maf": sh["marker_vec"],
-        "valid": sh["marker_vec"],
-        "batch_best_nlp": model_vec,
-        "batch_best_row": model_vec,
-        "hit_count": rep,
-        **mv_spec,
-    }
-    return jax.jit(step, in_shardings=(sh["g"], sh["y"]), out_shardings=out_shardings)
+    if mesh is None:
+        if not split_prolog:
+            return jax.jit(step_monolithic)
+        prolog_j = jax.jit(prolog)
+        cell_j = jax.jit(cell)
+    else:
+        sh = gwas_shardings(mesh, mode=mode)
+        mv_spec = {"omnibus": sh["marker_vec"], "omnibus_nlp": sh["marker_vec"]} if multivariate else {}
+        rep = NamedSharding(mesh, P())
+        model_vec = NamedSharding(mesh, P("model"))
+        out_shardings = {
+            "r": sh["out"],
+            "t": sh["out"],
+            "nlp": sh["out"],
+            "maf": sh["marker_vec"],
+            "valid": sh["marker_vec"],
+            "batch_best_nlp": model_vec,
+            "batch_best_row": model_vec,
+            "hit_count": rep,
+            **mv_spec,
+        }
+        if not split_prolog:
+            return jax.jit(
+                step_monolithic, in_shardings=(sh["g"], sh["y"]), out_shardings=out_shardings
+            )
+        prolog_j = jax.jit(
+            prolog,
+            in_shardings=(sh["g"],),
+            out_shardings=(sh["g"], sh["marker_vec"], sh["marker_vec"]),
+        )
+        cell_j = jax.jit(
+            cell,
+            in_shardings=(sh["g"], sh["marker_vec"], sh["marker_vec"], sh["y"]),
+            out_shardings=out_shardings,
+        )
+
+    # One-slot memo keyed on the staged genotype array's identity: the
+    # driver passes the same device array for every trait block of a batch,
+    # and a fresh one per batch.  Holding the reference pins the id.
+    memo: dict[str, Any] = {"g": None, "out": None}
+
+    def step(g_raw: jax.Array, y_std: jax.Array) -> dict[str, jax.Array]:
+        if memo["g"] is not g_raw:
+            memo["out"] = prolog_j(g_raw)
+            memo["g"] = g_raw
+        return cell_j(*memo["out"], y_std)
+
+    # The executor calls this at teardown so the last batch's staged raw +
+    # standardized arrays don't stay pinned on device for the lifetime of a
+    # cached plan.
+    step.reset = lambda: memo.update(g=None, out=None)
+    return step
 
 
 def build_fused_step(
@@ -298,16 +356,24 @@ def build_fused_step(
     block_n: int = 512,
     block_p: int = 256,
     interpret: bool | None = None,
+    input_dtype: str | None = None,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Beyond-paper fused step: 2-bit packed slabs in (kernel layout),
     summary tiles out.  'mp' sharding only — the in-kernel epilogue requires
-    complete sample contractions per device (DESIGN.md §5)."""
+    complete sample contractions per device (DESIGN.md §5).
+
+    ``input_dtype`` selects the kernel's GEMM input dtype ("fp32" | "bf16");
+    the in-kernel accumulation and the epilogue (t, -log10 p, argmax) stay
+    float32 either way — the GEMM-bf16 / epilogue-fp32 split audited by the
+    oracle suite.  ``None`` defers to ``options.precision`` (the historical
+    plumbing)."""
     from repro.kernels.gwas_dot.gwas_dot import build_gwas_dot
 
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     dof = options.dof(n_samples, n_covariates)
-    input_dtype = jnp.bfloat16 if options.precision == "bf16" else jnp.float32
+    use_bf16 = input_dtype == "bf16" or (input_dtype is None and options.precision == "bf16")
+    input_dtype = jnp.bfloat16 if use_bf16 else jnp.float32
 
     def kernel_local(packed, mean2d, inv2d, y):
         m_loc = packed.shape[0]
@@ -500,6 +566,8 @@ def build_lmm_step(
             memo["g"] = g_raw
         return cell_j(*memo["out"], y_std)
 
+    # See build_dense_step: drop the pinned last batch at executor teardown.
+    step.reset = lambda: memo.update(g=None, out=None)
     return step
 
 
@@ -554,6 +622,9 @@ class FusedEngine(ScanEngine):
             block_m=ctx.block_m,
             block_n=ctx.block_n,
             block_p=ctx.block_p,
+            # "bf16" forces the kernel's low-precision GEMM; the default
+            # defers to options.precision (the historical plumbing).
+            input_dtype="bf16" if ctx.input_dtype == "bf16" else None,
         )
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:

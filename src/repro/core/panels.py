@@ -1,0 +1,136 @@
+"""Host-resident phenotype panels and trait-axis staging (DESIGN.md §10).
+
+``PanelStore`` owns the residualized panel: host-side float32, tiled on the
+trait axis, served as device-resident block slices through a small LRU.
+``PanelPrefetcher`` overlaps the *next* trait block's host->device staging
+with the current block's device step — the same H2D/compute overlap the
+marker axis gets from ``runtime.prefetch.double_buffer``, applied to the
+second grid dimension.  Both are engine-agnostic: the lmm engine's
+per-(scope, block) rotated panels ride the same prefetcher because its
+``DeviceLRU`` is thread-safe too.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines import DeviceLRU
+from repro.core.residualize import residualize_and_standardize
+from repro.runtime.prefetch import TraitBlock
+
+__all__ = ["PanelStore", "PanelPrefetcher"]
+
+
+class PanelStore:
+    """Host-resident residualized phenotype panel, tiled on the trait axis.
+
+    The store residualizes + standardizes the panel in fixed ``quantum``-wide
+    column chunks on the device (peak device footprint during setup: one
+    ``(N, quantum)`` slice, never ``(N, P)``), keeps the float32 results
+    host-side, and serves device-resident block slices through a small LRU —
+    panels that fit stay resident, paper-scale panels stream.  The chunk
+    decomposition is the same regardless of ``trait_block`` (it is the
+    compute quantum, not the scheduling block), so blocked and unblocked
+    stores hold bitwise-identical panels.
+    """
+
+    def __init__(self, blocks: list[TraitBlock], panel: np.ndarray,
+                 *, max_resident: int = 4):
+        self.blocks = list(blocks)
+        self._panel = panel               # (N, P) float32, host
+        self._dev = DeviceLRU(            # block index -> staged device array
+            max_resident,
+            lambda idx: jnp.asarray(self.host_block(self.blocks[idx])),
+        )
+
+    @classmethod
+    def residualized(
+        cls,
+        phenotypes: np.ndarray,
+        q_basis: Any,
+        blocks: list[TraitBlock],
+        *,
+        quantum: int,
+        max_resident: int = 4,
+    ) -> "PanelStore":
+        n, p = phenotypes.shape
+        panel = np.empty((n, p), np.float32)
+        for lo in range(0, p, quantum):
+            hi = min(lo + quantum, p)
+            chunk = residualize_and_standardize(
+                jnp.asarray(phenotypes[:, lo:hi]), q_basis
+            )
+            panel[:, lo:hi] = np.asarray(chunk.y)
+        return cls(blocks, panel, max_resident=max_resident)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def host_block(self, block: TraitBlock) -> np.ndarray:
+        return self._panel[:, block.lo : block.hi]
+
+    def device_block(self, block: TraitBlock) -> Any:
+        """Device array for one block; ``jnp.asarray`` launches the copy
+        asynchronously, so staging overlaps the previous cell's compute."""
+        return self._dev.get(block.index)
+
+
+class PanelPrefetcher:
+    """Single-worker look-ahead on the trait axis: stage block b+1 while the
+    device chews on block b.
+
+    ``stage`` is whatever serves a grid cell's panel slice (the driver's
+    ``PanelStore.device_block`` for OLS engines, the lmm engine's
+    ``panel_block``); results land in the underlying thread-safe
+    ``DeviceLRU``, so the consumer's own ``stage`` call finds them resident.
+    The worker is deliberately best-effort: a staging error is swallowed
+    here and surfaces on the consumer's synchronous call for the same
+    block.  ``shutdown`` drains and joins — the scan's error path calls it
+    from a ``finally`` so a raising sink or step never leaks the thread.
+    """
+
+    def __init__(self, stage: Callable[[Any, TraitBlock], Any], *, name: str = "panel-prefetch"):
+        self._stage = stage
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._stop = False
+        self._worker = threading.Thread(target=self._run, daemon=True, name=name)
+        self._worker.start()
+
+    def _run(self) -> None:
+        while not self._stop:
+            try:
+                item = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if item is None:
+                return
+            batch, block = item
+            try:
+                self._stage(batch, block)
+            except Exception:  # noqa: BLE001 — see docstring: best-effort
+                pass
+
+    def request(self, batch: Any, block: TraitBlock) -> None:
+        """Enqueue one look-ahead staging; drops the request when the worker
+        is saturated (falling behind means the device is the bottleneck and
+        the synchronous path will stage it anyway)."""
+        if self._stop:
+            return
+        try:
+            self._q.put_nowait((batch, block))
+        except queue.Full:
+            pass
+
+    def shutdown(self, *, join_timeout: float = 5.0) -> None:
+        self._stop = True
+        try:
+            self._q.put_nowait(None)
+        except queue.Full:
+            pass
+        if self._worker.is_alive() and self._worker is not threading.current_thread():
+            self._worker.join(timeout=join_timeout)

@@ -1,82 +1,50 @@
-"""The streaming genome-scan driver: the paper's workflow end to end.
+"""Deprecated blocking facade over the layered public API (``repro.api``).
 
-    panel setup (once)                      Eq. 1, amortized across the scan
-      -> relatedness exclusion (optional)   core.kinship
-      -> covariate basis + residualize      core.residualize (per trait
-         (host-side PanelStore,             block; device residency bounded
-          block slices on an LRU)           by trait_block, DESIGN.md §10)
-      -> engine setup (optional)            engine.setup_scan — the lmm
-         (streamed GRM, eigh, REML,         engine's amortized work lives
-          one-time panel rotation)          here (core.grm / core.lmm, §9)
-    2-D scan grid (marker x trait block)    runtime.prefetch planners
-      -> host: decode / repack + stats      engine.prepare_batch (prefetch threads)
-      -> staging: async host->device copy   runtime.prefetch.double_buffer
-      -> device: GEMM + epilogue            engine step per grid cell — each
-         (trait blocks inner loop)          staged genotype batch is reused
-                                            across every trait block before
-                                            the next H2D copy
-      -> sinks: best / hits / QC / lambda   core.sinks (hit-driven host pull,
-                                            folds offset by block origin)
-      -> sink: commit cell shard+manifest   runtime.checkpoint (atomic,
-                                            resumable mid-panel)
+The scan itself now lives behind the bind -> plan -> execute -> emit
+layers (DESIGN.md §11):
 
-The driver is engine-agnostic: ``core.engines`` resolves ``cfg.engine``
-through a registry, and each engine owns both its host-side batch
-preparation and its device step, so new engines require no driver changes
-(DESIGN.md §1-§4).  Genotype input may be one container or a per-chromosome
-fileset (``io.MultiFileSource``); the planner keeps every batch within one
-shard so different files stream and prefetch concurrently.
+    bind     ``repro.api.Study``        source opening, alignment, sample QC
+    plan     ``Study.plan``             typed specs -> normalized ScanConfig
+    execute  ``repro.api.ScanSession``  the streaming grid executor
+    emit     ``repro.api.writers``      streaming sorted-TSV / npz shards
 
-``trait_block=0`` (the default) is the unblocked degenerate grid — one
-block spanning the panel — and reproduces the classic 1-D scan bitwise.
-A blocked scan is *also* bitwise-identical to the unblocked one for every
-engine (tests/test_traitblocks.py): every step computes the panel axis in
-fixed ``block_p``-wide tiles and scheduling blocks are aligned to them, so
-each tile's GEMM is the same shape over the same columns no matter how the
-axis is blocked — tiling changes scheduling and memory, never statistics.
+``GenomeScan``/``ScanResult`` remain as *shims* for existing callers: a
+``GenomeScan`` binds a Study, prepares a plan, and ``run()`` folds the
+session's ``CellResult`` event stream through the historical sinks into a
+dense ``ScanResult`` — bitwise-identical to the pre-redesign driver (the
+sinks, steps, planners, and checkpoint format are the very same objects the
+session uses; only the loop moved).  New code should prefer the API: it
+streams instead of materializing, and its writers keep host memory bounded
+per grid cell no matter how wide the panel is.
 
-Distribution: the step builders accept a Mesh and return pjit'd (dense) or
-shard_map'd (fused) steps obeying ``runtime.sharding.gwas_shardings``.
-CPU tests run the identical code with mesh=None.
+``PanelStore`` lives in ``core.panels`` now; ``ScanConfig`` in
+``api.specs``; both are re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any
 
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.association import AssocOptions
+from repro.api.session import ScanSession
+from repro.api.specs import ScanConfig
+from repro.api.study import Study
 from repro.core.engines import (
-    DeviceLRU,
-    EngineContext,
-    ScanEngine,
     build_dense_step,
     build_fused_step,
     build_lmm_step,
-    get_engine,
 )
-from repro.core.residualize import covariate_basis, residualize_and_standardize
+from repro.core.panels import PanelStore
 from repro.core.sinks import (
-    BatchView,
     BestTraitSink,
-    CheckpointSink,
     HitSink,
     LambdaGCSink,
     QCSink,
     ResultSink,
 )
-from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
-from repro.runtime.prefetch import (
-    BatchPlanner,
-    Prefetcher,
-    TraitBlock,
-    TraitBlockPlanner,
-    double_buffer,
-)
+from repro.runtime.checkpoint import ScanCheckpoint
 
 __all__ = [
     "ScanConfig",
@@ -89,103 +57,15 @@ __all__ = [
 ]
 
 
-class PanelStore:
-    """Host-resident residualized phenotype panel, tiled on the trait axis.
-
-    The store residualizes + standardizes the panel in fixed ``quantum``-wide
-    column chunks on the device (peak device footprint during setup: one
-    ``(N, quantum)`` slice, never ``(N, P)``), keeps the float32 results
-    host-side, and serves device-resident block slices through a small LRU —
-    panels that fit stay resident, paper-scale panels stream.  The chunk
-    decomposition is the same regardless of ``trait_block`` (it is the
-    compute quantum, not the scheduling block), so blocked and unblocked
-    stores hold bitwise-identical panels.
-    """
-
-    def __init__(self, blocks: list[TraitBlock], panel: np.ndarray,
-                 *, max_resident: int = 4):
-        self.blocks = list(blocks)
-        self._panel = panel               # (N, P) float32, host
-        self._dev = DeviceLRU(            # block index -> staged device array
-            max_resident,
-            lambda idx: jnp.asarray(self.host_block(self.blocks[idx])),
-        )
-
-    @classmethod
-    def residualized(
-        cls,
-        phenotypes: np.ndarray,
-        q_basis: Any,
-        blocks: list[TraitBlock],
-        *,
-        quantum: int,
-        max_resident: int = 4,
-    ) -> "PanelStore":
-        n, p = phenotypes.shape
-        panel = np.empty((n, p), np.float32)
-        for lo in range(0, p, quantum):
-            hi = min(lo + quantum, p)
-            chunk = residualize_and_standardize(
-                jnp.asarray(phenotypes[:, lo:hi]), q_basis
-            )
-            panel[:, lo:hi] = np.asarray(chunk.y)
-        return cls(blocks, panel, max_resident=max_resident)
-
-    @property
-    def n_blocks(self) -> int:
-        return len(self.blocks)
-
-    def host_block(self, block: TraitBlock) -> np.ndarray:
-        return self._panel[:, block.lo : block.hi]
-
-    def device_block(self, block: TraitBlock) -> Any:
-        """Device array for one block; ``jnp.asarray`` launches the copy
-        asynchronously, so staging overlaps the previous cell's compute."""
-        return self._dev.get(block.index)
-
-
-@dataclass(frozen=True)
-class ScanConfig:
-    batch_markers: int = 4096
-    trait_block: int = 0           # trait-axis tile width; 0 = unblocked (§10)
-    options: AssocOptions = AssocOptions()
-    engine: str = "dense"          # registry name: core.engines.available_engines()
-    mode: str = "mp"               # sharding mode; "sample" implies engine="dense"
-    hit_threshold_nlp: float = 7.301  # 5e-8, the GWAS genome-wide line
-    maf_min: float = 0.0
-    exclude_related: bool = False
-    multivariate: bool = False
-    checkpoint_dir: str | None = None
-    prefetch_depth: int = 3
-    io_workers: int = 2
-    panel_resident_blocks: int = 4 # device LRU capacity for panel blocks
-    spill_dir: str | None = None   # HitSink spill location (None: all in RAM)
-    hit_spill_rows: int = 2_000_000  # spill past this many resident hit rows
-    block_m: int = 256
-    block_n: int = 512
-    block_p: int = 256
-    input_dtype: str = "fp32"      # fused engine GEMM input: "fp32" | "bf16"
-    # mixed-model wing (engine="lmm"; DESIGN.md §9)
-    loco: bool = False             # leave-one-chromosome-out GRM per shard
-    grm_method: str = "std"        # "std" (GCTA) | "centered" (EMMAX)
-    grm_batch_markers: int = 4096  # marker batch of the streamed GRM pass
-    lmm_delta: float | None = None # pin se^2/sg^2 (skips the REML fit)
-    lmm_epilogue: str = "dense"    # t/p epilogue: "dense" XLA | "fused" Pallas
-
-    def fingerprint_payload(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["options"] = dataclasses.asdict(self.options)
-        # Mesh topology, host counts, and host-memory/spill knobs never
-        # enter the fingerprint (elastic restarts may retune them).
-        # trait_block STAYS: it defines the checkpoint grid decomposition.
-        for k in ("prefetch_depth", "io_workers", "checkpoint_dir",
-                  "panel_resident_blocks", "spill_dir", "hit_spill_rows"):
-            d.pop(k)
-        return d
-
-
 @dataclass
 class ScanResult:
+    """Dense end-of-scan summary (deprecated collection shape).
+
+    Materializes the full hit table plus per-trait/per-marker tracks on the
+    host at scan end.  Prefer streaming ``ScanSession.events()`` through
+    result writers for paper-scale panels.
+    """
+
     n_markers: int
     n_samples: int
     n_traits: int
@@ -203,7 +83,20 @@ class ScanResult:
 
 
 class GenomeScan:
-    """Orchestrates one full scan over a genotype source."""
+    """Deprecated: orchestrates one full scan and collects a ``ScanResult``.
+
+    Equivalent API session:
+
+        study = Study.from_arrays(source, phenotypes, covariates,
+                                  exclude_related=cfg.exclude_related)
+        session = study.plan_config(cfg, mesh=mesh).run()
+        for cell in session.events(): ...
+
+    The shim keeps the historical surface (constructor-time validation and
+    engine setup, ``run(resume=...)``, ``_make_sinks`` extension hook, a
+    swappable ``_step``) so existing tests, benchmarks, and callers run
+    unchanged on top of the session executor.
+    """
 
     def __init__(
         self,
@@ -217,134 +110,76 @@ class GenomeScan:
         self.source = source
         self.config = config
         self.mesh = mesh
-        n = source.n_samples
-        if phenotypes.shape[0] != n:
-            raise ValueError(
-                f"phenotypes rows ({phenotypes.shape[0]}) != genotype samples ({n}); "
-                "align tables first (repro.io.align_tables)"
-            )
-
-        self._keep = np.ones(n, bool)
-        self.excluded_samples = 0
-        if config.exclude_related:
-            from repro.core.kinship import exclude_related
-
-            probe = source.read_dosages(0, min(source.n_markers, 4096)).T
-            self._keep, _, _ = exclude_related(probe)
-            self.excluded_samples = int((~self._keep).sum())
-            phenotypes = phenotypes[self._keep]
-            covariates = covariates[self._keep] if covariates is not None else None
-
-        self.n_samples = int(self._keep.sum())
-        self.n_traits = phenotypes.shape[1]
-        self.engine: ScanEngine = get_engine(config.engine)
-
-        # The trait axis of the 2-D scan grid (DESIGN.md §10).  block_p is
-        # the panel-axis compute tile of every engine's step; aligning the
-        # scheduling blocks to it is what makes the blocked scan
-        # bitwise-identical to the unblocked one.
-        self.trait_blocks = TraitBlockPlanner(
-            config.trait_block, quantum=config.block_p
-        ).plan(self.n_traits)
-        if config.multivariate and len(self.trait_blocks) > 1:
-            raise ValueError(
-                "the multivariate omnibus screen needs the whole panel per "
-                "marker (it combines evidence across every trait); run it "
-                "unblocked (trait_block=0)"
-            )
-
-        self._n_traits_eff = float(self.n_traits)
-        self._whitening = None
-        self.panels: PanelStore | None = None
-        if self.engine.uses_global_panel:
-            # OLS panel prep (Eq. 1), amortized once per trait block into a
-            # host-side store.  Engines that build their own panel (lmm:
-            # rotated per LOCO scope in setup_scan) skip this entirely — no
-            # (N, P) device array is ever kept alive.
-            self._q = covariate_basis(
-                jnp.asarray(covariates) if covariates is not None else None,
-                self.n_samples,
-            )
-            phenotypes = np.asarray(phenotypes)
-            self.panels = PanelStore.residualized(
-                phenotypes, self._q, self.trait_blocks,
-                quantum=config.block_p,
-                max_resident=config.panel_resident_blocks,
-            )
-            self.n_covariates = int(self._q.shape[1]) - 1
-            if config.multivariate:
-                from repro.core import multivariate as mv
-
-                # unblocked by the check above: block 0 IS the full panel
-                y_full = self.panels.device_block(self.trait_blocks[0])
-                self._whitening, eig = mv.whiten_panel(y_full)
-                self._n_traits_eff = float(mv.effective_tests(eig))
-        else:
-            self._q = None
-            cov = None if covariates is None else np.asarray(covariates)
-            self.n_covariates = 0 if cov is None else (1 if cov.ndim == 1 else cov.shape[1])
-        self.dof = config.options.dof(self.n_samples, self.n_covariates)
-        self._ctx = EngineContext(
-            n_samples=self.n_samples,
-            n_covariates=self.n_covariates,
-            options=config.options,
-            mesh=mesh,
-            mode=config.mode,
-            hit_threshold=config.hit_threshold_nlp,
-            maf_min=config.maf_min,
-            block_m=config.block_m,
-            block_n=config.block_n,
-            block_p=config.block_p,
-            q_basis=self._q,
-            multivariate=config.multivariate,
-            n_traits_eff=self._n_traits_eff,
-            whitening=self._whitening,
-            keep=self._keep,
-            excluded_samples=self.excluded_samples,
-            trait_blocks=tuple(self.trait_blocks),
-            panel_resident_blocks=config.panel_resident_blocks,
-            loco=config.loco,
-            grm_method=config.grm_method,
-            grm_batch_markers=config.grm_batch_markers,
-            lmm_delta=config.lmm_delta,
-            lmm_epilogue=config.lmm_epilogue,
-            io_workers=config.io_workers,
+        self.study = Study.from_arrays(
+            source, phenotypes, covariates,
+            exclude_related=config.exclude_related,
         )
-        self.engine.validate(self._ctx)
-        # Amortized engine setup (LMM: streamed GRM + eigendecomposition +
-        # REML + panel rotation).  Engines may override the scan dof and
-        # contribute diagnostics to the result.
-        self.lmm_info: dict | None = None
-        setup = self.engine.setup_scan(source, np.asarray(phenotypes), covariates, self._ctx)
-        if setup:
-            self.dof = int(setup.get("dof", self.dof))
-            self.lmm_info = setup.get("info")
-        self._step = self.engine.build_step(self._ctx)
-        self.planner = BatchPlanner(config.batch_markers)
-        self.plan = self.planner.plan(source)
+        # Prepare eagerly: the historical constructor validated the
+        # (engine, config) combination and ran the amortized engine setup
+        # (GRM/REML for lmm), and callers rely on both.
+        self._plan = self.study.plan_config(config, mesh=mesh)
+        prep = self._plan.prepare()
+        self._prepared = prep
+        self._step = prep.step           # swappable, as before (tests do)
 
-    # ------------------------------------------------------------------ grid
+    # ------------------------------------------------------ mirrored state
+
+    @property
+    def excluded_samples(self) -> int:
+        return self.study.excluded_samples
+
+    @property
+    def n_samples(self) -> int:
+        return self.study.n_samples
+
+    @property
+    def n_traits(self) -> int:
+        return self.study.n_traits
+
+    @property
+    def n_covariates(self) -> int:
+        return self._prepared.n_covariates
+
+    @property
+    def engine(self):
+        return self._prepared.engine
+
+    @property
+    def trait_blocks(self):
+        return self._prepared.trait_blocks
+
+    @property
+    def panels(self) -> PanelStore | None:
+        return self._prepared.panels
+
+    @property
+    def dof(self) -> int:
+        return self._prepared.dof
+
+    @property
+    def lmm_info(self) -> dict | None:
+        return self._prepared.lmm_info
+
+    @property
+    def plan(self):
+        """The marker-batch decomposition (historical name)."""
+        return self._prepared.batches
 
     @property
     def n_batches(self) -> int:
-        return len(self.plan)
+        return self._prepared.n_batches
 
     @property
     def n_trait_blocks(self) -> int:
-        return len(self.trait_blocks)
-
-    def _panel_block(self, batch, block: TraitBlock):
-        """The trailing step argument for one grid cell: the driver's
-        residualized store for OLS engines, the engine's own per-scope
-        rotated panel for the rest."""
-        if self.engine.uses_global_panel:
-            return self.panels.device_block(block)
-        return self.engine.panel_block(batch, block)
+        return self._prepared.n_trait_blocks
 
     # ------------------------------------------------------------------- run
 
     def _make_sinks(self, ckpt: ScanCheckpoint | None) -> list[ResultSink]:
-        sinks: list[ResultSink] = [
+        """The ScanResult accumulation chain.  Note the session commits
+        checkpoint cells natively now, so no CheckpointSink rides here; the
+        ``ckpt`` argument stays for subclass compatibility."""
+        return [
             BestTraitSink(self.n_traits),
             HitSink(
                 self.config.hit_threshold_nlp,
@@ -354,104 +189,40 @@ class GenomeScan:
             QCSink(self.source.n_markers, multivariate=self.config.multivariate),
             LambdaGCSink(),
         ]
-        if ckpt is not None:
-            sinks.append(CheckpointSink(ckpt))  # last: persists peers' payload
-        return sinks
 
     def run(self, *, resume: bool = True) -> ScanResult:
-        cfg = self.config
-        m_total = self.source.n_markers
-        blocks = self.trait_blocks
-        ckpt: ScanCheckpoint | None = None
-        todo = self.plan
-        pending: set[tuple[int, int]] | None = None   # (batch, block) cells
-        if cfg.checkpoint_dir:
-            # Engine state (e.g. the LMM's GRM spectrum hash) is part of the
-            # scan identity: resuming against a different GRM or refitted
-            # variance components would mix incompatible statistics.
-            engine_state = self.engine.state_fingerprint()
-            fp = config_fingerprint(
-                {
-                    **cfg.fingerprint_payload(),
-                    "n_markers": m_total,
-                    "n_samples": self.n_samples,
-                    "n_traits": self.n_traits,
-                    # The plan's index->(lo,hi) mapping depends on the shard
-                    # layout; resuming against a re-sharded fileset would
-                    # silently mix two incompatible batch decompositions.
-                    "shard_boundaries": list(
-                        getattr(self.source, "shard_boundaries", (0, m_total))
-                    ),
-                    **({"engine_state": engine_state} if engine_state else {}),
-                }
-            )
-            ckpt = ScanCheckpoint(
-                cfg.checkpoint_dir,
-                fingerprint=fp,
-                n_batches=self.n_batches,
-                n_blocks=len(blocks),
-            )
-            if resume:
-                pending = set(ckpt.pending_cells())
-                # A marker batch is re-staged iff ANY of its cells is
-                # pending; completed cells of a re-staged batch are skipped
-                # in the inner loop and replayed from their shards below.
-                batches_pending = {b for b, _ in pending}
-                todo = [b for b in self.plan if b.index in batches_pending]
-
-        sinks = self._make_sinks(ckpt)
-        computed: set[tuple[int, int]] = set()
-
-        prefetched = Prefetcher(
-            todo,
-            lambda b: self.engine.prepare_batch(self.source, b, self._ctx),
-            depth=cfg.prefetch_depth,
-            num_workers=cfg.io_workers,
-        )
-
-        def stage(host_batch):
-            # jnp.asarray launches the copy; on accelerators it completes
-            # while the device chews on the previous batch (double buffer).
-            return host_batch, tuple(jnp.asarray(a) for a in host_batch.device_args)
-
-        stream = double_buffer(prefetched, stage)
+        session = ScanSession(self._prepared, resume=resume, step=self._step)
+        sinks = self._make_sinks(session.checkpoint)
+        events = session.events()
         try:
-            for host_batch, dev_args in stream:
-                bidx = host_batch.batch.index
-                # Trait blocks are the INNER loop: one staged genotype batch
-                # feeds every block before the next H2D copy (DESIGN.md §10).
-                for blk in blocks:
-                    cell = (bidx, blk.index)
-                    if pending is not None and cell not in pending:
-                        continue
-                    out = self._step(*dev_args, self._panel_block(host_batch.batch, blk))
-                    view = BatchView(
-                        host_batch, out, blk.n_traits,
-                        t_lo=blk.lo, block_index=blk.index,
-                    )
+            # The historical fold loop, verbatim: live cells flow through
+            # ``on_batch`` with ONE payload dict shared across the chain
+            # (so subclass sinks composing through ``_make_sinks`` keep
+            # their payload-sharing contract), replayed cells through
+            # ``merge_shard``.  Note the session commits checkpoint cells
+            # natively from ``CellResult.payload()`` — custom payload keys
+            # are only persisted if a ``CheckpointSink`` is explicitly
+            # appended after the contributing sinks.
+            for cell in events:
+                if cell.view is not None:
                     payload: dict[str, np.ndarray] = {}
                     for sink in sinks:
-                        sink.on_batch(view, payload)
-                    computed.add(cell)
+                        sink.on_batch(cell.view, payload)
+                else:
+                    shard = cell.payload()
+                    for sink in sinks:
+                        sink.merge_shard(shard, cell.lo, cell.hi)
         finally:
-            # Error path included: a raising sink or engine step must not
-            # leave decode workers alive or the in-flight staged copy pinned.
-            stream.close()
-            prefetched.shutdown()
-
-        # Resume path: replay committed-but-not-recomputed cells' shards.
-        if ckpt is not None:
-            for bidx, kidx in sorted(ckpt.completed_cells() - computed):
-                shard = ckpt.load_cell(bidx, kidx)
-                lo, hi = int(shard["lo"]), int(shard["hi"])
-                for sink in sinks:
-                    sink.merge_shard(shard, lo, hi)
+            # Error path included: a raising sink must not leave decode
+            # workers alive or the in-flight staged copy pinned — closing
+            # the generator runs the session's teardown.
+            events.close()
 
         fields: dict[str, Any] = {}
         for sink in sinks:
             fields.update(sink.result())
         return ScanResult(
-            n_markers=m_total,
+            n_markers=self.source.n_markers,
             n_samples=self.n_samples,
             n_traits=self.n_traits,
             dof=self.dof,

@@ -46,7 +46,37 @@ __all__ = [
     "QCSink",
     "LambdaGCSink",
     "CheckpointSink",
+    "extract_hits",
 ]
+
+
+def extract_hits(view: "BatchView", threshold: float) -> tuple[np.ndarray, np.ndarray]:
+    """Collect one cell's (marker, trait) entries at or above ``threshold``.
+
+    Returns globalized ``(H, 2)`` int32 indices and ``(H, 3)`` float32
+    (r, t, -log10 p) stats.  The hit-driven-pull invariant lives here: the
+    full per-cell tiles only cross PCIe when the device-side hit counter is
+    non-zero.  Shared by ``HitSink`` (the ScanResult path) and
+    ``api.session.CellResult`` (the streaming path) so both extract
+    bit-identical rows.
+    """
+    hits = np.zeros((0, 2), np.int32)
+    stats = np.zeros((0, 3), np.float32)
+    if view.hit_count > 0:
+        nlp = view.nlp
+        rows, cols = np.nonzero(nlp >= threshold)
+        r_np, t_np = view.r, view.t
+        hits = np.stack(
+            [
+                rows.astype(np.int32) + view.batch.lo,
+                cols.astype(np.int32) + view.t_lo,
+            ],
+            1,
+        )
+        stats = np.stack(
+            [r_np[rows, cols], t_np[rows, cols], nlp[rows, cols]], 1
+        ).astype(np.float32)
+    return hits, stats
 
 
 class BatchView:
@@ -140,6 +170,20 @@ class ResultSink:
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
         raise NotImplementedError
 
+    def on_cell(self, cell: Any) -> None:
+        """Fold one streamed ``api.session.CellResult`` (the event path the
+        result writers drive; the ``GenomeScan`` shim uses the historical
+        ``on_batch``/``merge_shard`` chain directly).  The default routes
+        live cells through the legacy ``on_batch`` hook — so sink
+        subclasses written against that interface keep working — and
+        replayed cells through ``merge_shard``.  Built-in sinks override
+        this to fold from the cell's cached payload directly (same arrays,
+        extracted once)."""
+        if cell.view is not None:
+            self.on_batch(cell.view, {})
+        else:
+            self.merge_shard(cell.payload(), cell.lo, cell.hi)
+
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
         """Fold a previously committed checkpoint shard in (resume path)."""
 
@@ -172,6 +216,9 @@ class BestTraitSink(ResultSink):
         payload["best_nlp"] = view.best_nlp
         payload["best_row"] = view.best_row
         self._fold(view.best_nlp, view.best_row, view.batch.lo, view.t_lo)
+
+    def on_cell(self, cell: Any) -> None:
+        self._fold(cell.best_nlp, cell.best_row, cell.lo, cell.t_lo)
 
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
         self._fold(shard["best_nlp"], shard["best_row"], lo, int(shard.get("t_lo", 0)))
@@ -246,25 +293,13 @@ class HitSink(ResultSink):
         self._rows_in_ram = 0
 
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
-        batch_hits = np.zeros((0, 2), np.int32)
-        batch_stats = np.zeros((0, 3), np.float32)
-        if view.hit_count > 0:
-            nlp = view.nlp
-            rows, cols = np.nonzero(nlp >= self.threshold)
-            r_np, t_np = view.r, view.t
-            batch_hits = np.stack(
-                [
-                    rows.astype(np.int32) + view.batch.lo,
-                    cols.astype(np.int32) + view.t_lo,
-                ],
-                1,
-            )
-            batch_stats = np.stack(
-                [r_np[rows, cols], t_np[rows, cols], nlp[rows, cols]], 1
-            ).astype(np.float32)
+        batch_hits, batch_stats = extract_hits(view, self.threshold)
         payload["hits"] = batch_hits
         payload["hit_stats"] = batch_stats
         self._append(batch_hits, batch_stats)
+
+    def on_cell(self, cell: Any) -> None:
+        self._append(cell.hits, cell.hit_stats)
 
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
         self._append(shard["hits"], shard["hit_stats"])
@@ -317,6 +352,15 @@ class QCSink(ResultSink):
             self.omnibus_nlp[lo:hi] = view.omnibus_nlp
             payload["omnibus_nlp"] = self.omnibus_nlp[lo:hi]
 
+    def on_cell(self, cell: Any) -> None:
+        if cell.maf is None:  # a t_lo > 0 cell: no marker-level tracks
+            return
+        lo, hi = cell.lo, cell.hi
+        self.maf[lo:hi] = cell.maf
+        self.valid[lo:hi] = cell.valid
+        if self.omnibus_nlp is not None and cell.omnibus_nlp is not None:
+            self.omnibus_nlp[lo:hi] = cell.omnibus_nlp
+
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
         if "maf" not in shard:  # a t_lo > 0 cell: no marker-level tracks
             return
@@ -349,6 +393,10 @@ class LambdaGCSink(ResultSink):
         payload["t_probe"] = probe
         self._samples.append(probe)
 
+    def on_cell(self, cell: Any) -> None:
+        if cell.t_probe is not None:
+            self._samples.append(np.asarray(cell.t_probe, np.float32))
+
     def merge_shard(self, shard: dict[str, np.ndarray], lo: int, hi: int) -> None:
         # Shards written before the probe was persisted simply contribute
         # nothing (lambda then rests on the recomputed batches, as before).
@@ -365,10 +413,23 @@ class CheckpointSink(ResultSink):
     """Commit each grid cell's accumulated payload as an atomic shard.  Must
     be the LAST sink in the chain: it persists whatever the sinks before it
     put into ``payload``.  Shards carry the cell's trait extent so resume
-    folds land at the right block origin."""
+    folds land at the right block origin.
+
+    Since the api redesign the ``ScanSession`` executor commits every live
+    cell natively (from ``CellResult.payload()`` — the built-in sinks'
+    exact payload), so this sink is no longer composed by default.  Append
+    it explicitly after custom sinks whose ``payload`` contributions must
+    be persisted; re-committing a cell is an idempotent overwrite."""
 
     def __init__(self, ckpt: ScanCheckpoint):
         self.ckpt = ckpt
+
+    def on_cell(self, cell: Any) -> None:
+        # The api's ScanSession commits cells natively; when this sink is
+        # nevertheless composed into an event-driven chain, re-committing
+        # the same payload is an idempotent overwrite, never a truncation.
+        if cell.view is not None:
+            self.ckpt.commit_cell(cell.batch_index, cell.block_index, cell.payload())
 
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
         shard = {

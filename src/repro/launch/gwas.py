@@ -1,57 +1,74 @@
-"""TorchGWAS-equivalent command line (the paper's §2.1 packaged workflow).
+"""TorchGWAS-equivalent command line: a thin subcommand shell over
+``repro.api`` (the paper's §2.1 packaged workflow).
 
-    python -m repro.launch.gwas \
+    python -m repro.launch.gwas scan \
         --genotypes cohort.bed --pheno panel.tsv --covar covars.tsv \
-        --out results/ [--engine fused] [--exclude-related] [--multivariate] \
-        [--batch-markers 8192] [--maf-min 0.01] [--resume]
+        --out results/ [--engine fused] [--writer tsv,npz] [--resume ...]
 
-    # per-chromosome fileset: glob (quote it!) or comma list
-    python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' ...
+    python -m repro.launch.gwas grm \
+        --genotypes 'cohort_chr*.bed' --out results/grm.npz [--loco]
 
-    # paper-scale trait panels: tile the trait axis (2-D scan grid with
-    # out-of-core panel blocks; bitwise-identical results, device memory
-    # bounded by the block width instead of the panel width)
-    python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' \
-        --trait-block 2048 ...
+    python -m repro.launch.gwas merge \
+        --checkpoint-dir ck/ --out results/ [--genotypes ... --pheno ...]
 
-    # mixed model (population structure / relatedness): streamed GRM +
-    # one-time rotation; --loco subtracts each chromosome's GRM share
-    python -m repro.launch.gwas --genotypes 'cohort_chr*.bed' \
-        --engine lmm --loco ...
+    python -m repro.launch.gwas report --out results/ [--top 20]
+
+``scan`` binds a Study, plans the grid, and streams the session's events
+through result writers — hits land in sorted ``hits.tsv`` batch by batch
+(never held as a dense table in RAM), per-trait best and per-marker QC
+follow at close, and ``summary.json`` records the run.  ``grm`` runs the
+streamed GRM pass standalone; ``merge`` turns a committed checkpoint
+directory into final outputs without recomputing anything; ``report``
+pretty-prints a results directory.
+
+The historical flags-only invocation (no subcommand) still works and means
+``scan``:
+
+    python -m repro.launch.gwas --genotypes cohort.bed --pheno panel.tsv \
+        --covar covars.tsv --out results/
 
 Accepts PLINK (.bed), BGEN (.bgen) and NumPy (.npy/.npz) genotype
-containers — one file, a glob, or a comma-separated list opened as one
-contiguous multi-file source; aligns tables by sample id; writes a hits
-TSV + per-trait best TSV + a JSON run summary.  ``--checkpoint-dir`` makes
-the scan restartable at marker-batch granularity.
+containers — one file, a glob (quote it!), or a comma-separated list opened
+as one contiguous multi-file source; aligns tables by sample id.
+``--checkpoint-dir`` makes the scan restartable at grid-cell granularity.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
 import numpy as np
 
 from repro.core.association import AssocOptions
 from repro.core.engines import available_engines
-from repro.core.screening import GenomeScan, ScanConfig
-from repro.io import align_tables, open_genotypes, read_table
+
+SUBCOMMANDS = ("scan", "grm", "merge", "report")
 
 
-def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser(prog="repro.launch.gwas", description=__doc__)
+# ------------------------------------------------------------------- scan
+
+
+def build_scan_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="repro.launch.gwas scan", description=__doc__)
     ap.add_argument("--genotypes", required=True,
                     help=".bed / .bgen / .npy / .npz — one file, a glob "
                          "('cohort_chr*.bed'), or a comma-separated list")
     ap.add_argument("--pheno", required=True, help="phenotype table (FID IID trait...)")
     ap.add_argument("--covar", default=None, help="covariate table")
     ap.add_argument("--out", required=True, help="output directory")
+    ap.add_argument("--writer", default="tsv",
+                    help="comma list of result writers (see "
+                         "repro.api.available_writers()); default tsv")
     ap.add_argument("--engine", default="dense", choices=available_engines())
     ap.add_argument("--mode", default="mp", choices=["mp", "sample"])
     ap.add_argument("--dof-mode", default="paper", choices=["paper", "exact"])
     ap.add_argument("--precision", default="fp32", choices=["fp32", "bf16"])
+    ap.add_argument("--input-dtype", default="fp32", choices=["fp32", "bf16"],
+                    help="fused kernel GEMM input dtype (the epilogue stays "
+                         "fp32 either way)")
     ap.add_argument("--batch-markers", type=int, default=8192)
     ap.add_argument("--trait-block", type=int, default=0,
                     help="tile the trait axis into blocks of this width "
@@ -67,8 +84,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--panel-resident-blocks", type=int, default=4,
                     help="how many panel blocks the device LRU keeps staged")
     ap.add_argument("--hit-spill-rows", type=int, default=2_000_000,
-                    help="spill collected hits to npz parts under --out "
-                         "once this many rows are resident in RAM")
+                    help="spill buffered hit rows to npz parts under --out "
+                         "once this many are resident in RAM")
     lmm = ap.add_argument_group("mixed model (--engine lmm)")
     lmm.add_argument("--loco", action="store_true",
                      help="leave-one-chromosome-out GRM (needs a multi-file fileset)")
@@ -88,78 +105,87 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def main(argv=None) -> None:
-    args = build_parser().parse_args(argv)
+# Historical entry point compatibility: the flags-only invocation parses
+# with the scan parser.
+build_parser = build_scan_parser
+
+
+def cmd_scan(argv) -> None:
+    from repro.api import GridSpec, IOSpec, LmmSpec, Study, get_writer
+
+    args = build_scan_parser().parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
 
-    source = open_genotypes(args.genotypes)
-    pheno = read_table(args.pheno)
-    covar = read_table(args.covar) if args.covar else None
-    y, c, keep = align_tables(source.sample_ids, pheno, covar)
-    if not keep.all():
-        raise SystemExit(
-            f"{(~keep).sum()} genotype samples missing from the tables; "
-            "subset the genotype container first (alignment is strict by design)"
+    try:
+        study = Study.from_files(
+            args.genotypes, args.pheno, args.covar,
+            exclude_related=args.exclude_related,
         )
-    y = np.where(np.isnan(y), np.nanmean(y, axis=0, keepdims=True), y)
-
-    config = ScanConfig(
-        batch_markers=args.batch_markers,
-        trait_block=args.trait_block,
+    except ValueError as e:
+        if "missing from the tables" in str(e):
+            raise SystemExit(str(e)) from None
+        raise
+    plan = study.plan(
         engine=args.engine,
-        mode=args.mode,
+        grid=GridSpec(
+            batch_markers=args.batch_markers,
+            trait_block=args.trait_block,
+            block_p=args.block_p,
+            panel_resident_blocks=args.panel_resident_blocks,
+        ),
+        lmm=(
+            LmmSpec(
+                loco=args.loco,
+                grm_method=args.grm_method,
+                grm_batch_markers=args.grm_batch_markers,
+                delta=args.lmm_delta,
+                epilogue=args.lmm_epilogue,
+            )
+            if args.engine == "lmm" else None
+        ),
+        io=IOSpec(io_workers=args.io_workers, spill_dir=args.out,
+                  hit_spill_rows=args.hit_spill_rows),
         options=AssocOptions(dof_mode=args.dof_mode, precision=args.precision),
+        mode=args.mode,
         hit_threshold_nlp=args.hit_threshold,
         maf_min=args.maf_min,
-        exclude_related=args.exclude_related,
         multivariate=args.multivariate,
         checkpoint_dir=args.checkpoint_dir,
-        io_workers=args.io_workers,
-        block_p=args.block_p,
-        panel_resident_blocks=args.panel_resident_blocks,
-        spill_dir=args.out,
-        hit_spill_rows=args.hit_spill_rows,
-        loco=args.loco,
-        grm_method=args.grm_method,
-        grm_batch_markers=args.grm_batch_markers,
-        lmm_delta=args.lmm_delta,
-        lmm_epilogue=args.lmm_epilogue,
+        input_dtype=args.input_dtype,
     )
-    scan = GenomeScan(source, y, c, config=config)
+    # Writers resolve BEFORE the expensive amortized prepare (GRM/REML for
+    # lmm can take hours at scale; a typo'd --writer must fail in
+    # milliseconds, not after it).
+    writers = [
+        get_writer(name)(args.out, spill_rows=args.hit_spill_rows)
+        for name in args.writer.split(",") if name
+    ]
+    session = plan.run(resume=not args.no_resume)
+    # wall_s covers the scan itself, not the amortized setup — the same
+    # accounting the historical CLI reported.
     t0 = time.time()
-    result = scan.run(resume=not args.no_resume)
+    wsum = session.stream_to(*writers)
     wall = time.time() - t0
 
-    hits_path = os.path.join(args.out, "hits.tsv")
-    with open(hits_path, "w") as f:
-        f.write("marker\ttrait\tr\tt\tneglog10p\n")
-        for (m, t), (r, tt, nlp) in zip(result.hits, result.hit_stats):
-            f.write(f"{source.marker_ids[m]}\t{pheno.names[t]}\t{r:.5f}\t{tt:.4f}\t{nlp:.3f}\n")
-    best_path = os.path.join(args.out, "per_trait_best.tsv")
-    with open(best_path, "w") as f:
-        f.write("trait\tbest_marker\tneglog10p\n")
-        for t, name in enumerate(pheno.names):
-            m = int(result.best_marker[t])
-            mid = source.marker_ids[m] if m >= 0 else "NA"
-            f.write(f"{name}\t{mid}\t{result.best_nlp[t]:.3f}\n")
     summary = {
-        "markers": result.n_markers,
-        "samples": result.n_samples,
-        "traits": result.n_traits,
-        "excluded_related": result.excluded_samples,
-        "dof": result.dof,
-        "hits": int(len(result.hits)),
-        "lambda_gc": result.lambda_gc,
+        "markers": session.n_markers,
+        "samples": session.n_samples,
+        "traits": session.n_traits,
+        "excluded_related": study.excluded_samples,
+        "dof": session.dof,
+        "hits": int(wsum.get("hits", 0)),
+        "lambda_gc": wsum.get("lambda_gc"),
         "wall_s": wall,
-        "markers_per_s": result.n_markers / wall,
+        "markers_per_s": session.n_markers / wall,
         "engine": args.engine,
-        "genotype_shards": getattr(source, "n_shards", 1),
+        "writers": [w.name for w in writers],
+        "genotype_shards": getattr(study.source, "n_shards", 1),
         "trait_block": args.trait_block,
-        "trait_blocks": scan.n_trait_blocks,
-        "grid_cells": scan.n_batches * scan.n_trait_blocks,
+        "trait_blocks": session.n_trait_blocks,
+        "grid_cells": session.n_batches * session.n_trait_blocks,
     }
-    if result.lmm_info:
-        info = result.lmm_info
+    if session.lmm_info:
+        info = session.lmm_info
         summary["lmm"] = {
             "grm_method": info["grm_method"],
             "loco": info["loco"],
@@ -177,7 +203,194 @@ def main(argv=None) -> None:
     with open(os.path.join(args.out, "summary.json"), "w") as f:
         json.dump(summary, f, indent=1)
     print(json.dumps(summary, indent=1))
-    print(f"hits: {hits_path}")
+    if "hits_tsv" in wsum:
+        print(f"hits: {wsum['hits_tsv']}")
+
+
+# -------------------------------------------------------------------- grm
+
+
+def cmd_grm(argv) -> None:
+    from repro.core.grm import grm_spectrum, spectrum_fingerprint, stream_grm
+    from repro.io import open_genotypes
+
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.gwas grm",
+        description="Streamed GRM pass, standalone: one pass over the "
+                    "genotype stream, never materializing dosages.",
+    )
+    ap.add_argument("--genotypes", required=True)
+    ap.add_argument("--out", required=True, help="output .npz path")
+    ap.add_argument("--method", default="std", choices=["std", "centered"])
+    ap.add_argument("--batch-markers", type=int, default=4096)
+    ap.add_argument("--maf-min", type=float, default=0.0)
+    ap.add_argument("--io-workers", type=int, default=2)
+    ap.add_argument("--loco", action="store_true",
+                    help="also store each leave-one-chromosome-out GRM "
+                         "(needs a multi-file fileset)")
+    ap.add_argument("--spectrum", action="store_true",
+                    help="also eigendecompose and store (s, u)")
+    args = ap.parse_args(argv)
+
+    source = open_genotypes(args.genotypes)
+    t0 = time.time()
+    grm = stream_grm(
+        source, batch_markers=args.batch_markers, method=args.method,
+        maf_min=args.maf_min, io_workers=args.io_workers,
+    )
+    k = grm.full()
+    arrays: dict[str, np.ndarray] = {
+        "k": k,
+        "shard_boundaries": np.asarray(
+            getattr(source, "shard_boundaries", (0, source.n_markers))
+        ),
+    }
+    if args.loco:
+        if grm.n_shards < 2:
+            raise SystemExit("--loco needs a per-chromosome fileset (>= 2 shards)")
+        for sid in range(grm.n_shards):
+            arrays[f"loco_{sid}"] = grm.loco(sid)
+    spec_hash = None
+    if args.spectrum:
+        s, u = grm_spectrum(k)
+        arrays["s"], arrays["u"] = s, u
+        spec_hash = spectrum_fingerprint({-1: s})
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    tmp = args.out + ".tmp.npz"
+    np.savez_compressed(tmp, **arrays)
+    os.replace(tmp, args.out)
+    summary = {
+        "samples": int(k.shape[0]),
+        "markers": source.n_markers,
+        "method": args.method,
+        "loco_scopes": grm.n_shards if args.loco else 0,
+        **({"spectrum_hash": spec_hash} if spec_hash else {}),
+        "wall_s": time.time() - t0,
+        "out": args.out,
+    }
+    print(json.dumps(summary, indent=1))
+
+
+# ------------------------------------------------------------------ merge
+
+
+def cmd_merge(argv) -> None:
+    from repro.api import get_writer
+    from repro.api.session import CheckpointReplay
+
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.gwas merge",
+        description="Fold a committed checkpoint directory into final "
+                    "outputs without recomputing any grid cell.",
+    )
+    ap.add_argument("--checkpoint-dir", required=True)
+    ap.add_argument("--out", required=True, help="output directory")
+    ap.add_argument("--writer", default="tsv")
+    ap.add_argument("--genotypes", default=None,
+                    help="optional: resolve marker names for the TSVs")
+    ap.add_argument("--pheno", default=None,
+                    help="optional: resolve trait names for the TSVs")
+    args = ap.parse_args(argv)
+
+    marker_ids = trait_names = None
+    if args.genotypes:
+        from repro.io import open_genotypes
+
+        marker_ids = open_genotypes(args.genotypes).marker_ids
+    if args.pheno:
+        from repro.io import read_table
+
+        trait_names = tuple(read_table(args.pheno).names)
+    replay = CheckpointReplay(
+        args.checkpoint_dir, marker_ids=marker_ids, trait_names=trait_names
+    )
+    if not replay.complete:
+        done = len(list(replay.checkpoint.completed_cells()))
+        total = replay.n_batches * replay.n_trait_blocks
+        print(f"warning: checkpoint is partial ({done}/{total} cells); "
+              "merging what is committed", file=sys.stderr)
+    os.makedirs(args.out, exist_ok=True)
+    writers = [get_writer(n)(args.out) for n in args.writer.split(",") if n]
+    wsum = replay.stream_to(*writers)
+    summary = {
+        "markers": replay.n_markers,
+        "traits": replay.n_traits,
+        "grid_cells": replay.n_batches * replay.n_trait_blocks,
+        "merged_cells": len(list(replay.checkpoint.completed_cells())),
+        "complete": replay.complete,
+        "hits": int(wsum.get("hits", 0)),
+        "lambda_gc": wsum.get("lambda_gc"),
+        "writers": [w.name for w in writers],
+    }
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print(json.dumps(summary, indent=1))
+
+
+# ----------------------------------------------------------------- report
+
+
+def cmd_report(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.gwas report",
+        description="Pretty-print a results directory (summary + top hits).",
+    )
+    ap.add_argument("--out", required=True, help="results directory to read")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    spath = os.path.join(args.out, "summary.json")
+    if os.path.exists(spath):
+        with open(spath) as f:
+            summary = json.load(f)
+        print("== scan summary ==")
+        for k in ("markers", "samples", "traits", "hits", "lambda_gc",
+                  "engine", "dof", "wall_s"):
+            if k in summary and summary[k] is not None:
+                v = summary[k]
+                print(f"  {k:<12} {v:.4g}" if isinstance(v, float) else f"  {k:<12} {v}")
+        if "lmm" in summary:
+            print(f"  lmm          scopes={summary['lmm'].get('scopes')} "
+                  f"loco={summary['lmm'].get('loco')}")
+    hits_path = os.path.join(args.out, "hits.tsv")
+    if not os.path.exists(hits_path):
+        raise SystemExit(f"no hits.tsv under {args.out}")
+    rows = []
+    with open(hits_path) as f:
+        header = f.readline().rstrip("\n").split("\t")
+        for line in f:
+            rows.append(line.rstrip("\n").split("\t"))
+    rows.sort(key=lambda r: -float(r[4]))
+    print(f"\n== top {min(args.top, len(rows))} of {len(rows)} hits ==")
+    print(f"  {'marker':<14} {'trait':<12} {'r':>8} {'t':>9} {'-log10p':>9}")
+    for r in rows[: args.top]:
+        print(f"  {r[0]:<14} {r[1]:<12} {r[2]:>8} {r[3]:>9} {r[4]:>9}")
+
+
+# ------------------------------------------------------------------- main
+
+
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    try:
+        if argv and argv[0] in SUBCOMMANDS:
+            cmd, rest = argv[0], argv[1:]
+            return {
+                "scan": cmd_scan,
+                "grm": cmd_grm,
+                "merge": cmd_merge,
+                "report": cmd_report,
+            }[cmd](rest)
+        # Historical flags-only invocation == `scan` (kept until the
+        # GenomeScan shim is removed).
+        return cmd_scan(argv)
+    except BrokenPipeError:
+        # stdout went away (e.g. `... report | head`); not an error.  Point
+        # the fd at devnull so the interpreter's exit flush stays quiet.
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        return
 
 
 if __name__ == "__main__":

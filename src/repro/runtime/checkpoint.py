@@ -111,6 +111,25 @@ class ScanCheckpoint:
             existing.setdefault("n_blocks", n_blocks)
             self._manifest = existing
 
+    @classmethod
+    def open_existing(cls, root: str) -> "ScanCheckpoint":
+        """Open a checkpoint directory as-is, trusting its own manifest for
+        the fingerprint and grid decomposition.  This is the *read* path
+        (``repro.api.session.CheckpointReplay``, the CLI ``merge``
+        subcommand): no scan config is available to re-derive the identity,
+        and none is needed — nothing is committed through a replay."""
+        manifest_path = os.path.join(root, cls.MANIFEST)
+        if not os.path.exists(manifest_path):
+            raise FileNotFoundError(f"no checkpoint manifest under {root}")
+        with open(manifest_path) as f:
+            m = json.load(f)
+        return cls(
+            root,
+            fingerprint=m["fingerprint"],
+            n_batches=m["n_batches"],
+            n_blocks=m.get("n_blocks", 1),
+        )
+
     def _load_manifest(self) -> dict | None:
         if not os.path.exists(self._manifest_path):
             return None

@@ -1,0 +1,530 @@
+"""The layered public API (repro.api): bind/plan/execute/emit.
+
+Covers the Study -> plan -> ScanSession.events() -> writers pipeline:
+spec validation, event-stream completeness, streaming-writer outputs
+identical to the deprecated ScanResult shim's, the bounded-memory contract
+of the sorted hit stream, checkpoint interop between the shim and the API
+(same fingerprints, mid-grid resume through writers), the CLI subcommand
+shell, and teardown of the trait-axis prefetch worker on error paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    GridSpec,
+    IOSpec,
+    LmmSpec,
+    NpzShardWriter,
+    ResultWriter,
+    Study,
+    TsvWriter,
+    available_writers,
+    get_writer,
+    register_writer,
+)
+from repro.api.session import CheckpointReplay
+from repro.api.specs import ScanConfig
+from repro.core.screening import GenomeScan
+from repro.io import plink
+
+
+@pytest.fixture(scope="module")
+def source(cohort_files):
+    return plink.PlinkBed(cohort_files["bed"])
+
+
+@pytest.fixture(scope="module")
+def study(source, cohort):
+    return Study.from_arrays(source, cohort.phenotypes, cohort.covariates)
+
+
+def _grid(**kw):
+    base = dict(batch_markers=128, block_m=64, block_n=128, block_p=64)
+    base.update(kw)
+    return GridSpec(**base)
+
+
+def _scan_result(source, cohort, **cfg_kw):
+    base = dict(batch_markers=128, block_m=64, block_n=128, block_p=64)
+    base.update(cfg_kw)
+    return GenomeScan(
+        source, cohort.phenotypes, cohort.covariates, config=ScanConfig(**base)
+    ).run()
+
+
+def _sorted_hits(res):
+    order = np.lexsort((res.hits[:, 1], res.hits[:, 0]))
+    return res.hits[order], res.hit_stats[order]
+
+
+# ------------------------------------------------------------ bind + plan
+
+
+def test_study_binds_files(cohort, cohort_files):
+    study = Study.from_files(
+        cohort_files["bed"], cohort_files["pheno"], cohort_files["cov"]
+    )
+    assert study.n_samples == cohort.phenotypes.shape[0]
+    assert study.n_traits == cohort.phenotypes.shape[1]
+    assert list(study.trait_names)[:2] == ["trait0", "trait1"]
+    np.testing.assert_allclose(study.phenotypes, cohort.phenotypes, atol=2e-5)
+
+
+def test_study_rejects_misaligned_arrays(source, cohort):
+    with pytest.raises(ValueError, match="align"):
+        Study.from_arrays(source, cohort.phenotypes[:-3])
+
+
+def test_plan_validates_specs(study):
+    with pytest.raises(ValueError, match="unknown scan engine"):
+        study.plan(engine="nope")
+    with pytest.raises(ValueError, match="engine='lmm'"):
+        study.plan(engine="dense", lmm=LmmSpec(loco=True))
+    with pytest.raises(ValueError, match="batch_markers"):
+        study.plan(grid=GridSpec(batch_markers=0))
+    with pytest.raises(ValueError, match="input_dtype"):
+        study.plan(engine="dense", input_dtype="bf16")
+    with pytest.raises(ValueError, match="epilogue"):
+        study.plan(engine="lmm", lmm=LmmSpec(epilogue="nope"))
+    with pytest.raises(ValueError, match="sharding mode"):
+        study.plan(mode="diag")
+
+
+def test_config_spec_roundtrip():
+    cfg = ScanConfig.from_specs(
+        engine="lmm",
+        grid=GridSpec(batch_markers=64, trait_block=8, block_p=8),
+        lmm=LmmSpec(loco=True, delta=1.5),
+        io=IOSpec(io_workers=3, hit_spill_rows=77),
+        maf_min=0.01,
+    )
+    assert cfg.engine == "lmm" and cfg.loco and cfg.lmm_delta == 1.5
+    assert cfg.batch_markers == 64 and cfg.trait_block == 8
+    assert cfg.io_workers == 3 and cfg.hit_spill_rows == 77
+    assert cfg.grid_spec() == GridSpec(batch_markers=64, trait_block=8, block_p=8)
+    assert cfg.lmm_spec() == LmmSpec(loco=True, delta=1.5)
+    assert cfg.io_spec().io_workers == 3
+
+
+# ---------------------------------------------------------------- execute
+
+
+def test_events_cover_the_grid(study):
+    session = study.plan(grid=_grid(trait_block=4, block_p=4)).run()
+    seen = set()
+    n_live = 0
+    for cell in session.events():
+        seen.add((cell.batch_index, cell.block_index))
+        assert cell.n_markers == cell.hi - cell.lo
+        assert cell.best_nlp.shape == (cell.n_traits,)
+        assert not cell.replayed
+        n_live += 1
+        if cell.carries_marker_tracks:
+            assert cell.maf is not None and cell.maf.shape == (cell.n_markers,)
+        else:
+            assert cell.maf is None
+    assert len(seen) == session.n_batches * session.n_trait_blocks == n_live
+
+
+def test_session_events_one_shot(study):
+    session = study.plan(grid=_grid()).run()
+    list(session.events())
+    with pytest.raises(RuntimeError, match="one-shot"):
+        next(session.events())
+
+
+# ------------------------------------------------------------------- emit
+
+
+def test_writer_registry():
+    assert {"tsv", "npz"} <= set(available_writers())
+    assert get_writer("tsv") is TsvWriter
+    with pytest.raises(ValueError, match="unknown result writer"):
+        get_writer("parquetish")
+
+    calls = []
+
+    @register_writer("_counting")
+    class CountingWriter(ResultWriter):
+        def open(self, session):
+            calls.append("open")
+
+        def write(self, cell):
+            calls.append("write")
+
+        def close(self):
+            calls.append("close")
+            return {"counted": calls.count("write")}
+
+    try:
+        assert get_writer("_counting") is CountingWriter
+    finally:
+        from repro.api import writers as W
+
+        del W._WRITERS["_counting"]
+
+
+def test_tsv_writer_matches_shim(study, source, cohort, tmp_path):
+    """The acceptance contract: streaming TSV outputs == the deprecated
+    ScanResult shim's hits/best/QC/lambda, on a blocked grid."""
+    kw = dict(trait_block=4, block_p=4)
+    res = _scan_result(source, cohort, hit_threshold_nlp=2.0, **kw)
+    session = study.plan(grid=_grid(**kw), hit_threshold_nlp=2.0).run()
+    out = tmp_path / "tsv"
+    summary = session.stream_to(TsvWriter(str(out)))
+    assert summary["hits"] == len(res.hits)
+    assert summary["lambda_gc"] == res.lambda_gc
+
+    hits, stats = _sorted_hits(res)
+    expected = [
+        f"{source.marker_ids[m]}\ttrait{t}\t{r:.5f}\t{tt:.4f}\t{nlp:.3f}"
+        for (m, t), (r, tt, nlp) in zip(hits, stats)
+    ]
+    lines = (out / "hits.tsv").read_text().strip().splitlines()
+    assert lines[0] == "marker\ttrait\tr\tt\tneglog10p"
+    assert lines[1:] == expected
+
+    best = (out / "per_trait_best.tsv").read_text().strip().splitlines()[1:]
+    assert len(best) == res.n_traits
+    for t, line in enumerate(best):
+        name, mid, nlp = line.split("\t")
+        assert name == f"trait{t}"
+        want = source.marker_ids[int(res.best_marker[t])] if res.best_marker[t] >= 0 else "NA"
+        assert mid == want
+        assert float(nlp) == pytest.approx(float(res.best_nlp[t]), abs=5e-4)
+
+    qc = (out / "qc.tsv").read_text().strip().splitlines()[1:]
+    assert len(qc) == res.n_markers
+    m0 = qc[0].split("\t")
+    assert m0[0] == source.marker_ids[0]
+    assert float(m0[1]) == pytest.approx(float(res.maf[0]), abs=5e-6)
+
+
+def test_npz_writer_matches_shim(study, source, cohort, tmp_path):
+    res = _scan_result(source, cohort, hit_threshold_nlp=2.0)
+    session = study.plan(grid=_grid(), hit_threshold_nlp=2.0).run()
+    out = tmp_path / "npz"
+    summary = session.stream_to(NpzShardWriter(str(out)))
+    hits, stats = _sorted_hits(res)
+    got_h, got_s = [], []
+    for p in summary["hit_shards"]:
+        with np.load(p) as z:
+            got_h.append(z["hits"])
+            got_s.append(z["hit_stats"])
+    np.testing.assert_array_equal(np.concatenate(got_h), hits)
+    np.testing.assert_array_equal(np.concatenate(got_s), stats)
+    with np.load(summary["best_npz"]) as z:
+        np.testing.assert_array_equal(z["best_nlp"], res.best_nlp)
+        np.testing.assert_array_equal(z["best_marker"], res.best_marker)
+    with np.load(summary["qc_npz"]) as z:
+        np.testing.assert_array_equal(z["maf"], res.maf)
+        np.testing.assert_array_equal(z["valid"], res.valid)
+
+
+def test_streaming_hit_memory_is_bounded(study, source, cohort, tmp_path):
+    """The streaming-writer contract: with a flood of hits (threshold 0,
+    every cell full) and a small spill cap, peak resident hit rows never
+    exceed one grid cell plus the cap — the writer path cannot materialize
+    the dense (markers x traits) hit table."""
+    kw = dict(trait_block=4, block_p=4)
+    cap = 256
+    session = study.plan(grid=_grid(**kw), hit_threshold_nlp=0.0).run()
+    w = TsvWriter(str(tmp_path / "bounded"), spill_rows=cap)
+    summary = session.stream_to(w)
+    m, p = source.n_markers, cohort.phenotypes.shape[1]
+    assert summary["hits"] == m * p              # every cell is a hit
+    max_cell_rows = 128 * 4                      # batch_markers x trait_block
+    assert w.peak_hit_rows_in_ram > 0
+    assert w.peak_hit_rows_in_ram <= cap + max_cell_rows
+    # emission transiently materializes at most one marker batch (the
+    # within-batch sort unit), never the scan's full hit table
+    assert w._hits.peak_flush_rows <= 128 * p
+    assert summary["hits"] > cap + max_cell_rows  # the bound actually bit
+    # spill parts are consumed and removed
+    assert not os.path.isdir(os.path.join(str(tmp_path / "bounded"), ".hit_runs"))
+    # ... and the flood is still emitted exactly (count + sortedness)
+    lines = (tmp_path / "bounded" / "hits.tsv").read_text().strip().splitlines()[1:]
+    assert len(lines) == m * p
+
+
+def test_writers_identical_across_spill(study, tmp_path):
+    """Spilling must never change emitted bytes."""
+    a = tmp_path / "nospill"
+    b = tmp_path / "spill"
+    s1 = study.plan(grid=_grid(trait_block=4, block_p=4), hit_threshold_nlp=1.0).run()
+    s1.stream_to(TsvWriter(str(a)))
+    s2 = study.plan(grid=_grid(trait_block=4, block_p=4), hit_threshold_nlp=1.0).run()
+    s2.stream_to(TsvWriter(str(b), spill_rows=16))
+    assert (a / "hits.tsv").read_text() == (b / "hits.tsv").read_text()
+    assert (a / "per_trait_best.tsv").read_text() == (b / "per_trait_best.tsv").read_text()
+
+
+# ------------------------------------------------- checkpoint + resume
+
+
+def test_api_resumes_shim_checkpoint_and_vice_versa(study, source, cohort, tmp_path):
+    """The shim and the API compute identical fingerprints: a checkpoint
+    written by one is resumed by the other (cells all replayed)."""
+    ck = str(tmp_path / "ck")
+    cfg_kw = dict(trait_block=4, block_p=4)
+    res = _scan_result(source, cohort, checkpoint_dir=ck, **cfg_kw)
+    session = study.plan(grid=_grid(**cfg_kw), checkpoint_dir=ck).run()
+    cells = list(session.events())
+    assert all(c.replayed for c in cells)
+    assert len(cells) == session.n_batches * session.n_trait_blocks
+    best = np.zeros(res.n_traits, np.float32)
+    marker = np.full(res.n_traits, -1, np.int64)
+    for c in sorted(cells, key=lambda c: (c.batch_index, c.block_index)):
+        sl = slice(c.t_lo, c.t_hi)
+        better = c.best_nlp > best[sl]
+        best[sl] = np.where(better, c.best_nlp, best[sl])
+        marker[sl] = np.where(better, c.lo + c.best_row.astype(np.int64), marker[sl])
+    np.testing.assert_array_equal(best, res.best_nlp)
+    np.testing.assert_array_equal(marker, res.best_marker)
+
+
+def test_writer_output_identical_across_mid_grid_resume(study, tmp_path):
+    """Cut the checkpoint mid-panel, resume through writers: the replayed
+    (out-of-order) cells must restore exact sorted output."""
+    ck = str(tmp_path / "ck")
+    plan_kw = dict(grid=_grid(trait_block=4, block_p=4), hit_threshold_nlp=1.0)
+    full = study.plan(checkpoint_dir=ck, **plan_kw).run()
+    out_full = tmp_path / "full"
+    full.stream_to(TsvWriter(str(out_full)))
+
+    mpath = os.path.join(ck, "manifest.json")
+    mani = json.load(open(mpath))
+    lost = [k for k in mani["completed"] if k.startswith("1.")] + ["2.1"]
+    for k in lost:
+        mani["completed"].pop(k)
+    json.dump(mani, open(mpath, "w"))
+
+    resumed = study.plan(checkpoint_dir=ck, **plan_kw).run()
+    out_res = tmp_path / "resumed"
+    resumed.stream_to(TsvWriter(str(out_res)))
+    for name in ("hits.tsv", "per_trait_best.tsv", "qc.tsv"):
+        assert (out_full / name).read_text() == (out_res / name).read_text(), name
+
+
+def test_checkpoint_replay_merges_offline(study, source, tmp_path):
+    ck = str(tmp_path / "ck")
+    plan_kw = dict(grid=_grid(trait_block=4, block_p=4), hit_threshold_nlp=1.0)
+    session = study.plan(checkpoint_dir=ck, **plan_kw).run()
+    out_live = tmp_path / "live"
+    session.stream_to(TsvWriter(str(out_live)))
+
+    replay = CheckpointReplay(ck, marker_ids=source.marker_ids)
+    assert replay.complete
+    assert replay.n_markers == source.n_markers
+    assert replay.n_traits == study.n_traits
+    out_merged = tmp_path / "merged"
+    replay.stream_to(TsvWriter(str(out_merged)))
+    assert (out_live / "hits.tsv").read_text() == (out_merged / "hits.tsv").read_text()
+    assert (out_live / "per_trait_best.tsv").read_text() == (
+        out_merged / "per_trait_best.tsv"
+    ).read_text()
+
+
+# ------------------------------------------------------- error teardown
+
+
+def _scan_threads():
+    return [
+        t for t in threading.enumerate()
+        if t.is_alive() and (
+            t.name.startswith("prefetch-worker") or t.name.startswith("panel-prefetch")
+        )
+    ]
+
+
+def test_shim_sinks_share_one_payload_dict(source, cohort):
+    """The historical sink contract through the shim: live cells flow
+    through ``on_batch`` with one payload dict shared along the chain, so
+    a custom sink appended via ``_make_sinks`` sees its predecessors'
+    contributions (best/hits/QC keys)."""
+    from repro.core.sinks import ResultSink as Sink
+
+    seen_keys = []
+
+    class Observer(Sink):
+        def on_batch(self, view, payload):
+            seen_keys.append(set(payload))
+
+        def merge_shard(self, shard, lo, hi):
+            pass
+
+    class Scan(GenomeScan):
+        def _make_sinks(self, ckpt):
+            return [*super()._make_sinks(ckpt), Observer()]
+
+    Scan(source, cohort.phenotypes, cohort.covariates,
+         config=ScanConfig(batch_markers=128, block_m=64, block_n=128,
+                           block_p=64)).run()
+    assert seen_keys and all(
+        {"best_nlp", "best_row", "hits", "hit_stats", "maf", "valid",
+         "t_probe"} <= keys
+        for keys in seen_keys
+    )
+
+
+def test_failing_writer_open_aborts_earlier_writers(study, tmp_path):
+    """A later writer failing to open must abort the already-opened ones
+    (no leaked half-written hits.tsv handles)."""
+
+    class FailsToOpen(ResultWriter):
+        def open(self, session):
+            raise PermissionError("cannot create output dir")
+
+    tsv = TsvWriter(str(tmp_path / "o"))
+    session = study.plan(grid=_grid()).run()
+    with pytest.raises(PermissionError):
+        session.stream_to(tsv, FailsToOpen())
+    assert tsv._f.closed
+    assert _scan_threads() == []
+
+
+def test_raising_writer_tears_down_pipeline(study, tmp_path):
+    assert _scan_threads() == []
+
+    class Exploding(ResultWriter):
+        def open(self, session):
+            self.calls = 0
+
+        def write(self, cell):
+            self.calls += 1
+            if self.calls > 1:
+                raise RuntimeError("writer exploded mid-stream")
+
+    session = study.plan(grid=_grid(trait_block=4, block_p=4)).run()
+    with pytest.raises(RuntimeError, match="writer exploded"):
+        session.stream_to(TsvWriter(str(tmp_path / "o")), Exploding())
+    assert _scan_threads() == []
+
+
+def test_clean_scan_leaves_no_threads(study):
+    list(study.plan(grid=_grid(trait_block=4, block_p=4)).run().events())
+    assert _scan_threads() == []
+
+
+def test_panel_prefetcher_stages_ahead_and_shuts_down():
+    """The trait-axis look-ahead: requests reach the stage callable off the
+    caller's thread, staging errors are swallowed (the consumer's own
+    synchronous call surfaces them), and shutdown joins the worker."""
+    import time
+
+    from repro.core.panels import PanelPrefetcher
+    from repro.runtime.prefetch import TraitBlock
+
+    staged, done = [], threading.Event()
+
+    def stage(batch, block):
+        staged.append((batch, block.index))
+        if block.index == 13:
+            raise RuntimeError("staging failed (must be swallowed)")
+        done.set()
+
+    pf = PanelPrefetcher(stage, name="panel-prefetch-test")
+    pf.request("batch0", TraitBlock(index=13, lo=0, hi=4))   # raises inside
+    pf.request("batch0", TraitBlock(index=1, lo=4, hi=8))
+    assert done.wait(timeout=5.0)
+    deadline = time.time() + 5.0
+    while len(staged) < 2 and time.time() < deadline:
+        time.sleep(0.01)
+    assert ("batch0", 1) in staged and ("batch0", 13) in staged
+    pf.shutdown()
+    assert not any(t.name == "panel-prefetch-test" and t.is_alive()
+                   for t in threading.enumerate())
+    pf.request("batch1", TraitBlock(index=2, lo=8, hi=12))   # no-op after stop
+    pf.shutdown()                                            # idempotent
+
+
+def test_panel_blocks_resident_after_lookahead(study):
+    """During a blocked scan the look-ahead keeps the next block staged: by
+    the end of any batch the panel LRU holds up to its capacity of blocks
+    without the consumer having had to stage them synchronously (the LRU is
+    shared, so we assert residency post-scan)."""
+    plan = study.plan(grid=_grid(trait_block=4, block_p=4))
+    session = plan.run()
+    list(session.events())
+    store = plan.prepare().panels
+    assert len(store._dev) >= min(store.n_blocks, 2)
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def test_cli_scan_subcommand(cohort, cohort_files, tmp_path):
+    from repro.launch.gwas import main
+
+    out = tmp_path / "results"
+    main([
+        "scan",
+        "--genotypes", cohort_files["bed"],
+        "--pheno", cohort_files["pheno"],
+        "--covar", cohort_files["cov"],
+        "--out", str(out),
+        "--batch-markers", "128",
+        "--trait-block", "4", "--block-p", "4",
+        "--writer", "tsv,npz",
+    ])
+    summary = json.loads((out / "summary.json").read_text())
+    assert summary["markers"] == cohort.dosages.shape[0]
+    assert summary["traits"] == cohort.phenotypes.shape[1]
+    assert summary["writers"] == ["tsv", "npz"]
+    assert summary["trait_blocks"] == 3
+    lines = (out / "hits.tsv").read_text().strip().splitlines()
+    assert lines[0].split("\t") == ["marker", "trait", "r", "t", "neglog10p"]
+    found = {(r.split("\t")[0], r.split("\t")[1]) for r in lines[1:]}
+    for m, t, _ in cohort.effects:
+        assert (cohort.marker_ids[m], f"trait{t}") in found
+    assert (out / "best.npz").exists() and (out / "qc.tsv").exists()
+
+
+def test_cli_merge_and_report(cohort, cohort_files, tmp_path, capsys):
+    from repro.launch.gwas import main
+
+    ck, out1, out2 = str(tmp_path / "ck"), tmp_path / "r1", tmp_path / "r2"
+    main([
+        "scan",
+        "--genotypes", cohort_files["bed"],
+        "--pheno", cohort_files["pheno"],
+        "--out", str(out1),
+        "--batch-markers", "128",
+        "--hit-threshold", "2.0",
+        "--checkpoint-dir", ck,
+    ])
+    main([
+        "merge",
+        "--checkpoint-dir", ck,
+        "--out", str(out2),
+        "--genotypes", cohort_files["bed"],
+        "--pheno", cohort_files["pheno"],
+    ])
+    assert (out1 / "hits.tsv").read_text() == (out2 / "hits.tsv").read_text()
+    merged = json.loads((out2 / "summary.json").read_text())
+    assert merged["complete"] is True
+
+    capsys.readouterr()
+    main(["report", "--out", str(out1), "--top", "5"])
+    rep = capsys.readouterr().out
+    assert "scan summary" in rep and "top 5" in rep
+
+
+def test_cli_grm_subcommand(cohort, cohort_files, tmp_path):
+    from repro.core.grm import stream_grm
+    from repro.launch.gwas import main
+
+    out = str(tmp_path / "grm.npz")
+    main(["grm", "--genotypes", cohort_files["bed"], "--out", out,
+          "--batch-markers", "128", "--spectrum"])
+    with np.load(out) as z:
+        k = z["k"]
+        assert "s" in z and "u" in z
+    ref = stream_grm(plink.PlinkBed(cohort_files["bed"]), batch_markers=128)
+    np.testing.assert_allclose(k, ref.full(), atol=1e-6)

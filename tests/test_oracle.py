@@ -174,6 +174,40 @@ def test_golden_values_dense_paper(ols_cohort, ols_paths):
     assert res.lambda_gc == pytest.approx(GOLDEN["dense_paper_lambda_gc"], abs=0.02)
 
 
+def test_fused_bf16_epilogue_audit(ols_cohort, ols_paths):
+    """bf16 fused-engine audit (ROADMAP item): run the fused engine end to
+    end with ``input_dtype="bf16"`` against the float64 OLS oracle and pin
+    the per-stage precision split — the GEMM may round at bfloat16 (±2^-8
+    relative on r), but the epilogue (t, -log10 p, argmax) must stay fp32.
+
+    Documented tolerances (empirical on this 180-sample cohort, with ~3x
+    headroom): |Δr| <= 2e-3 absolute vs the oracle; t within 5e-2; nlp
+    within 1.5e-1.  The epilogue split is asserted structurally: t
+    recomputed in float64 *from the engine's own bf16-GEMM r* matches the
+    engine's t to ~1e-5 — i.e. all bf16 error enters through the GEMM, none
+    through the epilogue."""
+    src = plink.PlinkBed(ols_paths["bed"])
+    r, t, nlp, res = _full_stats(src, ols_cohort, engine="fused", input_dtype="bf16")
+    r_o, t_o, nlp_o = _ols_oracle(ols_cohort, dof_mode="paper")
+    np.testing.assert_allclose(r, r_o, atol=2e-3)
+    np.testing.assert_allclose(t, t_o, atol=5e-2)
+    np.testing.assert_allclose(nlp, nlp_o, atol=1.5e-1)
+    # GEMM-bf16 / epilogue-fp32 split: Eq. 3 in float64 from the engine's r.
+    dof = 180 - 2
+    t_from_r = np.clip(r, -1, 1) * np.sqrt(dof / np.maximum(1.0 - r**2, 1e-12))
+    np.testing.assert_allclose(t, t_from_r, atol=1e-4)
+    # ... and bf16 must actually have engaged (the GEMM differs from fp32).
+    r32, _, _, _ = _full_stats(src, ols_cohort, engine="fused")
+    assert np.abs(r - r32).max() > 1e-6, "bf16 input dtype did not reach the kernel"
+    # ranking survives: the per-trait argmax marker is unchanged
+    fp32_res = GenomeScan(
+        src, ols_cohort.phenotypes, ols_cohort.covariates,
+        config=ScanConfig(batch_markers=32, hit_threshold_nlp=0.0,
+                          block_m=16, block_n=64, block_p=16, engine="fused"),
+    ).run()
+    np.testing.assert_array_equal(res.best_marker, fp32_res.best_marker)
+
+
 # ---------------------------------------------------------------- GLS oracle
 
 

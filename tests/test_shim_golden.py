@@ -1,0 +1,135 @@
+"""Deprecated-shim contract: ``GenomeScan.run()`` on the N=500 ragged
+3-shard fileset must reproduce goldens captured on the PRE-redesign driver
+(the monolithic ``GenomeScan.run`` loop, commit 9c36724), for all three
+engines over a blocked 2-D grid.
+
+The shim now binds a Study, prepares a plan, and folds ``ScanSession``
+events through the historical sinks — these goldens pin that the redesign
+changed *where the loop lives*, not a single statistic.  Regenerate only if
+the synthesis recipe or the statistics change deliberately; any other drift
+is exactly the bug this guard exists to catch.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.screening import GenomeScan, ScanConfig
+from repro.io import open_genotypes, synth
+
+# Captured on the pre-redesign tree (see module docstring): engine ->
+# summary of hits/best/QC/lambda on the fixture below.
+GOLDEN = {
+    "dense": {
+        "best_nlp": [23.9688, 25.2223, 28.0233, 20.8547, 24.7267, 24.3832,
+                     22.756, 29.8587, 5.2958, 1.7119, 2.5333, 2.6408,
+                     3.0878, 2.4077, 2.6485, 2.7077],
+        "best_marker": [116, 278, 263, 155, 122, 86, 17, 133, 257, 290,
+                        189, 99, 253, 156, 299, 89],
+        "n_hits": 10,
+        "hits_marker_sum": 1493,
+        "hits_trait_sum": 40,
+        "hits_nlp_sum": 209.332,
+        "maf_sum": 82.9204,
+        "n_valid": 300,
+        "lambda_gc": 1.3209,
+        "dof": 498,
+    },
+    "fused": {
+        "best_nlp": [23.9688, 25.2223, 28.0233, 20.8547, 24.7267, 24.3832,
+                     22.756, 29.8587, 5.2958, 1.7119, 2.5333, 2.6408,
+                     3.0878, 2.4077, 2.6485, 2.7077],
+        "best_marker": [116, 278, 263, 155, 122, 86, 17, 133, 257, 290,
+                        189, 99, 253, 156, 299, 89],
+        "n_hits": 10,
+        "hits_marker_sum": 1493,
+        "hits_trait_sum": 40,
+        "hits_nlp_sum": 209.332,
+        "maf_sum": 82.9204,
+        "n_valid": 300,
+        "lambda_gc": 1.3209,
+        "dof": 498,
+    },
+    "lmm": {
+        "best_nlp": [23.65, 23.8221, 30.0065, 20.3694, 26.0932, 22.9383,
+                     22.8679, 27.3632, 6.4209, 2.4792, 2.9346, 3.0886,
+                     3.5512, 2.6117, 3.0704, 2.8654],
+        "best_marker": [116, 278, 263, 155, 122, 86, 17, 133, 257, 290,
+                        215, 99, 253, 123, 299, 89],
+        "n_hits": 10,
+        "hits_marker_sum": 1493,
+        "hits_trait_sum": 40,
+        "hits_nlp_sum": 208.262,
+        "maf_sum": 82.9204,
+        "n_valid": 300,
+        "lambda_gc": 1.3095,
+        "dof": 496,
+    },
+}
+
+ENGINE_EXTRAS = {
+    "dense": {},
+    "fused": {},
+    "lmm": {"lmm_delta": 1.0, "loco": True},
+}
+
+
+@pytest.fixture(scope="module")
+def ragged_source(tmp_path_factory):
+    cohort = synth.make_cohort(
+        n_samples=500, n_markers=300, n_traits=16, n_covariates=2,
+        n_causal=8, effect_size=0.5, missing_rate=0.01, seed=97,
+    )
+    stem = str(tmp_path_factory.mktemp("shim_golden") / "cohort")
+    beds = synth.write_split_plink(cohort, stem, n_shards=3)
+    return cohort, open_genotypes(",".join(beds))
+
+
+@pytest.mark.parametrize("engine", ["dense", "fused", "lmm"])
+def test_shim_reproduces_pre_redesign_goldens(ragged_source, engine):
+    cohort, src = ragged_source
+    assert src.n_shards == 3
+    cfg = ScanConfig(
+        batch_markers=64, trait_block=8, engine=engine,
+        hit_threshold_nlp=4.0, block_m=32, block_n=128, block_p=8,
+        **ENGINE_EXTRAS[engine],
+    )
+    res = GenomeScan(src, cohort.phenotypes, cohort.covariates, config=cfg).run()
+    order = np.lexsort((res.hits[:, 1], res.hits[:, 0]))
+    hits, hstats = res.hits[order], res.hit_stats[order]
+    g = GOLDEN[engine]
+    np.testing.assert_allclose(res.best_nlp, g["best_nlp"], atol=1e-3)
+    np.testing.assert_array_equal(res.best_marker, g["best_marker"])
+    assert len(hits) == g["n_hits"]
+    assert int(hits[:, 0].sum()) == g["hits_marker_sum"]
+    assert int(hits[:, 1].sum()) == g["hits_trait_sum"]
+    assert float(hstats[:, 2].sum()) == pytest.approx(g["hits_nlp_sum"], abs=1e-2)
+    assert float(res.maf.sum()) == pytest.approx(g["maf_sum"], abs=1e-3)
+    assert int(res.valid.sum()) == g["n_valid"]
+    assert res.lambda_gc == pytest.approx(g["lambda_gc"], abs=1e-3)
+    assert res.dof == g["dof"]
+
+
+@pytest.mark.parametrize("engine", ["dense", "fused", "lmm"])
+def test_streamed_writers_match_shim_on_ragged_fileset(ragged_source, engine, tmp_path):
+    """The same fileset through the API's streaming path: writer outputs
+    must agree with the (golden-pinned) shim result cell for cell."""
+    from repro.api import Study, GridSpec, LmmSpec, TsvWriter
+
+    cohort, src = ragged_source
+    study = Study.from_arrays(src, cohort.phenotypes, cohort.covariates)
+    session = study.plan(
+        engine=engine,
+        grid=GridSpec(batch_markers=64, trait_block=8, block_m=32,
+                      block_n=128, block_p=8),
+        lmm=LmmSpec(delta=1.0, loco=True) if engine == "lmm" else None,
+        hit_threshold_nlp=4.0,
+    ).run()
+    out = tmp_path / engine
+    summary = session.stream_to(TsvWriter(str(out)))
+    g = GOLDEN[engine]
+    assert summary["hits"] == g["n_hits"]
+    assert summary["lambda_gc"] == pytest.approx(g["lambda_gc"], abs=1e-3)
+    best_lines = (out / "per_trait_best.tsv").read_text().strip().splitlines()[1:]
+    got_best = [float(l.split("\t")[2]) for l in best_lines]
+    np.testing.assert_allclose(got_best, g["best_nlp"], atol=2e-3)
