@@ -9,6 +9,9 @@
     trait_block   — 2-D scan grid sweep: wall time + peak panel residency
                     vs trait-block width (device memory bounded by the
                     block, not the panel; statistics bitwise-identical)
+    executor      — multi-device grid executor sweep (fake CPU devices in a
+                    subprocess): device count x placement, per-device
+                    utilization from the session metrics, bitwise identity
     kernels       — us/call of the association GEMM across batch geometries
     scaling_n     — runtime vs cohort size N (linear, §2.2)
 
@@ -239,6 +242,85 @@ def bench_trait_blocks() -> None:
         )
 
 
+_EXECUTOR_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json, tempfile, time
+import os.path as osp
+import numpy as np
+from repro.api import ExecSpec, GridSpec, Study
+from repro.core.sinks import BestTraitSink
+from repro.io import plink, synth
+
+co = synth.make_cohort(n_samples=512, n_markers=1024, n_traits=64,
+                       n_causal=6, seed=5)
+d = tempfile.mkdtemp()
+paths = synth.write_cohort_files(co, osp.join(d, "bench_md"))
+study = Study.from_arrays(plink.PlinkBed(paths["bed"]),
+                          co.phenotypes, co.covariates)
+grid = GridSpec(batch_markers=256, trait_block=16,
+                block_m=64, block_n=128, block_p=16)
+rows, ref = [], None
+for devices, placement in [(1, "marker-major"), (2, "marker-major"),
+                           (4, "marker-major"), (4, "trait-major")]:
+    session = study.plan(
+        grid=grid, hit_threshold_nlp=2.0,
+        executor=ExecSpec(devices=devices, placement=placement),
+    ).run()
+    sink = BestTraitSink(study.n_traits)
+    t0 = time.perf_counter()
+    for cell in session.events():
+        sink.on_cell(cell)
+    dt = time.perf_counter() - t0
+    key = sink.best_nlp.tobytes() + sink.best_marker.tobytes()
+    ref = key if ref is None else ref
+    m = session.metrics.summary()
+    rows.append({
+        "devices": devices, "placement": placement, "wall_s": round(dt, 3),
+        "markers_per_s": m["markers_per_s"],
+        "trait_markers_per_s": m["trait_markers_per_s"],
+        "mean_utilization": round(
+            sum(v["utilization"] for v in m["per_device"].values())
+            / max(len(m["per_device"]), 1), 3),
+        "identical_to_serial": key == ref,
+    })
+print(json.dumps(rows))
+"""
+
+
+def bench_executor() -> None:
+    """Multi-device grid executor sweep (DESIGN.md §12), on 4 fake CPU
+    devices in a subprocess (the device count is fixed at process start).
+    Fake devices timeshare ONE physical CPU, so wall time here measures
+    scheduling/staging overhead, not speedup — the rows that matter are
+    per-device utilization (the executor keeps slots busy), the session
+    metrics throughput, and ``identical=True`` (bitwise identity across
+    device counts and placements, the §12 contract)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _EXECUTOR_CHILD],
+        capture_output=True, text=True, timeout=1800, env=env,
+    )
+    if proc.returncode != 0:
+        emit("executor_sweep_failed", 0.0, proc.stderr.strip()[-120:].replace(",", ";"))
+        return
+    for row in json.loads(proc.stdout.strip().splitlines()[-1]):
+        emit(
+            f"executor_d{row['devices']}_{row['placement'].replace('-', '_')}",
+            row["wall_s"] * 1e6,
+            f"trait_markers_per_s={row['trait_markers_per_s']:.0f},"
+            f"mean_util={row['mean_utilization']},"
+            f"identical={row['identical_to_serial']}",
+        )
+
+
 def bench_kernels() -> None:
     """Association GEMM across geometries (us/call + achieved GFLOP/s)."""
     rng = np.random.default_rng(0)
@@ -283,6 +365,7 @@ def main() -> None:
         ("engines", bench_engines),
         ("lmm", bench_lmm),
         ("trait_block", bench_trait_blocks),
+        ("executor", bench_executor),
         ("kernels", bench_kernels),
         ("scaling_n", bench_scaling_n),
     ]

@@ -20,14 +20,26 @@ The four layers (DESIGN.md §11):
                              and normalized into the internal ``ScanConfig``
     execute  ``ScanSession`` the streaming grid executor; ``events()``
                              yields per-cell ``CellResult``s, checkpoint/
-                             resume included
-    emit     ``ResultWriter`` registry; ``"tsv"`` and ``"npz"`` built in
+                             resume included.  ``ExecSpec(devices=N)``
+                             drains the grid across N devices with work
+                             stealing — bitwise-identical results
+                             (DESIGN.md §12)
+    emit     ``ResultWriter`` registry; ``"tsv"`` and ``"npz"`` built in,
+                             ``"parquet"`` when pyarrow is available
 
 ``repro.core.screening.GenomeScan`` remains as a deprecated shim over this
 API (it collects events into the historical dense ``ScanResult``).
 """
-from repro.api.session import CellResult, PreparedScan, ScanPlan, ScanSession
-from repro.api.specs import GridSpec, IOSpec, LmmSpec, ScanConfig
+from repro.api.metrics import CellTiming, ScanMetrics
+from repro.api.session import (
+    CellResult,
+    MultiDeviceExecutor,
+    PreparedScan,
+    ScanPlan,
+    ScanSession,
+    SerialExecutor,
+)
+from repro.api.specs import ExecSpec, GridSpec, IOSpec, LmmSpec, ScanConfig
 from repro.api.study import Study
 from repro.api.writers import (
     NpzShardWriter,
@@ -44,11 +56,16 @@ __all__ = [
     "GridSpec",
     "LmmSpec",
     "IOSpec",
+    "ExecSpec",
     "ScanConfig",
     "ScanPlan",
     "ScanSession",
+    "SerialExecutor",
+    "MultiDeviceExecutor",
     "PreparedScan",
     "CellResult",
+    "CellTiming",
+    "ScanMetrics",
     "ResultWriter",
     "TsvWriter",
     "NpzShardWriter",

@@ -1,0 +1,136 @@
+"""Session-level per-cell timing and throughput (the ROADMAP
+"session progress/metrics" item).
+
+``ScanSession.events()`` is the one loop every consumer drives, so the
+metrics hook lives there: each completed grid cell records a
+``CellTiming`` — wall time, extent, and which executor slot computed it —
+into the session's ``ScanMetrics``.  Three surfaces read it:
+
+    CLI        a live progress line (cells done, markers/s, device count)
+    summary    ``summary.json``'s ``metrics`` block via ``summary()``
+    BENCH      ``benchmarks/run.py``'s executor section rows
+
+Timing is observational only: recording happens after the cell's arrays
+are materialized (the commit/writer path forces that synchronization
+anyway), so the hook never adds device syncs of its own.  Replayed
+(checkpoint) cells are recorded but excluded from throughput — they cost
+one ``np.load``, not a device step.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+__all__ = ["CellTiming", "ScanMetrics"]
+
+
+@dataclass(frozen=True)
+class CellTiming:
+    """One grid cell's accounting row."""
+
+    batch_index: int
+    block_index: int
+    n_markers: int
+    n_traits: int
+    wall_s: float              # compute + payload materialization
+    device: str = "-"          # executor slot label ("serial" | device repr)
+    replayed: bool = False     # loaded from a checkpoint shard, not computed
+
+
+class ScanMetrics:
+    """Fold of a session's ``CellTiming`` rows, cheap enough to keep always
+    on.  ``wall_s`` is the stream's wall clock (``start()`` .. ``finish()``),
+    against which per-device busy time yields utilization."""
+
+    def __init__(self, n_cells_total: int = 0):
+        self.n_cells_total = n_cells_total
+        self._t0: float | None = None
+        self.wall_s = 0.0
+        # Running folds only — no per-cell row retention, so the metrics
+        # footprint and the per-cell progress hook are both O(1) no matter
+        # how many grid cells a paper-scale scan streams.
+        self.cells_done = 0
+        self._live_cells = 0
+        self._live_batches: set[int] = set()
+        self._markers = 0
+        self._trait_markers = 0
+        self._per_device: dict[str, dict] = {}     # label -> cells/busy_s
+
+    # ------------------------------------------------------------ recording
+
+    def start(self) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+
+    def record(self, row: CellTiming) -> None:
+        self.start()
+        self.cells_done += 1
+        if not row.replayed:
+            self._live_cells += 1
+            if row.batch_index not in self._live_batches:
+                self._live_batches.add(row.batch_index)
+                self._markers += row.n_markers
+            self._trait_markers += row.n_markers * row.n_traits
+            d = self._per_device.setdefault(row.device, {"cells": 0, "busy_s": 0.0})
+            d["cells"] += 1
+            d["busy_s"] += row.wall_s
+
+    def finish(self) -> None:
+        """Freeze the stream's wall clock — once.  The session calls this
+        when the live stream ends and again after checkpoint replay; only
+        the first call sticks, so replay (np.load, not compute) never
+        dilutes the reported throughput."""
+        if self._t0 is not None and self.wall_s == 0.0:
+            self.wall_s = time.perf_counter() - self._t0
+
+    # -------------------------------------------------------------- reading
+
+    def markers_done(self) -> int:
+        """Distinct markers computed live (each batch counted once, however
+        many trait blocks it swept)."""
+        return self._markers
+
+    def trait_markers_done(self) -> int:
+        """Total (marker x trait) statistics computed live — the unit the
+        paper's throughput claim is denominated in."""
+        return self._trait_markers
+
+    def _wall(self) -> float:
+        if self.wall_s > 0:
+            return self.wall_s
+        return time.perf_counter() - self._t0 if self._t0 is not None else 0.0
+
+    def summary(self) -> dict:
+        """The ``summary.json`` ``metrics`` block."""
+        wall = self._wall()
+        per_device = {
+            label: {
+                "cells": d["cells"],
+                "busy_s": round(d["busy_s"], 4),
+                "utilization": round(d["busy_s"] / wall, 3) if wall > 0 else None,
+            }
+            for label, d in self._per_device.items()
+        }
+        markers = self.markers_done()
+        tm = self.trait_markers_done()
+        return {
+            "cells": self.cells_done,
+            "cells_total": self.n_cells_total,
+            "live_cells": self._live_cells,
+            "replayed_cells": self.cells_done - self._live_cells,
+            "wall_s": round(wall, 4),
+            "markers_per_s": round(markers / wall, 1) if wall > 0 else None,
+            "trait_markers_per_s": round(tm / wall, 1) if wall > 0 else None,
+            "per_device": per_device,
+        }
+
+    def progress_line(self) -> str:
+        """One-line human rendering for the CLI progress hook; O(1) — it
+        runs once per cell."""
+        wall = time.perf_counter() - self._t0 if self._t0 is not None else 0.0
+        rate = self.markers_done() / wall if wall > 0 else 0.0
+        total = f"/{self.n_cells_total}" if self.n_cells_total else ""
+        return (
+            f"[scan] {self.cells_done}{total} cells  "
+            f"{rate:,.0f} markers/s  {len(self._per_device) or 1} device(s)"
+        )

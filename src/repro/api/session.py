@@ -11,6 +11,18 @@ shard), and *consumers* decide what to keep:
     for cell in session.events():      # streams; never holds (M, P) arrays
         writer.write(cell)
 
+The executor behind ``events()`` is pluggable (DESIGN.md §12):
+``SerialExecutor`` is the historical single-device grid walk;
+``MultiDeviceExecutor`` drains the same grid across N devices through the
+work-stealing ``runtime.scheduler.CellScheduler``, one ``_Slot`` of
+explicit per-device state (engine device caches, panel view, compiled
+step) per device — results are bitwise-identical, completion order is
+free, and the cell-keyed checkpoint is the coordination substrate either
+way.  Consumers cannot tell executors apart except by speed:
+
+    for cell in session.events():      # streams; never holds (M, P) arrays
+        writer.write(cell)
+
 The deprecated ``GenomeScan`` shim is one such consumer (it folds cells
 into the historical sinks to rebuild ``ScanResult``); the streaming result
 writers (``repro.api.writers``) are the native one.
@@ -23,13 +35,19 @@ for the curious).
 """
 from __future__ import annotations
 
+import dataclasses
+import queue
+import threading
+import time
 from dataclasses import dataclass
 from typing import Callable, Iterator
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.api.metrics import CellTiming, ScanMetrics
 from repro.api.specs import ScanConfig
 from repro.api.study import Study
 from repro.core.engines import EngineContext, ScanEngine, get_engine
@@ -45,8 +63,17 @@ from repro.runtime.prefetch import (
     TraitBlockPlanner,
     double_buffer,
 )
+from repro.runtime.scheduler import CellScheduler
 
-__all__ = ["CellResult", "PreparedScan", "ScanPlan", "ScanSession", "CheckpointReplay"]
+__all__ = [
+    "CellResult",
+    "PreparedScan",
+    "ScanPlan",
+    "ScanSession",
+    "SerialExecutor",
+    "MultiDeviceExecutor",
+    "CheckpointReplay",
+]
 
 
 LAMBDA_PROBE_ROWS = 64  # rows of the first-trait t probe persisted per batch
@@ -238,14 +265,6 @@ class PreparedScan:
     def n_trait_blocks(self) -> int:
         return len(self.trait_blocks)
 
-    def panel_block(self, batch: MarkerBatch, block: TraitBlock):
-        """The trailing step argument for one grid cell: the driver's
-        residualized store for OLS engines, the engine's own per-scope
-        rotated panel for the rest."""
-        if self.engine.uses_global_panel:
-            return self.panels.device_block(block)
-        return self.engine.panel_block(batch, block)
-
     def fingerprint(self) -> str:
         """The checkpoint identity of this scan (mesh/host-topology free)."""
         cfg, study = self.config, self.study
@@ -401,6 +420,298 @@ class ScanPlan:
         return ScanSession(self.prepare(), resume=resume)
 
 
+# ------------------------------------------------------------------ executors
+
+
+class _Slot:
+    """One executor slot: the engine's per-device state plus — for
+    global-panel engines — the driver's panel view on the same device.
+
+    This object is the *explicit* home of everything that used to ride
+    implicitly on the default device (staged panel blocks, the lmm scope
+    caches, the step's prolog memo): one slot per device, no sharing, so a
+    multi-device scan never routes two devices through one memo or cache.
+    ``device=None`` is the serial slot — placement via ``jnp.asarray`` on
+    the implicit default device, bit-for-bit the historical path.
+    """
+
+    def __init__(self, prepared: "PreparedScan", *, device=None,
+                 step: Callable[..., dict] | None = None, label: str = "serial"):
+        self.device = device
+        self.label = label
+        self.state = prepared.engine.make_device_state(
+            prepared.ctx, device=device, step=step
+        )
+        self.panels = (
+            prepared.panels.device_view(device)
+            if prepared.panels is not None else None
+        )
+
+    def stage(self, host_batch) -> tuple:
+        return self.state.stage(host_batch)
+
+    def step(self, *args) -> dict:
+        return self.state.step(*args)
+
+    def panel_block(self, batch: MarkerBatch, block: TraitBlock):
+        """The trailing step argument for one grid cell: the slot's view of
+        the driver's residualized store for OLS engines, the engine device
+        state's per-scope rotated panel for the rest."""
+        if self.panels is not None:
+            return self.panels.device_block(block)
+        return self.state.panel_block(batch, block)
+
+    def reset(self) -> None:
+        self.state.reset()
+
+
+def _live_cell(host_batch, out: dict, blk: TraitBlock, cfg: ScanConfig) -> "CellResult":
+    """Wrap one device step output as a materialized live ``CellResult``.
+
+    ``arrays`` is forced here — on the computing slot's thread — so D2H
+    pulls parallelize across devices, the per-cell wall time is honest
+    (the jitted step dispatches asynchronously; the pull is the sync
+    point), and the commit/writer path downstream reads the cache.  The
+    hit-driven-pull invariant is untouched: materialization only crosses
+    the full tiles when the cell has hits.
+    """
+    batch = host_batch.batch
+    view = BatchView(
+        host_batch, out, blk.n_traits, t_lo=blk.lo, block_index=blk.index
+    )
+    cell = CellResult(
+        batch_index=batch.index,
+        block_index=blk.index,
+        lo=batch.lo,
+        hi=batch.hi,
+        t_lo=blk.lo,
+        t_hi=blk.hi,
+        view=view,
+        hit_threshold=cfg.hit_threshold_nlp,
+    )
+    cell.arrays
+    return cell
+
+
+class SerialExecutor:
+    """The historical single-device grid walk: marker batches outer
+    (decode prefetch + H2D double buffer), trait blocks inner (each staged
+    genotype batch sweeps every pending block before the next copy), with
+    the trait-axis panel look-ahead staging block b+1 during block b."""
+
+    kind = "serial"
+
+    def __init__(self, prepared: "PreparedScan", *, step: Callable[..., dict] | None = None):
+        self.prepared = prepared
+        self._step = step
+
+    def info(self) -> dict:
+        return {"kind": self.kind, "devices": 1}
+
+    def cells(self, todo, pending) -> Iterator[tuple["CellResult", CellTiming]]:
+        prep = self.prepared
+        cfg = prep.config
+        engine = prep.engine
+        blocks = prep.trait_blocks
+        slot = _Slot(prep, device=None, step=self._step, label="serial")
+        prefetched = Prefetcher(
+            todo,
+            lambda b: engine.prepare_batch(prep.study.source, b, prep.ctx),
+            depth=cfg.prefetch_depth,
+            num_workers=cfg.io_workers,
+        )
+        # Trait-axis look-ahead (DESIGN.md §10): stage the next cell's panel
+        # block while the device computes the current cell.
+        panel_la = PanelPrefetcher(slot.panel_block)
+
+        def stage(host_batch):
+            # Staging launches the copy; on accelerators it completes while
+            # the device chews on the previous batch (double buffer).
+            return host_batch, slot.stage(host_batch)
+
+        stream = double_buffer(prefetched, stage)
+        try:
+            todo_pos = {b.index: i for i, b in enumerate(todo)}
+            for host_batch, dev_args in stream:
+                batch = host_batch.batch
+                bidx = batch.index
+                # Trait blocks are the INNER loop: one staged genotype batch
+                # feeds every block before the next H2D copy (DESIGN.md §10).
+                cells = [
+                    blk for blk in blocks
+                    if pending is None or (bidx, blk.index) in pending
+                ]
+                nxt = todo_pos.get(bidx, len(todo)) + 1
+                next_batch = todo[nxt] if nxt < len(todo) else None
+                for pos, blk in enumerate(cells):
+                    t0 = time.perf_counter()
+                    out = slot.step(*dev_args, slot.panel_block(batch, blk))
+                    # Look ahead one cell on the trait axis (then wrap to the
+                    # next batch's first block, which the LRU may have evicted).
+                    if pos + 1 < len(cells):
+                        panel_la.request(batch, cells[pos + 1])
+                    elif next_batch is not None and blocks:
+                        panel_la.request(next_batch, blocks[0])
+                    cell = _live_cell(host_batch, out, blk, cfg)
+                    yield cell, CellTiming(
+                        batch_index=bidx,
+                        block_index=blk.index,
+                        n_markers=cell.n_markers,
+                        n_traits=cell.n_traits,
+                        wall_s=time.perf_counter() - t0,
+                        device=slot.label,
+                    )
+        finally:
+            # Error path included: a raising consumer or engine step must not
+            # leave decode workers alive or the in-flight staged copy pinned.
+            stream.close()
+            prefetched.shutdown()
+            panel_la.shutdown()
+            # Drop the step memo's pinned last batch (raw + prolog output)
+            # so a cached plan doesn't hold device memory between runs.
+            slot.reset()
+
+
+class MultiDeviceExecutor:
+    """Drain the scan grid across N devices with work stealing
+    (DESIGN.md §12).
+
+    One worker thread per device slot; each claims ``CellRun``s from the
+    ``CellScheduler`` (lease = runs of cells sharing a marker batch, so a
+    claimed genotype batch is staged once per device and swept), computes
+    cells on its own ``_Slot`` — explicit ``jax.device_put`` placement,
+    per-slot step/prolog memo, per-slot panel and lmm caches — and hands
+    materialized cells to the consuming generator through a bounded queue.
+    Completion order is whatever the fleet produces; the session commits
+    each cell before yielding and the sinks/writers normalize fold order,
+    so outputs are bitwise-identical to the serial executor's.
+    """
+
+    kind = "multi-device"
+
+    def __init__(self, prepared: "PreparedScan", *, n_devices: int,
+                 placement: str = "marker-major", lease_batches: int = 2):
+        visible = jax.devices()
+        if n_devices > len(visible):
+            raise ValueError(
+                f"devices={n_devices} but only {len(visible)} visible "
+                f"({visible[0].platform}); reduce --devices or expose more "
+                "devices"
+            )
+        self.prepared = prepared
+        self.devices = visible[:n_devices]
+        self.placement = placement
+        self.lease_batches = lease_batches
+        self._worker_stats: dict = {}
+
+    def info(self) -> dict:
+        return {
+            "kind": self.kind,
+            "devices": len(self.devices),
+            "placement": self.placement,
+            "lease_batches": self.lease_batches,
+            "workers": {
+                w: dataclasses.asdict(st) for w, st in sorted(self._worker_stats.items())
+            },
+        }
+
+    def cells(self, todo, pending) -> Iterator[tuple["CellResult", CellTiming]]:
+        prep = self.prepared
+        cfg = prep.config
+        engine = prep.engine
+        sched = CellScheduler(
+            todo, prep.trait_blocks, pending,
+            placement=self.placement, lease_size=self.lease_batches,
+            n_workers=len(self.devices),
+        )
+        # Bounded: in-flight materialized cells are capped per slot, so the
+        # fleet cannot outrun a slow consumer into unbounded host RAM.
+        results: queue.Queue = queue.Queue(maxsize=4 * len(self.devices))
+        stop = threading.Event()
+        done = object()
+
+        def put(item) -> None:
+            # Never blocks forever: once the consumer is gone (stop set) the
+            # item is dropped — teardown, nobody is listening.
+            while True:
+                try:
+                    results.put(item, timeout=0.1)
+                    return
+                except queue.Full:
+                    if stop.is_set():
+                        return
+
+        def worker(wid: int, device) -> None:
+            label = f"dev{wid}"
+            slot = _Slot(prep, device=device, label=label)
+            staged: tuple = (None, None, None)  # (batch index, host, dev args)
+            try:
+                while not stop.is_set():
+                    claim = sched.claim(label)
+                    if claim is None:
+                        break
+                    idx, run = claim
+                    batch = run.batch
+                    # One-slot staging memo: consecutive claims of the same
+                    # batch (marker-major sweeps; trait-major never) reuse
+                    # the decoded + staged genotypes.
+                    if staged[0] != batch.index:
+                        hb = engine.prepare_batch(prep.study.source, batch, prep.ctx)
+                        staged = (batch.index, hb, slot.stage(hb))
+                    _, hb, dev_args = staged
+                    for blk in run.blocks:
+                        if stop.is_set():
+                            return
+                        t0 = time.perf_counter()
+                        out = slot.step(*dev_args, slot.panel_block(batch, blk))
+                        cell = _live_cell(hb, out, blk, cfg)
+                        put((cell, CellTiming(
+                            batch_index=batch.index,
+                            block_index=blk.index,
+                            n_markers=cell.n_markers,
+                            n_traits=cell.n_traits,
+                            wall_s=time.perf_counter() - t0,
+                            device=label,
+                        )))
+                    sched.complete(label, idx)
+            except BaseException as e:  # noqa: BLE001 — reported to consumer
+                put(e)
+            finally:
+                slot.reset()
+                put(done)
+
+        threads = [
+            threading.Thread(
+                target=worker, args=(i, d), daemon=True, name=f"scan-device-{i}"
+            )
+            for i, d in enumerate(self.devices)
+        ]
+        for t in threads:
+            t.start()
+        finished = 0
+        try:
+            while finished < len(threads):
+                item = results.get()
+                if item is done:
+                    finished += 1
+                elif isinstance(item, BaseException):
+                    raise item
+                else:
+                    yield item
+        finally:
+            stop.set()
+            # Unblock producers stuck on the bounded queue, then join.
+            for t in threads:
+                while t.is_alive():
+                    try:
+                        while True:
+                            results.get_nowait()
+                    except queue.Empty:
+                        pass
+                    t.join(timeout=0.1)
+            self._worker_stats = sched.stats()
+
+
 class ScanSession:
     """One executable pass over the scan grid, streaming ``CellResult``s.
 
@@ -425,6 +736,27 @@ class ScanSession:
         self.resume = resume
         self._step = step if step is not None else prepared.step
         self._consumed = False
+
+        # Executor selection (DESIGN.md §12).  devices=0 means every
+        # visible device; 1 is the serial walk.  Resolved here, NOT in the
+        # fingerprint: a checkpoint cut under one device count resumes
+        # under any other.
+        self.n_devices = (
+            self.config.devices if self.config.devices > 0 else len(jax.devices())
+        )
+        if self.n_devices > 1 and prepared.mesh is not None:
+            raise ValueError(
+                "the multi-device grid executor and a sharding mesh are "
+                "exclusive parallelism axes; pass devices=1 with a mesh (or "
+                "drop the mesh to scale by grid cells)"
+            )
+        self.metrics = ScanMetrics(
+            n_cells_total=prepared.n_batches * prepared.n_trait_blocks
+        )
+        # Optional observer called after every recorded cell — the CLI's
+        # progress line; must be cheap, runs on the consumer thread.
+        self.progress: Callable[[ScanMetrics], None] | None = None
+        self.executor_info: dict | None = None
 
         self.checkpoint: ScanCheckpoint | None = None
         if self.config.checkpoint_dir:
@@ -486,100 +818,93 @@ class ScanSession:
 
     # --------------------------------------------------------------- events
 
+    def _make_executor(self):
+        if self.n_devices > 1:
+            if self._step is not self.prepared.step:
+                # A swapped step (the shim's historical ``_step`` hook) is a
+                # single callable with a single prolog memo — it cannot be
+                # shared across worker threads, and silently ignoring it
+                # would drop the caller's patched math.
+                raise ValueError(
+                    "a custom step was supplied but devices > 1: the "
+                    "multi-device executor builds one step per device slot; "
+                    "run with devices=1 to use a swapped step"
+                )
+            return MultiDeviceExecutor(
+                self.prepared,
+                n_devices=self.n_devices,
+                placement=self.config.placement,
+                lease_batches=self.config.lease_batches,
+            )
+        return SerialExecutor(self.prepared, step=self._step)
+
     def events(self) -> Iterator[CellResult]:
-        """Stream the grid: compute pending cells, commit + yield each as a
-        ``CellResult``, then replay previously committed cells (resume)."""
+        """Stream the grid: compute pending cells on the configured executor
+        (serial or multi-device), commit + yield each as a ``CellResult``,
+        then replay previously committed cells (resume).  Live cells arrive
+        in the executor's completion order — grid order for the serial
+        walk, whatever the fleet produces for multi-device; the sinks and
+        writers normalize fold order, so consumers see identical results
+        either way."""
         if self._consumed:
             raise RuntimeError("ScanSession.events() is one-shot; open a new session")
         self._consumed = True
-        prep = self.prepared
-        cfg = self.config
-        engine = prep.engine
-        blocks = prep.trait_blocks
         ckpt = self.checkpoint
 
-        todo = prep.batches
+        todo = self.prepared.batches
         pending: set[tuple[int, int]] | None = None   # (batch, block) cells
         if ckpt is not None and self.resume:
             pending = set(ckpt.pending_cells())
             # A marker batch is re-staged iff ANY of its cells is pending;
-            # completed cells of a re-staged batch are skipped in the inner
-            # loop and replayed from their shards below.
+            # completed cells of a re-staged batch are skipped by the
+            # executor and replayed from their shards below.
             batches_pending = {b for b, _ in pending}
-            todo = [b for b in prep.batches if b.index in batches_pending]
+            todo = [b for b in self.prepared.batches if b.index in batches_pending]
 
+        executor = self._make_executor()
         computed: set[tuple[int, int]] = set()
-        prefetched = Prefetcher(
-            todo,
-            lambda b: engine.prepare_batch(self.study.source, b, prep.ctx),
-            depth=cfg.prefetch_depth,
-            num_workers=cfg.io_workers,
-        )
-        # Trait-axis look-ahead (DESIGN.md §10): stage the next cell's panel
-        # block while the device computes the current cell.
-        panel_la = PanelPrefetcher(prep.panel_block)
-
-        def stage(host_batch):
-            # jnp.asarray launches the copy; on accelerators it completes
-            # while the device chews on the previous batch (double buffer).
-            return host_batch, tuple(jnp.asarray(a) for a in host_batch.device_args)
-
-        stream = double_buffer(prefetched, stage)
+        self.metrics.start()
+        stream = executor.cells(todo, pending)
         try:
-            todo_pos = {b.index: i for i, b in enumerate(todo)}
-            for host_batch, dev_args in stream:
-                batch = host_batch.batch
-                bidx = batch.index
-                # Trait blocks are the INNER loop: one staged genotype batch
-                # feeds every block before the next H2D copy (DESIGN.md §10).
-                cells = [
-                    blk for blk in blocks
-                    if pending is None or (bidx, blk.index) in pending
-                ]
-                nxt = todo_pos.get(bidx, len(todo)) + 1
-                next_batch = todo[nxt] if nxt < len(todo) else None
-                for pos, blk in enumerate(cells):
-                    out = self._step(*dev_args, prep.panel_block(batch, blk))
-                    # Look ahead one cell on the trait axis (then wrap to the
-                    # next batch's first block, which the LRU may have evicted).
-                    if pos + 1 < len(cells):
-                        panel_la.request(batch, cells[pos + 1])
-                    elif next_batch is not None and blocks:
-                        panel_la.request(next_batch, blocks[0])
-                    view = BatchView(
-                        host_batch, out, blk.n_traits,
-                        t_lo=blk.lo, block_index=blk.index,
-                    )
-                    cell = CellResult(
-                        batch_index=bidx,
-                        block_index=blk.index,
-                        lo=batch.lo,
-                        hi=batch.hi,
-                        t_lo=blk.lo,
-                        t_hi=blk.hi,
-                        view=view,
-                        hit_threshold=cfg.hit_threshold_nlp,
-                    )
-                    if ckpt is not None:
-                        # Commit the shard, then the manifest — a crash
-                        # between the two just re-does one grid cell.
-                        ckpt.commit_cell(bidx, blk.index, cell.payload())
-                    computed.add((bidx, blk.index))
-                    yield cell
+            for cell, timing in stream:
+                if ckpt is not None:
+                    # Commit the shard, then the manifest — a crash between
+                    # the two just re-does one grid cell.  Commit-before-
+                    # yield makes the manifest the multi-device coordination
+                    # substrate: double completion (work stealing) is an
+                    # idempotent overwrite, and a resume under any device
+                    # count skips exactly the committed cells.
+                    ckpt.commit_cell(cell.batch_index, cell.block_index, cell.payload())
+                computed.add((cell.batch_index, cell.block_index))
+                self.metrics.record(timing)
+                if self.progress is not None:
+                    self.progress(self.metrics)
+                yield cell
         finally:
-            # Error path included: a raising consumer or engine step must not
-            # leave decode workers alive or the in-flight staged copy pinned.
+            # Error path included: a raising consumer or engine step must
+            # not leave executor workers alive or staged copies pinned.
             stream.close()
-            prefetched.shutdown()
-            panel_la.shutdown()
-            # Drop the step memo's pinned last batch (raw + prolog output)
-            # so a cached plan doesn't hold device memory between runs.
-            getattr(self._step, "reset", lambda: None)()
+            self.executor_info = executor.info()
+            self.metrics.finish()
 
         # Resume path: replay committed-but-not-recomputed cells' shards.
         if ckpt is not None:
             for bidx, kidx in sorted(ckpt.completed_cells() - computed):
-                yield CellResult.from_shard(bidx, kidx, ckpt.load_cell(bidx, kidx))
+                t0 = time.perf_counter()
+                cell = CellResult.from_shard(bidx, kidx, ckpt.load_cell(bidx, kidx))
+                self.metrics.record(CellTiming(
+                    batch_index=bidx,
+                    block_index=kidx,
+                    n_markers=cell.n_markers,
+                    n_traits=cell.n_traits,
+                    wall_s=time.perf_counter() - t0,
+                    device="checkpoint",
+                    replayed=True,
+                ))
+                if self.progress is not None:
+                    self.progress(self.metrics)
+                yield cell
+            self.metrics.finish()
 
     # -------------------------------------------------------------- writers
 

@@ -7,6 +7,7 @@ all share one namespace.  The public surface groups them into typed specs:
     GridSpec   the 2-D scan-grid geometry (batch/block sizes, compute tiles)
     LmmSpec    mixed-model knobs (engine="lmm" only; rejected elsewhere)
     IOSpec     host pipeline tuning (prefetch depth, decode workers, spill)
+    ExecSpec   the executor: device count, cell placement policy, lease size
 
 ``Study.plan(...)`` validates a spec combination and *normalizes* it into a
 ``ScanConfig`` — which remains the single internal currency: the checkpoint
@@ -20,8 +21,9 @@ import dataclasses
 from dataclasses import dataclass
 
 from repro.core.association import AssocOptions
+from repro.runtime.scheduler import PLACEMENTS
 
-__all__ = ["GridSpec", "LmmSpec", "IOSpec", "ScanConfig"]
+__all__ = ["GridSpec", "LmmSpec", "IOSpec", "ExecSpec", "ScanConfig"]
 
 
 @dataclass(frozen=True)
@@ -90,6 +92,36 @@ class IOSpec:
 
 
 @dataclass(frozen=True)
+class ExecSpec:
+    """The executor layer (DESIGN.md §12): how many devices drain the scan
+    grid and which staged array each one optimizes for reuse.
+
+    Like ``IOSpec``, nothing here enters the checkpoint fingerprint — the
+    grid decomposition is device-topology-free, so a scan checkpointed
+    under one device count resumes under any other (elastic restarts), and
+    results are bitwise-identical either way.
+    """
+
+    devices: int = 1               # executor slots; 0 = every visible device
+    placement: str = "marker-major"  # lease locality: genotype- vs panel-reuse
+    # Work items leased per scheduler claim.  The scheduler caps this at
+    # n_items / n_devices so a short scan still spreads over every slot.
+    lease_batches: int = 2
+
+    def validate(self) -> None:
+        if self.devices < 0:
+            raise ValueError(f"ExecSpec.devices must be >= 0, got {self.devices}")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {self.placement!r}; available: {PLACEMENTS}"
+            )
+        if self.lease_batches < 1:
+            raise ValueError(
+                f"ExecSpec.lease_batches must be >= 1, got {self.lease_batches}"
+            )
+
+
+@dataclass(frozen=True)
 class ScanConfig:
     """The normalized internal scan configuration.
 
@@ -124,15 +156,22 @@ class ScanConfig:
     grm_batch_markers: int = 4096  # marker batch of the streamed GRM pass
     lmm_delta: float | None = None # pin se^2/sg^2 (skips the REML fit)
     lmm_epilogue: str = "dense"    # t/p epilogue: "dense" XLA | "fused" Pallas
+    # executor (DESIGN.md §12; never fingerprinted — device topology is
+    # elastic across restarts, results are bitwise-identical regardless)
+    devices: int = 1               # executor slots; 0 = every visible device
+    placement: str = "marker-major"  # "marker-major" | "trait-major"
+    lease_batches: int = 2         # scheduler lease size (work items/claim)
 
     def fingerprint_payload(self) -> dict:
         d = dataclasses.asdict(self)
         d["options"] = dataclasses.asdict(self.options)
-        # Mesh topology, host counts, and host-memory/spill knobs never
-        # enter the fingerprint (elastic restarts may retune them).
-        # trait_block STAYS: it defines the checkpoint grid decomposition.
+        # Mesh topology, host counts, executor shape, and host-memory/spill
+        # knobs never enter the fingerprint (elastic restarts may retune
+        # them).  trait_block STAYS: it defines the checkpoint grid
+        # decomposition.
         for k in ("prefetch_depth", "io_workers", "checkpoint_dir",
-                  "panel_resident_blocks", "spill_dir", "hit_spill_rows"):
+                  "panel_resident_blocks", "spill_dir", "hit_spill_rows",
+                  "devices", "placement", "lease_batches"):
             d.pop(k)
         return d
 
@@ -146,6 +185,7 @@ class ScanConfig:
         grid: GridSpec | None = None,
         lmm: LmmSpec | None = None,
         io: IOSpec | None = None,
+        executor: ExecSpec | None = None,
         options: AssocOptions | None = None,
         mode: str = "mp",
         hit_threshold_nlp: float = 7.301,
@@ -160,9 +200,11 @@ class ScanConfig:
 
         grid = grid or GridSpec()
         io = io or IOSpec()
+        executor = executor or ExecSpec()
         options = options or AssocOptions()
         grid.validate()
         io.validate()
+        executor.validate()
         if engine not in available_engines():
             raise ValueError(
                 f"unknown scan engine {engine!r}; available: {available_engines()}"
@@ -210,6 +252,9 @@ class ScanConfig:
             grm_batch_markers=lmm.grm_batch_markers,
             lmm_delta=lmm.delta,
             lmm_epilogue=lmm.epilogue,
+            devices=executor.devices,
+            placement=executor.placement,
+            lease_batches=executor.lease_batches,
         )
 
     def grid_spec(self) -> GridSpec:
@@ -237,4 +282,11 @@ class ScanConfig:
             io_workers=self.io_workers,
             spill_dir=self.spill_dir,
             hit_spill_rows=self.hit_spill_rows,
+        )
+
+    def exec_spec(self) -> ExecSpec:
+        return ExecSpec(
+            devices=self.devices,
+            placement=self.placement,
+            lease_batches=self.lease_batches,
         )

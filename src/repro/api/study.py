@@ -159,6 +159,7 @@ class Study:
         grid: "GridSpec | None" = None,
         lmm: "LmmSpec | None" = None,
         io: "IOSpec | None" = None,
+        executor: "ExecSpec | None" = None,
         options: "AssocOptions | None" = None,
         mode: str = "mp",
         hit_threshold_nlp: float = 7.301,
@@ -182,6 +183,7 @@ class Study:
             grid=grid,
             lmm=lmm,
             io=io,
+            executor=executor,
             options=options,
             mode=mode,
             hit_threshold_nlp=hit_threshold_nlp,

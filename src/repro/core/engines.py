@@ -36,6 +36,7 @@ from repro.runtime.sharding import batch_axes, gwas_shardings
 
 __all__ = [
     "EngineContext",
+    "EngineDeviceState",
     "HostBatch",
     "ScanEngine",
     "DeviceLRU",
@@ -141,14 +142,83 @@ class HostBatch:
     host_valid: np.ndarray | None = None   # (m_batch,) bool
 
 
+class EngineDeviceState:
+    """Everything an engine stages onto ONE device — an executor slot.
+
+    The multi-device grid executor (DESIGN.md §12) gives every device its
+    own slot: a compiled step, the H2D placement of each claimed batch's
+    arrays, and whatever device caches the engine keeps (the lmm engine's
+    per-scope rotation pair and per-(scope, block) rotated panels live in
+    its subclass).  The serial executor is the degenerate single slot with
+    ``device=None`` — placement then falls back to ``jnp.asarray`` on the
+    implicit default device, the historical behavior bit for bit.
+
+    Host-side amortized state (the residualized panel, GRM/REML results,
+    rotated panels in float32) stays on the *engine* and is shared by every
+    slot; only staged device arrays and the step's prolog memo are
+    per-slot.  ``put`` is the one placement primitive: explicit
+    ``jax.device_put`` onto the slot's device, so no slot ever leans on the
+    process-global default device.
+    """
+
+    def __init__(self, engine: "ScanEngine", ctx: "EngineContext",
+                 *, device: Any = None, step: Callable[..., dict] | None = None):
+        self.engine = engine
+        self.device = device
+        if device is not None:
+            # Steps close over context arrays (the covariate basis, the
+            # multivariate whitening); a jitted computation whose constants
+            # are committed to another device would be rejected — re-place
+            # them on this slot's device before the step is built.  Bitwise
+            # copies: placement moves bytes, never values.
+            ctx = dataclasses.replace(
+                ctx,
+                q_basis=None if ctx.q_basis is None
+                else jax.device_put(ctx.q_basis, device),
+                whitening=None if ctx.whitening is None
+                else jax.device_put(ctx.whitening, device),
+            )
+        self.ctx = ctx
+        # A fresh step per slot: the one-slot prolog memo inside keys on the
+        # staged array's identity, which is per-device — sharing a step
+        # across slots would thrash the memo (and race it across worker
+        # threads).  Same closure, same jaxpr, same compiled math.
+        self.step = step if step is not None else engine.build_step(ctx)
+
+    def put(self, arr: Any) -> jax.Array:
+        """Stage one array onto this slot's device (async on accelerators)."""
+        if self.device is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, self.device)
+
+    def stage(self, host_batch: "HostBatch") -> tuple:
+        """Device-resident positional step args for one claimed batch."""
+        return tuple(self.put(a) for a in host_batch.device_args)
+
+    def panel_block(self, batch: MarkerBatch, block: TraitBlock) -> jax.Array:
+        """Device panel slice for one grid cell (engines with
+        ``uses_global_panel = False`` only; the driver's per-slot panel view
+        serves global-panel engines)."""
+        raise NotImplementedError(
+            f"engine {self.engine.name!r} uses the driver's panel store"
+        )
+
+    def reset(self) -> None:
+        """Drop per-slot pinned device state (the step memo's last batch)."""
+        getattr(self.step, "reset", lambda: None)()
+
+
 class ScanEngine:
     """Engine interface; subclasses register with ``@register_engine``.
 
     Every engine's step takes the cell's trait-block panel slice as its
     trailing argument.  ``uses_global_panel`` tells the driver who serves
     that slice: the driver's own residualized ``PanelStore`` (OLS engines),
-    or the engine's ``panel_block`` hook (the lmm engine, whose panels vary
-    per LOCO scope as well as per block).
+    or the engine's device state's ``panel_block`` hook (the lmm engine,
+    whose panels vary per LOCO scope as well as per block).  Device-staged
+    state lives in per-executor-slot ``EngineDeviceState`` objects built by
+    ``make_device_state`` — one per device, so a multi-device scan never
+    shares staged arrays or prolog memos across devices.
     """
 
     name: str = "?"
@@ -180,11 +250,15 @@ class ScanEngine:
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
         raise NotImplementedError
 
-    def panel_block(self, batch: MarkerBatch, block: TraitBlock) -> jax.Array:
-        """Device panel slice for one grid cell (engines with
-        ``uses_global_panel = False`` only; the driver's ``PanelStore``
-        serves global-panel engines)."""
-        raise NotImplementedError(f"engine {self.name!r} uses the driver's panel store")
+    def make_device_state(
+        self, ctx: EngineContext, *, device: Any = None,
+        step: Callable[..., dict] | None = None,
+    ) -> EngineDeviceState:
+        """One executor slot's device residency; see ``EngineDeviceState``.
+        ``step`` reuses an already-built step for the slot (the serial
+        executor passes the plan's — keeping the shim's swappable ``_step``
+        contract); by default the slot builds its own."""
+        return EngineDeviceState(self, ctx, device=device, step=step)
 
 
 _REGISTRY: dict[str, type[ScanEngine]] = {}
@@ -658,16 +732,70 @@ class FusedEngine(ScanEngine):
         )
 
 
+class _LMMDeviceState(EngineDeviceState):
+    """One device's share of the lmm engine: the staged per-scope
+    (rotation, qhat) pair and the per-(scope, trait-block) rotated panel
+    slices, each LRU-bounded *per slot*.  The host float32 panels live on
+    the engine (shared across slots); every slot stages its own copies with
+    explicit placement, so a multi-device LOCO scan holds at most
+    ``_DEV_SCOPES_MAX`` rotations per device, never one shared set on the
+    default device."""
+
+    def __init__(self, engine: "LMMEngine", ctx: EngineContext,
+                 *, device: Any = None, step: Callable[..., dict] | None = None):
+        super().__init__(engine, ctx, device=device, step=step)
+        # scope -> staged (rotation, qhat); evicting a scope drops its
+        # resident panel blocks with it
+        self._dev = DeviceLRU(
+            engine._DEV_SCOPES_MAX,
+            lambda sid: (
+                self.put(engine._scopes[sid].rotation),
+                self.put(engine._scopes[sid].qhat),
+            ),
+            on_evict=lambda sid: self._dev_y.drop_if(lambda k: k[0] == sid),
+        )
+        # (scope, block) -> staged panel slice
+        self._dev_y = DeviceLRU(
+            max(1, ctx.panel_resident_blocks), self._load_panel_block
+        )
+
+    def _load_panel_block(self, key: tuple[int, int]) -> jax.Array:
+        sid, block_index = key
+        blk = self.engine._trait_blocks[block_index]
+        return self.put(self.engine._scopes[sid].y_block(blk.lo, blk.hi))
+
+    def stage(self, host_batch: HostBatch) -> tuple:
+        """(dosages, rotation, qhat) on this slot's device: the dosage copy
+        is fresh per batch, the scope pair comes from the slot's LRU —
+        staged once and shared by every batch of that scope on this
+        device."""
+        sid = host_batch.batch.source_id if self.engine._loco else -1
+        rotation, qhat = self._dev.get(sid)
+        return (self.put(host_batch.device_args[0]), rotation, qhat)
+
+    def panel_block(self, batch: MarkerBatch, block: TraitBlock) -> jax.Array:
+        """Rotated-panel slice for one grid cell, LRU-cached on this slot's
+        device so a panel that fits stays resident while a paper-scale one
+        streams block-by-block.  The slice comes from the scope's host
+        float32 panel, which keeps the blocked scan bitwise-identical to
+        the unblocked one — the float64 whitening ran panel-wide at setup
+        (the global REML fit materializes the rotated panel anyway,
+        DESIGN.md §10)."""
+        sid = batch.source_id if self.engine._loco else -1
+        return self._dev_y.get((sid, block.index))
+
+
 @register_engine("lmm")
 class LMMEngine(ScanEngine):
     """Linear mixed model: streamed GRM + one-time rotation (core.grm,
     core.lmm).  ``setup_scan`` amortizes the expensive work — GRM pass,
     eigendecomposition, REML — once per scan (per LOCO chromosome);
-    ``prepare_batch`` then only reads dosages and attaches the scope's
-    device-cached rotation/basis, so the per-batch device cost is one
-    extra (M, N) x (N, N) GEMM on top of the OLS scan.  The rotated panel
-    itself is served per (scope, trait-block) cell through ``panel_block``
-    (``uses_global_panel = False``), LRU-bounded on device."""
+    ``prepare_batch`` then only reads dosages, so the per-batch device cost
+    is one extra (M, N) x (N, N) GEMM on top of the OLS scan.  All device
+    staging — the scope's rotation/basis pair and the per-(scope,
+    trait-block) rotated panel slices — lives in ``_LMMDeviceState``, one
+    per executor slot (``uses_global_panel = False``), LRU-bounded per
+    device."""
 
     uses_global_panel = False
 
@@ -679,18 +807,7 @@ class LMMEngine(ScanEngine):
 
     def __init__(self) -> None:
         self._scopes: dict[int, Any] = {}       # scope -> core.lmm.RotatedPanel
-        # scope -> staged (rotation, qhat); evicting a scope drops its
-        # resident panel blocks with it
-        self._dev = DeviceLRU(
-            self._DEV_SCOPES_MAX,
-            lambda sid: (
-                jnp.asarray(self._scopes[sid].rotation),
-                jnp.asarray(self._scopes[sid].qhat),
-            ),
-            on_evict=lambda sid: self._dev_y.drop_if(lambda k: k[0] == sid),
-        )
-        # (scope, block) -> staged panel slice; capacity set in setup_scan
-        self._dev_y = DeviceLRU(4, self._load_panel_block)
+        self._trait_blocks: tuple[TraitBlock, ...] = ()
         self._loco = False
         self._fingerprint: str | None = None
         self._dof: int | None = None
@@ -708,7 +825,6 @@ class LMMEngine(ScanEngine):
         from repro.core.grm import grm_spectrum, spectrum_fingerprint, stream_grm
         from repro.core.lmm import rotate_panel
 
-        self._dev_y.capacity = max(1, ctx.panel_resident_blocks)
         self._trait_blocks = ctx.trait_blocks
         grm = stream_grm(
             source,
@@ -771,34 +887,17 @@ class LMMEngine(ScanEngine):
             block_p=ctx.block_p,
         )
 
-    def _scope_arrays(self, sid: int) -> tuple:
-        """Per-scope (rotation, qhat) staged to device once and shared by
-        every batch of that scope (prepare_batch runs on worker threads),
-        with LRU eviction so a 22-chromosome LOCO scan never holds all 22
-        rotation matrices on device at once.  The scope's panel is served
-        separately, per trait block, by ``panel_block``."""
-        return self._dev.get(sid)
-
-    def _load_panel_block(self, key: tuple[int, int]) -> jax.Array:
-        sid, block_index = key
-        blk = self._trait_blocks[block_index]
-        return jnp.asarray(self._scopes[sid].y_block(blk.lo, blk.hi))
-
-    def panel_block(self, batch: MarkerBatch, block: TraitBlock) -> jax.Array:
-        """Rotated-panel slice for one grid cell, LRU-cached on device so a
-        panel that fits stays resident while a paper-scale one streams
-        block-by-block.  The slice comes from the scope's host float32 panel,
-        which keeps the blocked scan bitwise-identical to the unblocked one —
-        the float64 whitening ran panel-wide at setup (the global REML fit
-        materializes the rotated panel anyway, DESIGN.md §10)."""
-        sid = batch.source_id if self._loco else -1
-        return self._dev_y.get((sid, block.index))
+    def make_device_state(
+        self, ctx: EngineContext, *, device: Any = None,
+        step: Callable[..., dict] | None = None,
+    ) -> EngineDeviceState:
+        return _LMMDeviceState(self, ctx, device=device, step=step)
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
+        """Host side only: read and subset dosages.  The scope's rotation
+        pair is attached at staging time by the slot's device state (it is
+        device-resident state, not host batch payload)."""
         dosages = source.read_dosages(batch.lo, batch.hi)
         if ctx.excluded_samples:
             dosages = dosages[:, ctx.keep]
-        rotation, qhat = self._scope_arrays(batch.source_id if self._loco else -1)
-        return HostBatch(
-            batch, (np.asarray(dosages, np.float32), rotation, qhat)
-        )
+        return HostBatch(batch, (np.asarray(dosages, np.float32),))

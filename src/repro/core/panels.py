@@ -22,7 +22,40 @@ from repro.core.engines import DeviceLRU
 from repro.core.residualize import residualize_and_standardize
 from repro.runtime.prefetch import TraitBlock
 
-__all__ = ["PanelStore", "PanelPrefetcher"]
+__all__ = ["PanelStore", "PanelView", "PanelPrefetcher"]
+
+
+class PanelView:
+    """One device's residency of a shared host panel: a per-executor-slot
+    LRU of staged block slices (DESIGN.md §12).
+
+    Each slot of the multi-device executor holds its own view onto the one
+    host-side ``PanelStore``, staging blocks with explicit
+    ``jax.device_put`` onto its device — the slices themselves are the
+    identical host float32 bytes, so every device computes on bit-equal
+    panels.  ``device=None`` places on the implicit default device (the
+    serial executor's view *is* the store's own LRU, preserving the
+    historical single-device behavior exactly).
+    """
+
+    def __init__(self, store: "PanelStore", *, device=None, max_resident: int = 4):
+        import jax
+
+        self._store = store
+        self.device = device
+        self._dev = DeviceLRU(            # block index -> staged device array
+            max_resident,
+            (lambda idx: jnp.asarray(store.host_block(store.blocks[idx])))
+            if device is None
+            else (lambda idx: jax.device_put(
+                store.host_block(store.blocks[idx]), device)),
+        )
+
+    def device_block(self, block: TraitBlock):
+        """Device array for one block; ``jnp.asarray``/``jax.device_put``
+        launch the copy asynchronously, so staging overlaps the previous
+        cell's compute."""
+        return self._dev.get(block.index)
 
 
 class PanelStore:
@@ -35,17 +68,18 @@ class PanelStore:
     panels that fit stay resident, paper-scale panels stream.  The chunk
     decomposition is the same regardless of ``trait_block`` (it is the
     compute quantum, not the scheduling block), so blocked and unblocked
-    stores hold bitwise-identical panels.
+    stores hold bitwise-identical panels.  ``device_view`` hands each
+    executor slot its own LRU over the same host panel (multi-device
+    scans); the store's own ``device_block`` is the default-device view.
     """
 
     def __init__(self, blocks: list[TraitBlock], panel: np.ndarray,
                  *, max_resident: int = 4):
         self.blocks = list(blocks)
         self._panel = panel               # (N, P) float32, host
-        self._dev = DeviceLRU(            # block index -> staged device array
-            max_resident,
-            lambda idx: jnp.asarray(self.host_block(self.blocks[idx])),
-        )
+        self.max_resident = max_resident
+        self._default = PanelView(self, device=None, max_resident=max_resident)
+        self._dev = self._default._dev    # block index -> staged device array
 
     @classmethod
     def residualized(
@@ -75,9 +109,22 @@ class PanelStore:
         return self._panel[:, block.lo : block.hi]
 
     def device_block(self, block: TraitBlock) -> Any:
-        """Device array for one block; ``jnp.asarray`` launches the copy
-        asynchronously, so staging overlaps the previous cell's compute."""
-        return self._dev.get(block.index)
+        """Device array for one block on the default device (the serial
+        executor's path — see ``PanelView``)."""
+        return self._default.device_block(block)
+
+    def device_view(self, device=None, *, max_resident: int | None = None) -> PanelView:
+        """A per-executor-slot view staging blocks onto ``device``.
+
+        ``device=None`` returns the store's shared default view (NOT a
+        fresh LRU): the serial executor and the trait-axis look-ahead then
+        hit one cache, exactly the pre-executor behavior."""
+        if device is None:
+            return self._default
+        return PanelView(
+            self, device=device,
+            max_resident=self.max_resident if max_resident is None else max_resident,
+        )
 
 
 class PanelPrefetcher:

@@ -195,9 +195,14 @@ class BestTraitSink(ResultSink):
     """Per-trait running best -log10 p and the global marker achieving it.
 
     Accumulators span the full panel; each grid cell folds into the trait
-    slice its block covers.  Blocks partition the trait axis, so per trait
-    the fold sequence is exactly the marker-batch order regardless of how
-    blocks interleave — block-fold order cannot change the result.
+    slice its block covers.  The fold is *order-normalized*: the winner is
+    the max by (nlp, then LOWER global marker), which is associative and
+    commutative — so any cell completion order (the serial grid walk, a
+    multi-device executor's work-stealing order, a resume's replayed-last
+    order) lands on the identical (best_nlp, best_marker) pair.  In-order
+    folding with a strict ``>`` picked the earlier batch on exact nlp ties,
+    i.e. the lower marker — the normalized rule reproduces that serial
+    result exactly, it just no longer depends on arrival order.
     """
 
     def __init__(self, n_traits: int):
@@ -206,11 +211,17 @@ class BestTraitSink(ResultSink):
 
     def _fold(self, b_best: np.ndarray, b_row: np.ndarray, lo: int, t_lo: int) -> None:
         sl = slice(t_lo, t_lo + b_best.shape[0])
-        improved = b_best > self.best_nlp[sl]
-        self.best_nlp[sl] = np.where(improved, b_best, self.best_nlp[sl])
-        self.best_marker[sl] = np.where(
-            improved, lo + b_row.astype(np.int64), self.best_marker[sl]
+        cur_nlp = self.best_nlp[sl]
+        cur_marker = self.best_marker[sl]
+        cand_marker = lo + b_row.astype(np.int64)
+        # Ties on nlp go to the lower global marker; the virgin accumulator
+        # (0.0, -1) only loses to a strictly positive nlp, so all-masked
+        # cells leave traits at marker -1 no matter when they arrive.
+        improved = (b_best > cur_nlp) | (
+            (b_best == cur_nlp) & (cur_marker >= 0) & (cand_marker < cur_marker)
         )
+        self.best_nlp[sl] = np.where(improved, b_best, cur_nlp)
+        self.best_marker[sl] = np.where(improved, cand_marker, cur_marker)
 
     def on_batch(self, view: BatchView, payload: dict[str, np.ndarray]) -> None:
         payload["best_nlp"] = view.best_nlp

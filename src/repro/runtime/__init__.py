@@ -10,6 +10,7 @@ from repro.runtime.sharding import (
 )
 from repro.runtime.checkpoint import ScanCheckpoint, TrainCheckpoint
 from repro.runtime.prefetch import Prefetcher
+from repro.runtime.scheduler import CellRun, CellScheduler
 from repro.runtime.workqueue import WorkQueue
 
 __all__ = [
@@ -20,5 +21,7 @@ __all__ = [
     "ScanCheckpoint",
     "TrainCheckpoint",
     "Prefetcher",
+    "CellRun",
+    "CellScheduler",
     "WorkQueue",
 ]

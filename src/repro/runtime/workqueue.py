@@ -13,6 +13,7 @@ next to the manifest (same atomic-rename discipline), which is how
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass, field
@@ -47,7 +48,14 @@ class WorkQueue:
         self._t0: dict[str, float] = {}
 
     def stats(self) -> dict[str, WorkerStats]:
-        return dict(self._stats)
+        """Point-in-time *snapshot* of per-worker accounting.
+
+        Returns copies, not the live ``WorkerStats`` objects: callers hold
+        the result across further claims (progress lines, summary.json),
+        and handing out the mutable internals would let them corrupt — or
+        observe mid-update — the queue's own accounting."""
+        with self._lock:
+            return {w: dataclasses.replace(st) for w, st in self._stats.items()}
 
     def remaining(self) -> int:
         with self._lock:
@@ -84,6 +92,9 @@ class WorkQueue:
             return idx
 
     def _pick_victim(self, thief: str) -> str | None:
+        """Largest remaining lease loses half its tail; equal-length leases
+        tie-break on the lexicographically greatest worker id, so victim
+        choice is deterministic for a given queue state (tested)."""
         candidates = [(len(l), w) for w, l in self._leases.items() if w != thief and len(l) > 1]
         if not candidates:
             return None

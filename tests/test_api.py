@@ -227,6 +227,59 @@ def test_npz_writer_matches_shim(study, source, cohort, tmp_path):
         np.testing.assert_array_equal(z["valid"], res.valid)
 
 
+def test_parquet_writer_registered_only_with_pyarrow():
+    """The registry gate: 'parquet' is offered iff pyarrow imports — its
+    absence means skip-not-fail everywhere (tests included)."""
+    from repro.api.writers import HAVE_PARQUET
+
+    assert ("parquet" in available_writers()) == HAVE_PARQUET
+
+
+def test_parquet_writer_matches_tsv(study, source, cohort, tmp_path):
+    """One row group per flushed marker batch, globally (marker, trait)
+    sorted, same rows as the TSV writer, byte-stable across identical
+    runs."""
+    pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+
+    kw = dict(grid=_grid(trait_block=4, block_p=4), hit_threshold_nlp=2.0)
+    tsv_out, pq_out = tmp_path / "tsv", tmp_path / "pq"
+    study.plan(**kw).run().stream_to(TsvWriter(str(tsv_out)))
+    summary = study.plan(**kw).run().stream_to(get_writer("parquet")(str(pq_out)))
+
+    table = pq.read_table(summary["hits_parquet"])
+    assert [f.name for f in table.schema] == [
+        "marker", "trait", "marker_index", "trait_index", "r", "t", "neglog10p"
+    ]
+    tsv_rows = (tsv_out / "hits.tsv").read_text().strip().splitlines()[1:]
+    assert table.num_rows == len(tsv_rows) == summary["hits"]
+    got = [
+        f"{m}\t{t}\t{r:.5f}\t{tt:.4f}\t{nlp:.3f}"
+        for m, t, r, tt, nlp in zip(
+            table["marker"].to_pylist(), table["trait"].to_pylist(),
+            table["r"].to_pylist(), table["t"].to_pylist(),
+            table["neglog10p"].to_pylist(),
+        )
+    ]
+    assert got == tsv_rows                      # same rows, same global order
+    pf = pq.ParquetFile(summary["hits_parquet"])
+    assert pf.num_row_groups == summary["hit_row_groups"]
+    # one row group per flushed marker batch (batches with hits only)
+    hit_batches = {int(i) // 128 for i in table["marker_index"].to_pylist()}
+    assert pf.num_row_groups == len(hit_batches)
+
+    best = pq.read_table(summary["per_trait_best_parquet"])
+    assert best.num_rows == study.n_traits
+    qc = pq.read_table(summary["qc_parquet"])
+    assert qc.num_rows == source.n_markers
+
+    # byte-stable: an identical scan writes identical bytes
+    pq_out2 = tmp_path / "pq2"
+    study.plan(**kw).run().stream_to(get_writer("parquet")(str(pq_out2)))
+    assert (pq_out / "hits.parquet").read_bytes() == (pq_out2 / "hits.parquet").read_bytes()
+    assert (pq_out / "qc.parquet").read_bytes() == (pq_out2 / "qc.parquet").read_bytes()
+
+
 def test_streaming_hit_memory_is_bounded(study, source, cohort, tmp_path):
     """The streaming-writer contract: with a flood of hits (threshold 0,
     every cell full) and a small spill cap, peak resident hit rows never

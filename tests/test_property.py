@@ -1,4 +1,6 @@
 """Property-based tests (hypothesis) on the system's core invariants."""
+import os
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -420,3 +422,124 @@ def test_correlation_bounded(m_markers, p_traits):
     panel = residualize_and_standardize(jnp.asarray(y), qb)
     res, _ = A.assoc_batch(jnp.asarray(g), panel.y, n_samples=n, n_covariates=0)
     assert np.all(np.abs(np.asarray(res.r)) <= 1.0 + 1e-6)
+
+
+# --------------------------- cell completion order (DESIGN.md §12)
+#
+# The multi-device executor completes grid cells in whatever order the
+# fleet produces (work stealing, straggling devices, resume replay).  The
+# invariant it leans on: ANY permutation of cell completion order yields
+# byte-identical writer outputs and checkpoint-merge results.  Ties are
+# planted deliberately — nlp drawn from a tiny discrete set makes exact
+# cross-batch best-nlp ties common, exercising the BestTraitSink's
+# order-normalized (nlp, lower-marker) fold.
+
+
+def _executor_cells(seed, n_batches=3, n_blocks=3, m_per=16, p_width=4):
+    """Synthetic committed-cell payloads for a (n_batches x n_blocks) grid."""
+    rng = np.random.default_rng(seed)
+    p = n_blocks * p_width
+    cells = []
+    for b in range(n_batches):
+        lo, hi = b * m_per, (b + 1) * m_per
+        nlp = rng.choice([0.0, 1.5, 2.5, 3.5], size=(m_per, p)).astype(np.float32)
+        r = rng.normal(size=(m_per, p)).astype(np.float32)
+        t = rng.normal(size=(m_per, p)).astype(np.float32)
+        maf = rng.uniform(0.05, 0.5, m_per).astype(np.float32)
+        for k in range(n_blocks):
+            t_lo, t_hi = k * p_width, (k + 1) * p_width
+            sub = nlp[:, t_lo:t_hi]
+            rows, cols = np.nonzero(sub >= 2.0)
+            shard = {
+                "lo": np.asarray(lo), "hi": np.asarray(hi),
+                "t_lo": np.asarray(t_lo), "t_hi": np.asarray(t_hi),
+                "best_nlp": sub.max(axis=0).astype(np.float32),
+                "best_row": sub.argmax(axis=0).astype(np.int32),
+                "hits": np.stack(
+                    [rows.astype(np.int32) + lo, cols.astype(np.int32) + t_lo], 1
+                ),
+                "hit_stats": np.stack(
+                    [r[:, t_lo:t_hi][rows, cols], t[:, t_lo:t_hi][rows, cols],
+                     sub[rows, cols]], 1
+                ).astype(np.float32),
+            }
+            if t_lo == 0:
+                shard["maf"] = maf
+                shard["valid"] = np.ones(m_per, bool)
+                shard["t_probe"] = t[: min(m_per, 64), 0].astype(np.float32)
+            cells.append((b, k, shard))
+    return cells, n_batches * m_per, p
+
+
+class _StubSession:
+    def __init__(self, n_markers, n_traits, n_batches, n_trait_blocks):
+        self.n_markers = n_markers
+        self.n_traits = n_traits
+        self.n_batches = n_batches
+        self.n_trait_blocks = n_trait_blocks
+        self.multivariate = False
+        self.marker_ids = None
+        self.trait_names = None
+
+
+def _write_cells(cells, order, stub, out_dir):
+    from repro.api import TsvWriter
+    from repro.api.session import CellResult
+
+    w = TsvWriter(str(out_dir))
+    w.open(stub)
+    for i in order:
+        b, k, shard = cells[i]
+        w.write(CellResult.from_shard(b, k, dict(shard)))
+    w.close()
+    return {
+        f: open(os.path.join(str(out_dir), f)).read()
+        for f in ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+    }
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_cell_completion_order_never_changes_writer_output(seed, perm_seed):
+    import tempfile
+
+    cells, m, p = _executor_cells(seed)
+    stub = _StubSession(m, p, 3, 3)
+    d = tempfile.mkdtemp()
+    ident = list(range(len(cells)))
+    ref = _write_cells(cells, ident, stub, os.path.join(d, "ref"))
+    perm = list(np.random.default_rng(perm_seed).permutation(len(cells)))
+    assert _write_cells(cells, perm, stub, os.path.join(d, "perm")) == ref
+    assert _write_cells(cells, ident[::-1], stub, os.path.join(d, "rev")) == ref
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_cell_commit_order_never_changes_checkpoint_merge(seed, perm_seed):
+    """Commit cells to the checkpoint in any order, merge offline through
+    CheckpointReplay: identical writer outputs to the direct stream."""
+    import tempfile
+
+    from repro.api.session import CheckpointReplay
+    from repro.api import TsvWriter
+    from repro.runtime.checkpoint import ScanCheckpoint
+
+    cells, m, p = _executor_cells(seed)
+    stub = _StubSession(m, p, 3, 3)
+    d = tempfile.mkdtemp()
+    ref = _write_cells(cells, list(range(len(cells))), stub, os.path.join(d, "ref"))
+
+    ck = ScanCheckpoint(
+        os.path.join(d, "ck"), fingerprint="prop", n_batches=3, n_blocks=3
+    )
+    for i in np.random.default_rng(perm_seed).permutation(len(cells)):
+        b, k, shard = cells[i]
+        ck.commit_cell(b, k, shard)
+    replay = CheckpointReplay(os.path.join(d, "ck"))
+    out = os.path.join(d, "merged")
+    replay.stream_to(TsvWriter(out))
+    got = {
+        f: open(os.path.join(out, f)).read()
+        for f in ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+    }
+    assert got == ref

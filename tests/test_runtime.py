@@ -77,6 +77,41 @@ def test_workqueue_steals_from_straggler():
     assert q.remaining() <= 2
 
 
+def test_workqueue_stats_are_snapshots():
+    """stats() must hand out copies: a caller mutating (or holding) the
+    returned WorkerStats cannot corrupt the queue's live accounting."""
+    q = WorkQueue(8, lease_size=2)
+    idx = q.claim("w")
+    snap = q.stats()
+    snap["w"].claimed = 999
+    snap["w"].completed = 999
+    assert q.stats()["w"].claimed == 1
+    assert q.stats()["w"].completed == 0
+    q.complete("w", idx)
+    assert snap["w"].completed == 999      # the snapshot stays a snapshot
+    assert q.stats()["w"].completed == 1   # the live accounting moved on
+
+
+def test_workqueue_victim_tie_break_deterministic():
+    """Equal-length leases tie-break on the lexicographically greatest
+    worker id — victim selection is a pure function of queue state."""
+    for _ in range(3):  # no hidden dict-order dependence across instances
+        q = WorkQueue(8, lease_size=4)
+        q.claim("alpha")   # alpha and beta both hold 3-item leases
+        q.claim("beta")
+        assert q._pick_victim("thief") == "beta"
+        # a strictly longer lease beats the name tie-break
+        q2 = WorkQueue(12, lease_size=4)
+        q2.claim("zz")
+        q2.claim("aa")     # leases now equal (3, 3)
+        q2.claim("aa")     # aa down to 2: zz is the longest
+        assert q2._pick_victim("thief") == "zz"
+        # workers with <= 1 item are never victims
+        q3 = WorkQueue(2, lease_size=2)
+        q3.claim("solo")
+        assert q3._pick_victim("thief") is None
+
+
 def test_workqueue_skip_completed():
     q = WorkQueue(10, lease_size=4, skip={0, 1, 2})
     seen = []
