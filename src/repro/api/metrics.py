@@ -35,6 +35,11 @@ class CellTiming:
     wall_s: float              # compute + payload materialization
     device: str = "-"          # executor slot label ("serial" | device repr)
     replayed: bool = False     # loaded from a checkpoint shard, not computed
+    # wall_s split (DESIGN.md §13): device step (dispatch .. results ready)
+    # vs host payload extraction (D2H pulls + hit globalization).  Both 0.0
+    # when the executor did not measure the split (checkpoint replay).
+    step_s: float = 0.0
+    extract_s: float = 0.0
 
 
 class ScanMetrics:
@@ -54,6 +59,8 @@ class ScanMetrics:
         self._live_batches: set[int] = set()
         self._markers = 0
         self._trait_markers = 0
+        self._step_s = 0.0
+        self._extract_s = 0.0
         self._per_device: dict[str, dict] = {}     # label -> cells/busy_s
 
     # ------------------------------------------------------------ recording
@@ -71,6 +78,8 @@ class ScanMetrics:
                 self._live_batches.add(row.batch_index)
                 self._markers += row.n_markers
             self._trait_markers += row.n_markers * row.n_traits
+            self._step_s += row.step_s
+            self._extract_s += row.extract_s
             d = self._per_device.setdefault(row.device, {"cells": 0, "busy_s": 0.0})
             d["cells"] += 1
             d["busy_s"] += row.wall_s
@@ -95,6 +104,16 @@ class ScanMetrics:
         paper's throughput claim is denominated in."""
         return self._trait_markers
 
+    def extract_share(self) -> float | None:
+        """Measured fraction of busy time spent in payload extraction
+        (D2H + host epilogue work) rather than the device step — the
+        observable the sparse epilogue (DESIGN.md §13) drives down.  None
+        until an executor that measures the split has recorded a cell."""
+        busy = self._step_s + self._extract_s
+        if busy <= 0:
+            return None
+        return self._extract_s / busy
+
     def _wall(self) -> float:
         if self.wall_s > 0:
             return self.wall_s
@@ -113,6 +132,7 @@ class ScanMetrics:
         }
         markers = self.markers_done()
         tm = self.trait_markers_done()
+        share = self.extract_share()
         return {
             "cells": self.cells_done,
             "cells_total": self.n_cells_total,
@@ -121,6 +141,9 @@ class ScanMetrics:
             "wall_s": round(wall, 4),
             "markers_per_s": round(markers / wall, 1) if wall > 0 else None,
             "trait_markers_per_s": round(tm / wall, 1) if wall > 0 else None,
+            "step_s": round(self._step_s, 4),
+            "extract_s": round(self._extract_s, 4),
+            "extract_share": round(share, 3) if share is not None else None,
             "per_device": per_device,
         }
 
@@ -130,7 +153,10 @@ class ScanMetrics:
         wall = time.perf_counter() - self._t0 if self._t0 is not None else 0.0
         rate = self.markers_done() / wall if wall > 0 else 0.0
         total = f"/{self.n_cells_total}" if self.n_cells_total else ""
+        share = self.extract_share()
+        tail = f"  extract {share:.0%}" if share is not None else ""
         return (
             f"[scan] {self.cells_done}{total} cells  "
             f"{rate:,.0f} markers/s  {len(self._per_device) or 1} device(s)"
+            f"{tail}"
         )

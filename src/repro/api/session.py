@@ -53,6 +53,7 @@ from repro.api.study import Study
 from repro.core.engines import EngineContext, ScanEngine, get_engine
 from repro.core.panels import PanelPrefetcher, PanelStore
 from repro.core.residualize import covariate_basis
+from repro.core import stats as _stats
 from repro.core.sinks import BatchView, extract_hits
 from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
 from repro.runtime.prefetch import (
@@ -385,6 +386,8 @@ class ScanPlan:
             lmm_delta=config.lmm_delta,
             lmm_epilogue=config.lmm_epilogue,
             io_workers=config.io_workers,
+            sparse_epilogue=config.sparse_epilogue,
+            hit_capacity=config.hit_capacity,
         )
         engine.validate(ctx)
         # Amortized engine setup (LMM: streamed GRM + eigendecomposition +
@@ -465,7 +468,9 @@ class _Slot:
         self.state.reset()
 
 
-def _live_cell(host_batch, out: dict, blk: TraitBlock, cfg: ScanConfig) -> "CellResult":
+def _live_cell(
+    host_batch, out: dict, blk: TraitBlock, cfg: ScanConfig, dof: float
+) -> "CellResult":
     """Wrap one device step output as a materialized live ``CellResult``.
 
     ``arrays`` is forced here — on the computing slot's thread — so D2H
@@ -473,11 +478,20 @@ def _live_cell(host_batch, out: dict, blk: TraitBlock, cfg: ScanConfig) -> "Cell
     (the jitted step dispatches asynchronously; the pull is the sync
     point), and the commit/writer path downstream reads the cache.  The
     hit-driven-pull invariant is untouched: materialization only crosses
-    the full tiles when the cell has hits.
+    the full tiles when the cell has hits.  ``dof`` plus the scan's screen
+    threshold (``t2_screen``) let the view route every emitted -log10 p
+    through the canonical refine executables (§13) — in both sparse and
+    dense epilogue modes, so the two stay bitwise equal.
     """
     batch = host_batch.batch
+    t2_screen = (
+        _stats.t2_screen_threshold(float(cfg.hit_threshold_nlp), float(dof))
+        if cfg.options.compute_neglog10p
+        else None
+    )
     view = BatchView(
-        host_batch, out, blk.n_traits, t_lo=blk.lo, block_index=blk.index
+        host_batch, out, blk.n_traits, t_lo=blk.lo, block_index=blk.index, dof=dof,
+        t2_screen=t2_screen,
     )
     cell = CellResult(
         batch_index=batch.index,
@@ -548,17 +562,28 @@ class SerialExecutor:
                     out = slot.step(*dev_args, slot.panel_block(batch, blk))
                     # Look ahead one cell on the trait axis (then wrap to the
                     # next batch's first block, which the LRU may have evicted).
+                    # Requested BEFORE the device sync so staging overlaps
+                    # the step exactly as it always did.
                     if pos + 1 < len(cells):
                         panel_la.request(batch, cells[pos + 1])
                     elif next_batch is not None and blocks:
                         panel_la.request(next_batch, blocks[0])
-                    cell = _live_cell(host_batch, out, blk, cfg)
+                    # Split the cell's wall time at the device fence: the
+                    # jitted step dispatches asynchronously, so t1 - t0 is
+                    # honest device time and t2 - t1 is the host payload
+                    # extraction the sparse epilogue (§13) shrinks.
+                    jax.block_until_ready(out)
+                    t1 = time.perf_counter()
+                    cell = _live_cell(host_batch, out, blk, cfg, prep.dof)
+                    t2 = time.perf_counter()
                     yield cell, CellTiming(
                         batch_index=bidx,
                         block_index=blk.index,
                         n_markers=cell.n_markers,
                         n_traits=cell.n_traits,
-                        wall_s=time.perf_counter() - t0,
+                        wall_s=t2 - t0,
+                        step_s=t1 - t0,
+                        extract_s=t2 - t1,
                         device=slot.label,
                     )
         finally:
@@ -664,13 +689,18 @@ class MultiDeviceExecutor:
                             return
                         t0 = time.perf_counter()
                         out = slot.step(*dev_args, slot.panel_block(batch, blk))
-                        cell = _live_cell(hb, out, blk, cfg)
+                        jax.block_until_ready(out)
+                        t1 = time.perf_counter()
+                        cell = _live_cell(hb, out, blk, cfg, prep.dof)
+                        t2 = time.perf_counter()
                         put((cell, CellTiming(
                             batch_index=batch.index,
                             block_index=blk.index,
                             n_markers=cell.n_markers,
                             n_traits=cell.n_traits,
-                            wall_s=time.perf_counter() - t0,
+                            wall_s=t2 - t0,
+                            step_s=t1 - t0,
+                            extract_s=t2 - t1,
                             device=label,
                         )))
                     sched.complete(label, idx)

@@ -137,6 +137,11 @@ class ScanConfig:
     engine: str = "dense"          # registry name: core.engines.available_engines()
     mode: str = "mp"               # sharding mode; "sample" implies engine="dense"
     hit_threshold_nlp: float = 7.301  # 5e-8, the GWAS genome-wide line
+    # Sparse p-value epilogue (DESIGN.md §13): screen lanes on t^2, run the
+    # exact CF only on compacted survivors.  Output is bitwise-identical
+    # either way, so neither knob enters the checkpoint fingerprint.
+    sparse_epilogue: bool = True
+    hit_capacity: int = 4096       # per-cell compacted hit-buffer slots
     maf_min: float = 0.0
     exclude_related: bool = False
     multivariate: bool = False
@@ -171,8 +176,12 @@ class ScanConfig:
         # decomposition.
         for k in ("prefetch_depth", "io_workers", "checkpoint_dir",
                   "panel_resident_blocks", "spill_dir", "hit_spill_rows",
-                  "devices", "placement", "lease_batches"):
+                  "devices", "placement", "lease_batches",
+                  # bitwise-neutral epilogue strategy (§13): a scan
+                  # checkpointed sparse resumes dense and vice versa
+                  "sparse_epilogue", "hit_capacity"):
             d.pop(k)
+        d["options"].pop("sparse_epilogue", None)
         return d
 
     # ------------------------------------------------------ spec round-trip
@@ -194,6 +203,8 @@ class ScanConfig:
         multivariate: bool = False,
         checkpoint_dir: str | None = None,
         input_dtype: str = "fp32",
+        sparse_epilogue: bool = True,
+        hit_capacity: int = 4096,
     ) -> "ScanConfig":
         """Validate a spec combination and normalize it (the plan step)."""
         from repro.core.engines import available_engines
@@ -226,6 +237,8 @@ class ScanConfig:
             )
         if mode not in ("mp", "sample"):
             raise ValueError(f"unknown sharding mode {mode!r}")
+        if hit_capacity < 1:
+            raise ValueError(f"hit_capacity must be >= 1, got {hit_capacity}")
         lmm = lmm or LmmSpec()
         return cls(
             batch_markers=grid.batch_markers,
@@ -234,6 +247,8 @@ class ScanConfig:
             engine=engine,
             mode=mode,
             hit_threshold_nlp=hit_threshold_nlp,
+            sparse_epilogue=sparse_epilogue,
+            hit_capacity=hit_capacity,
             maf_min=maf_min,
             exclude_related=exclude_related,
             multivariate=multivariate,

@@ -167,6 +167,8 @@ class Study:
         multivariate: bool = False,
         checkpoint_dir: str | None = None,
         input_dtype: str = "fp32",
+        sparse_epilogue: bool = True,
+        hit_capacity: int = 4096,
         mesh: Any = None,
     ) -> "ScanPlan":
         """Validate + normalize a spec combination into a ``ScanPlan``.
@@ -192,6 +194,8 @@ class Study:
             multivariate=multivariate,
             checkpoint_dir=checkpoint_dir,
             input_dtype=input_dtype,
+            sparse_epilogue=sparse_epilogue,
+            hit_capacity=hit_capacity,
         )
         return ScanPlan(self, config, mesh=mesh)
 

@@ -32,10 +32,13 @@ __all__ = [
     "AssocOptions",
     "MarkerStats",
     "AssocResult",
+    "SparseEpilogue",
     "standardize_genotype_batch",
     "correlation",
     "assoc_from_standardized",
     "assoc_batch",
+    "plan_sparse_epilogue",
+    "sparse_epilogue_outputs",
 ]
 
 
@@ -50,12 +53,18 @@ class AssocOptions:
     eps: clamp for 1 - r^2.
     compute_neglog10p: skip the (elementwise but special-function-heavy)
         p-value epilogue when only |T| ranking is needed.
+    sparse_epilogue: sparse p-value mode (DESIGN.md §13): skip the full
+        (M, P) -log10 p tile — the caller screens on t^2 and refines only
+        past-threshold lanes through ``sparse_epilogue_outputs``.  Implies
+        the nlp tile of ``AssocResult`` is zeros, like
+        ``compute_neglog10p=False``.
     """
 
     dof_mode: str = "paper"
     precision: str = "fp32"
     eps: float = 1e-12
     compute_neglog10p: bool = True
+    sparse_epilogue: bool = False
 
     def __post_init__(self) -> None:
         if self.dof_mode not in ("paper", "exact"):
@@ -187,7 +196,7 @@ def assoc_from_standardized(
     r = jnp.clip(r, -1.0, 1.0)
     dof = options.dof(n_samples, n_covariates)
     t = _stats.t_from_r(r, dof, eps=options.eps)
-    if options.compute_neglog10p:
+    if options.compute_neglog10p and not options.sparse_epilogue:
         nlp = _stats.neglog10_p_from_t(t, dof)
     else:
         nlp = jnp.zeros_like(t)
@@ -231,3 +240,128 @@ def assoc_batch(
         neglog10p=jnp.where(mask, res.neglog10p, 0.0),
     )
     return res, marker_stats
+
+
+# ----------------------------------------------------- sparse p-value epilogue
+#
+# DESIGN.md §13.  The 128-trip Lentz continued fraction in
+# ``stats.neglog10_p_from_t`` dominated the full scan (BENCH_scan.json
+# measured a 0.94-0.99 epilogue share) because it ran over every lane of
+# every (M, P) tile.  For fixed dof, -log10 p is strictly monotone in t^2,
+# so the epilogue only needs the CF on (a) the per-trait t^2 winner and
+# (b) the lanes past a conservative t^2 screen — O(P + hits) evaluations
+# instead of O(M*P), with bitwise-identical results.
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseEpilogue:
+    """Per-scan compile-time constants of the sparse p-value epilogue.
+
+    ``t2_screen`` is the conservative inverse of the hit threshold
+    (``stats.t2_screen_threshold``); ``capacity`` the static size of the
+    compacted device buffer (jit shapes stay fixed — past-capacity cells
+    overflow to the host fallback in ``core.sinks.extract_hits``).
+    """
+
+    threshold_nlp: float
+    t2_screen: float
+    capacity: int
+
+
+def plan_sparse_epilogue(
+    threshold_nlp: float,
+    dof: float,
+    *,
+    capacity: int = 4096,
+    cell_area: int | None = None,
+) -> SparseEpilogue | None:
+    """Resolve the sparse-epilogue constants for one scan, or ``None`` when
+    screening cannot help (threshold at/below the inversion margin, or a
+    non-positive dof).  ``cell_area`` clamps the compacted buffer at the
+    grid-cell extent — a buffer wider than the tile it compacts is waste.
+    """
+    t2 = _stats.t2_screen_threshold(float(threshold_nlp), float(dof))
+    if t2 is None or not (t2 > 0.0):
+        return None
+    cap = int(capacity)
+    if cell_area is not None:
+        cap = min(cap, int(cell_area))
+    # Round up to a multiple of the canonical refine chunk width so the
+    # compacted buffer's slot layout chunks evenly — a survivor then lands
+    # in the same (REFINE_WIDTH,) chunk slot whether it came off the
+    # device compact buffer or the host survivor gather (DESIGN.md §13).
+    w = _stats.REFINE_WIDTH
+    cap = max(w, -(-cap // w) * w)
+    return SparseEpilogue(float(threshold_nlp), float(t2), cap)
+
+
+def sparse_epilogue_outputs(
+    r: jax.Array,
+    t: jax.Array,
+    dof: float,
+    plan: SparseEpilogue,
+    *,
+    screen: tuple[jax.Array, jax.Array] | None = None,
+) -> dict[str, jax.Array]:
+    """Screen one masked (M, P) statistic tile on t^2 and compact survivors.
+
+    Inputs must be the *masked* r/t tiles (invalid lanes zeroed) so masked
+    lanes never pass the screen.  No CF runs here at all: the exact-tail
+    refine happens host-side through the canonical per-(shape, dof)
+    executables (``stats.refine_neglog10p``) so the sparse, dense-audit,
+    and overflow paths all evaluate -log10 p in one compiled program —
+    in-step CF bits are fusion-context-sensitive and would break the
+    bitwise contract (DESIGN.md §13).  Returns the sparse step outputs:
+
+        batch_best_row   (P,) int32 — argmax over t^2 (first index on ties;
+                         identical to argmax over the nlp tile because nlp
+                         is a monotone function of t^2 — the §13 contract)
+        batch_best_t     (P,) f32 — winner t, refined host-side
+        hit_idx          (capacity,) int32 — row-major flat indices of
+                         screened lanes in first-K order (matches the dense
+                         path's np.nonzero order), -1 padded
+        hit_r/hit_t      (capacity,) f32 — gathered stats; 0 in padding
+        screen_count     () int32 — total screened lanes; > capacity means
+                         the buffer overflowed (host fallback)
+
+    ``screen`` optionally supplies ``(hit_idx, screen_count)`` from a fused
+    kernel (``kernels.tstat.screen_compact``) instead of the XLA
+    nonzero-gather; the compaction layout is identical either way.
+    """
+    del dof  # the refine is host-side now; kept for call-site symmetry
+    t2 = jnp.square(t)
+    # argmax over the transposed tile: per-trait reductions then run along
+    # contiguous memory (~1.7x faster on XLA CPU) and the result is the same
+    # int32 — argmax keeps first-occurrence ties along the marker axis in
+    # either layout.
+    best_row = jnp.argmax(t2.T, axis=1).astype(jnp.int32)
+    best_t = jnp.take_along_axis(t, best_row[None, :], axis=0)[0]
+    if screen is None:
+        keep = t2.ravel() >= plan.t2_screen
+        screen_count = jnp.sum(keep).astype(jnp.int32)
+        # nonzero lowers to a full-length serial cumsum on XLA CPU — by far
+        # the most expensive op in the epilogue.  Almost every tile of a
+        # genome scan has zero survivors, so gate the compaction on the cheap
+        # reduction: the empty branch emits exactly what nonzero(fill_value=-1)
+        # would (all -1), so emitted bits are unchanged in every case.
+        idx = jax.lax.cond(
+            screen_count > 0,
+            lambda: jnp.nonzero(keep, size=plan.capacity, fill_value=-1)[0].astype(
+                jnp.int32
+            ),
+            lambda: jnp.full((plan.capacity,), -1, jnp.int32),
+        )
+    else:
+        idx, screen_count = screen
+    slot = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    hit_t = jnp.where(slot, t.ravel()[safe], 0.0)
+    hit_r = jnp.where(slot, r.ravel()[safe], 0.0)
+    return {
+        "batch_best_row": best_row,
+        "batch_best_t": best_t,
+        "hit_idx": idx,
+        "hit_r": hit_r,
+        "hit_t": hit_t,
+        "screen_count": screen_count,
+    }

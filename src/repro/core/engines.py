@@ -29,7 +29,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import stats as _stats
-from repro.core.association import AssocOptions, assoc_from_standardized, standardize_genotype_batch
+from repro.core.association import (
+    AssocOptions,
+    assoc_from_standardized,
+    plan_sparse_epilogue,
+    sparse_epilogue_outputs,
+    standardize_genotype_batch,
+)
 from repro.runtime.compat import shard_map
 from repro.runtime.prefetch import MarkerBatch, TraitBlock
 from repro.runtime.sharding import batch_axes, gwas_shardings
@@ -128,6 +134,12 @@ class EngineContext:
     lmm_delta: float | None = None
     lmm_epilogue: str = "dense"
     io_workers: int = 2
+    # sparse p-value epilogue (DESIGN.md §13): screen on t^2, exact-CF
+    # refine only winners + past-threshold lanes.  Results are bitwise-
+    # identical to the dense CF path; engines silently fall back to dense
+    # under a sharding mesh (data-dependent gathers don't shard).
+    sparse_epilogue: bool = False
+    hit_capacity: int = 4096
 
 
 @dataclass
@@ -290,6 +302,45 @@ def available_engines() -> list[str]:
 # --------------------------------------------------------------------- steps
 
 
+def _dense_best_and_hits(nlp: jax.Array, t: jax.Array, hit_threshold: float) -> dict:
+    """Reference-path summary outputs from a full masked nlp tile.
+
+    The winner is the argmax over t^2 (first index on ties) with its nlp
+    read from the tile — the same winner rule the sparse epilogue refines,
+    so both paths agree bitwise even where the f32 nlp tile plateaus
+    (distinct t^2 mapping to one nlp value) — the §13 monotonicity
+    contract.
+    """
+    best_row = jnp.argmax(jnp.square(t), axis=0).astype(jnp.int32)
+    return {
+        "batch_best_nlp": jnp.take_along_axis(nlp, best_row[None, :], axis=0)[0],
+        "batch_best_row": best_row,
+        "batch_best_t": jnp.take_along_axis(t, best_row[None, :], axis=0)[0],
+        "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
+    }
+
+
+def _resolve_sparse(
+    sparse_epilogue, mesh, options, hit_threshold, dof, hit_capacity,
+    multivariate=False,
+):
+    """One gate for all three builders: the sparse epilogue needs a
+    meaningful threshold (plan may refuse), an nlp-producing scan, no
+    sharding mesh (the compaction gather is data-dependent — it does not
+    shard; the multi-device grid executor, which jits per device, is the
+    scaling path that does support it), and no multivariate omnibus (that
+    screen consumes the full r tile in-step; keep its program identical to
+    the audited dense one)."""
+    if (
+        not sparse_epilogue
+        or mesh is not None
+        or multivariate
+        or not options.compute_neglog10p
+    ):
+        return None
+    return plan_sparse_epilogue(hit_threshold, dof, capacity=hit_capacity)
+
+
 def build_dense_step(
     *,
     n_samples: int,
@@ -305,11 +356,21 @@ def build_dense_step(
     whitening: jax.Array | None = None,
     trait_tile: int | None = None,
     split_prolog: bool = True,
+    sparse_epilogue: bool = False,
+    hit_capacity: int = 4096,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Paper-faithful dense step: float dosages in, summary tiles out.
     ``trait_tile`` fixes the panel-axis GEMM tile (the scan passes its
     ``block_p``) so every trait-block decomposition computes identical
     tiles — the §10 bitwise contract.
+
+    ``sparse_epilogue`` switches the p-value epilogue to the threshold-
+    compacted sparse form (DESIGN.md §13): no full nlp tile; instead
+    ``hit_idx``/``hit_r``/``hit_t`` compacted buffers of static
+    ``hit_capacity`` plus ``screen_count`` (> capacity signals the host
+    overflow fallback).  Hits, best-trait tables, and every persisted
+    array are bitwise-identical to the dense path; mesh mode ignores the
+    flag (the compaction gather does not shard).
 
     Like the lmm step, the computation splits into a once-per-marker-batch
     *prolog* (standardize + the exact-mode FWL residualization — everything
@@ -325,6 +386,14 @@ def build_dense_step(
     jit boundary cannot change a bit.
     """
     dof = options.dof(n_samples, n_covariates)
+    sparse = _resolve_sparse(
+        sparse_epilogue, mesh, options, hit_threshold, dof, hit_capacity,
+        multivariate=multivariate,
+    )
+    cell_options = (
+        dataclasses.replace(options, sparse_epilogue=True) if sparse is not None
+        else options
+    )
 
     def prolog(g_raw: jax.Array):
         g_std, ms = standardize_genotype_batch(g_raw)
@@ -338,20 +407,18 @@ def build_dense_step(
     def cell(g_std, maf, valid, y_std) -> dict[str, jax.Array]:
         res = assoc_from_standardized(
             g_std, y_std, n_samples=n_samples, n_covariates=n_covariates,
-            options=options, trait_tile=trait_tile,
+            options=cell_options, trait_tile=trait_tile,
         )
         mask = valid[:, None]
-        nlp = jnp.where(mask, res.neglog10p, 0.0)
-        out = {
-            "r": jnp.where(mask, res.r, 0.0),
-            "t": jnp.where(mask, res.t, 0.0),
-            "nlp": nlp,
-            "maf": maf,
-            "valid": valid,
-            "batch_best_nlp": jnp.max(nlp, axis=0),
-            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
-            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
-        }
+        r = jnp.where(mask, res.r, 0.0)
+        t = jnp.where(mask, res.t, 0.0)
+        out = {"r": r, "t": t, "maf": maf, "valid": valid}
+        if sparse is not None:
+            out.update(sparse_epilogue_outputs(r, t, dof, sparse))
+        else:
+            nlp = jnp.where(mask, res.neglog10p, 0.0)
+            out["nlp"] = nlp
+            out.update(_dense_best_and_hits(nlp, t, hit_threshold))
         if multivariate:
             from repro.core import multivariate as mv
 
@@ -383,6 +450,7 @@ def build_dense_step(
             "valid": sh["marker_vec"],
             "batch_best_nlp": model_vec,
             "batch_best_row": model_vec,
+            "batch_best_t": model_vec,
             "hit_count": rep,
             **mv_spec,
         }
@@ -431,6 +499,8 @@ def build_fused_step(
     block_p: int = 256,
     interpret: bool | None = None,
     input_dtype: str | None = None,
+    sparse_epilogue: bool = False,
+    hit_capacity: int = 4096,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Beyond-paper fused step: 2-bit packed slabs in (kernel layout),
     summary tiles out.  'mp' sharding only — the in-kernel epilogue requires
@@ -440,12 +510,16 @@ def build_fused_step(
     the in-kernel accumulation and the epilogue (t, -log10 p, argmax) stay
     float32 either way — the GEMM-bf16 / epilogue-fp32 split audited by the
     oracle suite.  ``None`` defers to ``options.precision`` (the historical
-    plumbing)."""
+    plumbing).  ``sparse_epilogue`` — see ``build_dense_step``; the kernel
+    still emits the full r/t tiles, only the p-value work is compacted."""
     from repro.kernels.gwas_dot.gwas_dot import build_gwas_dot
 
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     dof = options.dof(n_samples, n_covariates)
+    sparse = _resolve_sparse(
+        sparse_epilogue, mesh, options, hit_threshold, dof, hit_capacity
+    )
     use_bf16 = input_dtype == "bf16" or (input_dtype is None and options.precision == "bf16")
     input_dtype = jnp.bfloat16 if use_bf16 else jnp.float32
 
@@ -488,15 +562,14 @@ def build_fused_step(
         mask = valid[:, None]
         r = jnp.where(mask, r, 0.0)
         t = jnp.where(mask, t, 0.0)
-        nlp = jnp.where(mask, _stats.neglog10_p_from_t(t, dof), 0.0)
-        return {
-            "r": r,
-            "t": t,
-            "nlp": nlp,
-            "batch_best_nlp": jnp.max(nlp, axis=0),
-            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
-            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
-        }
+        out = {"r": r, "t": t}
+        if sparse is not None:
+            out.update(sparse_epilogue_outputs(r, t, dof, sparse))
+        else:
+            nlp = jnp.where(mask, _stats.neglog10_p_from_t(t, dof), 0.0)
+            out["nlp"] = nlp
+            out.update(_dense_best_and_hits(nlp, t, hit_threshold))
+        return out
 
     if mesh is None:
         return jax.jit(step)
@@ -511,6 +584,7 @@ def build_fused_step(
             "nlp": sh["out"],
             "batch_best_nlp": model_vec,
             "batch_best_row": model_vec,
+            "batch_best_t": model_vec,
             "hit_count": NamedSharding(mesh, P()),
         },
     )
@@ -527,6 +601,8 @@ def build_lmm_step(
     epilogue: str = "dense",
     block_m: int = 256,
     block_p: int = 256,
+    sparse_epilogue: bool = False,
+    hit_capacity: int = 4096,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Mixed-model step: standardize -> rotate into the (whitened) GRM
     eigenbasis -> project out the whitened design -> the unchanged
@@ -552,11 +628,20 @@ def build_lmm_step(
     the staged batch's array identity, so a blocked scan's inner trait-
     block loop pays the genotype-side work once per marker batch, not once
     per grid cell.  The public signature is unchanged.
+
+    ``sparse_epilogue`` — see ``build_dense_step``.  With
+    ``epilogue="fused"`` the t^2 screen additionally fuses into the Pallas
+    t-statistic pass (``kernels.tstat.screen_compact``): Eq. 3, the screen
+    compare, and the per-block survivor counts run in one kernel; the exact
+    CF then touches only the compacted lanes.
     """
     if epilogue not in ("dense", "fused"):
         raise ValueError(f"unknown lmm epilogue {epilogue!r}")
     opts = dataclasses.replace(options, dof_mode="exact")
     dof = opts.dof(n_samples, n_covariates)
+    sparse = _resolve_sparse(
+        sparse_epilogue, mesh, opts, hit_threshold, dof, hit_capacity
+    )
 
     from repro.core.association import correlation
     from repro.core.residualize import residualize_genotypes
@@ -572,35 +657,54 @@ def build_lmm_step(
         valid = ms.valid & (ms.maf >= maf_min) if maf_min > 0 else ms.valid
         return g_fin, ms.maf, valid
 
-    def cell(g_fin, maf, valid, y_std):
-        if epilogue == "fused":
-            from repro.kernels.tstat import tstat
+    cell_opts = (
+        dataclasses.replace(opts, sparse_epilogue=True) if sparse is not None
+        else opts
+    )
 
+    def cell(g_fin, maf, valid, y_std):
+        mask = valid[:, None]
+        screen = None
+        nlp = None
+        if epilogue == "fused":
             r = jnp.clip(
                 correlation(g_fin, y_std, n_samples, precision=opts.precision,
                             trait_tile=block_p),
                 -1.0, 1.0,
             )
-            t = tstat(r, dof, block_m=block_m, block_p=block_p)
-            nlp = _stats.neglog10_p_from_t(t, dof)
+            # Mask before the kernel: invalid lanes map to r=0 -> t=0
+            # exactly, so masked tiles are identical either way and the
+            # fused screen can never admit a masked lane.
+            r = jnp.where(mask, r, 0.0)
+            if sparse is not None:
+                from repro.kernels.tstat import screen_compact
+
+                t, idx, screen_count = screen_compact(
+                    r, dof, sparse.t2_screen, sparse.capacity,
+                    block_m=block_m, block_p=block_p,
+                )
+                screen = (idx, screen_count)
+            else:
+                from repro.kernels.tstat import tstat
+
+                t = tstat(r, dof, block_m=block_m, block_p=block_p)
+                nlp = jnp.where(mask, _stats.neglog10_p_from_t(t, dof), 0.0)
         else:
             res = assoc_from_standardized(
                 g_fin, y_std, n_samples=n_samples, n_covariates=n_covariates,
-                options=opts, trait_tile=block_p,
+                options=cell_opts, trait_tile=block_p,
             )
-            r, t, nlp = res.r, res.t, res.neglog10p
-        mask = valid[:, None]
-        nlp = jnp.where(mask, nlp, 0.0)
-        return {
-            "r": jnp.where(mask, r, 0.0),
-            "t": jnp.where(mask, t, 0.0),
-            "nlp": nlp,
-            "maf": maf,
-            "valid": valid,
-            "batch_best_nlp": jnp.max(nlp, axis=0),
-            "batch_best_row": jnp.argmax(nlp, axis=0).astype(jnp.int32),
-            "hit_count": jnp.sum(nlp >= hit_threshold).astype(jnp.int32),
-        }
+            r = jnp.where(mask, res.r, 0.0)
+            t = jnp.where(mask, res.t, 0.0)
+            if sparse is None:
+                nlp = jnp.where(mask, res.neglog10p, 0.0)
+        out = {"r": r, "t": t, "maf": maf, "valid": valid}
+        if sparse is not None:
+            out.update(sparse_epilogue_outputs(r, t, dof, sparse, screen=screen))
+        else:
+            out["nlp"] = nlp
+            out.update(_dense_best_and_hits(nlp, t, hit_threshold))
+        return out
 
     if mesh is None:
         prolog_j = jax.jit(prolog)
@@ -625,6 +729,7 @@ def build_lmm_step(
                 "valid": sh["marker_vec"],
                 "batch_best_nlp": model_vec,
                 "batch_best_row": model_vec,
+                "batch_best_t": model_vec,
                 "hit_count": rep,
             },
         )
@@ -667,6 +772,8 @@ class DenseEngine(ScanEngine):
             n_traits_eff=ctx.n_traits_eff,
             whitening=ctx.whitening,
             trait_tile=ctx.block_p,
+            sparse_epilogue=ctx.sparse_epilogue,
+            hit_capacity=ctx.hit_capacity,
         )
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
@@ -699,6 +806,8 @@ class FusedEngine(ScanEngine):
             # "bf16" forces the kernel's low-precision GEMM; the default
             # defers to options.precision (the historical plumbing).
             input_dtype="bf16" if ctx.input_dtype == "bf16" else None,
+            sparse_epilogue=ctx.sparse_epilogue,
+            hit_capacity=ctx.hit_capacity,
         )
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
@@ -885,6 +994,8 @@ class LMMEngine(ScanEngine):
             epilogue=ctx.lmm_epilogue,
             block_m=ctx.block_m,
             block_p=ctx.block_p,
+            sparse_epilogue=ctx.sparse_epilogue,
+            hit_capacity=ctx.hit_capacity,
         )
 
     def make_device_state(

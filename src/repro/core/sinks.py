@@ -38,6 +38,22 @@ from repro.core.engines import HostBatch
 from repro.runtime.checkpoint import ScanCheckpoint
 from repro.runtime.prefetch import MarkerBatch
 
+_T2MAX_PROBE = None  # lazy jit; jax caches per input shape
+
+
+def _screen_any(t_tile, t2_screen: float) -> bool:
+    """Scalar device probe: does any lane pass the t^2 screen?  max is an
+    exact selection, so ``max(t^2) >= thr`` iff some lane passes — only one
+    float crosses PCIe, preserving the hit-driven-pull invariant for
+    dense-mode cells under a sparse-capable config."""
+    global _T2MAX_PROBE
+    if _T2MAX_PROBE is None:
+        import jax
+
+        _T2MAX_PROBE = jax.jit(lambda t: jnp.max(jnp.square(t)))
+    return bool(np.asarray(_T2MAX_PROBE(t_tile)) >= np.float32(t2_screen))
+
+
 __all__ = [
     "BatchView",
     "ResultSink",
@@ -62,6 +78,75 @@ def extract_hits(view: "BatchView", threshold: float) -> tuple[np.ndarray, np.nd
     """
     hits = np.zeros((0, 2), np.int32)
     stats = np.zeros((0, 3), np.float32)
+    if view.is_sparse and not view.overflowed:
+        # Sparse epilogue (DESIGN.md §13): the device already compacted the
+        # screened lanes; only the tiny fixed-capacity buffers cross PCIe,
+        # and the exact CF runs host-side through the canonical
+        # (capacity, dof) executable.  The screen admits a sub-threshold
+        # margin — the exact nlp filter here rejects it, leaving precisely
+        # the dense path's hit set in the dense path's row-major order
+        # (first-K compaction preserves it).
+        if view.screen_count == 0:
+            return hits, stats
+        idx = view.hit_idx
+        hit_nlp = view.hit_nlp
+        keep = (idx >= 0) & (hit_nlp >= threshold)
+        if keep.any():
+            flat = idx[keep].astype(np.int64)
+            rows = flat // view.n_traits
+            cols = flat % view.n_traits
+            hits = np.stack(
+                [
+                    rows.astype(np.int32) + view.batch.lo,
+                    cols.astype(np.int32) + view.t_lo,
+                ],
+                1,
+            )
+            stats = np.stack(
+                [view.hit_r[keep], view.hit_t[keep], hit_nlp[keep]], 1
+            ).astype(np.float32)
+        return hits, stats
+    if view.t2_screen is not None and view.dof is not None:
+        # Dense-mode extraction under a sparse-capable config — also the
+        # sparse overflow fallback.  Screen the pulled t tile on the host
+        # with the identical f32 square-and-compare the device screen uses
+        # (same t bits -> same survivor set), gather survivors in flat
+        # row-major order (the compaction order), and refine them through
+        # the same (capacity,)-shaped executable the compact path uses —
+        # chunk 0 of the zero-padded buffer is elementwise identical to a
+        # non-overflowed compact buffer, so every emitted bit matches.
+        if "t" not in view._cache and not _screen_any(
+            view._out["t"], view.t2_screen
+        ):
+            return hits, stats
+        t_np = view.t
+        flat_t = np.ascontiguousarray(t_np, np.float32).ravel()
+        survivors = np.nonzero(np.square(flat_t) >= np.float32(view.t2_screen))[0]
+        if survivors.size == 0:
+            return hits, stats
+        nlp_vals = _stats.refine_neglog10p(
+            flat_t[survivors], view.dof, width=_stats.REFINE_WIDTH
+        ).astype(np.float32)
+        keep = nlp_vals >= threshold
+        if keep.any():
+            flat = survivors[keep].astype(np.int64)
+            rows = flat // view.n_traits
+            cols = flat % view.n_traits
+            r_np = view.r
+            hits = np.stack(
+                [
+                    rows.astype(np.int32) + view.batch.lo,
+                    cols.astype(np.int32) + view.t_lo,
+                ],
+                1,
+            )
+            stats = np.stack(
+                [r_np[rows, cols], t_np[rows, cols], nlp_vals[keep]], 1
+            ).astype(np.float32)
+        return hits, stats
+    # Historical dense tile path (no screen plan — e.g. the GenomeScan shim
+    # fed a raw step dict): gate the full-tile pull on the device-side hit
+    # counter.
     if view.hit_count > 0:
         nlp = view.nlp
         rows, cols = np.nonzero(nlp >= threshold)
@@ -90,6 +175,19 @@ class BatchView:
     ``n_traits`` is the cell's trait-block width (the full panel width for
     an unblocked scan); ``t_lo``/``block_index`` locate the block on the
     global trait axis so sinks can offset their folds.
+
+    A *sparse* cell (DESIGN.md §13) carries compacted
+    ``hit_idx``/``hit_r``/``hit_t`` buffers instead of the dense nlp
+    tile.  All *emitted* -log10 p values — ``hit_nlp``, ``best_nlp``, and
+    the reconstructed ``nlp`` tile — are evaluated host-side through the
+    canonical per-(shape, dof) executables (``stats.refine_neglog10p``):
+    XLA's CF codegen is fusion-context-sensitive, so the only way sparse
+    and dense cells agree bitwise is for both to route p-values through
+    one compiled program per shape.  Hit buffers always refine in fixed
+    ``stats.REFINE_WIDTH`` chunks, so the emitted bits cannot depend on
+    the configured capacity.  ``t2_screen`` carries the scan's screen
+    threshold so dense-mode extraction can mirror the sparse screen
+    exactly.
     """
 
     def __init__(
@@ -100,6 +198,8 @@ class BatchView:
         *,
         t_lo: int = 0,
         block_index: int = 0,
+        dof: float | None = None,
+        t2_screen: float | None = None,
     ):
         self.batch: MarkerBatch = host.batch
         self.host = host
@@ -108,6 +208,8 @@ class BatchView:
         self.t_lo = t_lo
         self.t_hi = t_lo + n_traits
         self.block_index = block_index
+        self.dof = dof
+        self.t2_screen = t2_screen
         self.m_batch = host.batch.n_markers
         self._cache: dict[str, np.ndarray] = {}
 
@@ -117,11 +219,70 @@ class BatchView:
         return self._cache[key]
 
     @property
+    def is_sparse(self) -> bool:
+        return "hit_idx" in self._out
+
+    @property
+    def hit_capacity(self) -> int:
+        return int(self._out["hit_idx"].shape[0])
+
+    @property
+    def screen_count(self) -> int:
+        """Exact count of lanes past the t^2 screen (sparse cells only)."""
+        return int(self._pull("screen_count"))
+
+    @property
+    def overflowed(self) -> bool:
+        """True when the screen found more lanes than the compacted buffer
+        holds — the compacted arrays are then truncated and the host must
+        fall back to the reconstructed dense tile."""
+        return self.is_sparse and self.screen_count > self.hit_capacity
+
+    @property
+    def hit_idx(self) -> np.ndarray:
+        """Compacted flat (row-major over the cell tile) screened-lane
+        indices, ``-1``-padded to capacity."""
+        return self._pull("hit_idx")
+
+    @property
+    def hit_r(self) -> np.ndarray:
+        return self._pull("hit_r")
+
+    @property
+    def hit_t(self) -> np.ndarray:
+        return self._pull("hit_t")
+
+    @property
+    def hit_nlp(self) -> np.ndarray:
+        """Exact -log10 p on the compacted lanes, refined host-side
+        through the canonical (capacity, dof) executable.  Padding slots
+        hold refine(0) — callers mask on ``hit_idx >= 0``."""
+        if "hit_nlp" not in self._cache:
+            if "hit_nlp" in self._out:  # synthetic/raw step dicts
+                self._cache["hit_nlp"] = np.asarray(self._out["hit_nlp"])
+            else:
+                self._cache["hit_nlp"] = _stats.refine_neglog10p(
+                    self.hit_t, float(self.dof), width=_stats.REFINE_WIDTH
+                ).astype(np.float32)
+        return self._cache["hit_nlp"]
+
+    @property
     def hit_count(self) -> int:
         return int(self._pull("hit_count"))
 
     @property
     def best_nlp(self) -> np.ndarray:
+        """Per-trait winner -log10 p.  When the step emitted the winner t
+        (``batch_best_t``), the value is refined host-side through the
+        canonical (P, dof) executable — identical bits whether the cell ran
+        the sparse or the dense epilogue.  Raw step dicts without it fall
+        back to the in-step tile value."""
+        if "batch_best_t" in self._out and self.dof is not None:
+            if "best_nlp" not in self._cache:
+                self._cache["best_nlp"] = _stats.refine_neglog10p(
+                    self._pull("batch_best_t")[: self.n_traits], float(self.dof)
+                ).astype(np.float32)
+            return self._cache["best_nlp"]
         return self._pull("batch_best_nlp")[: self.n_traits]
 
     @property
@@ -130,6 +291,27 @@ class BatchView:
 
     @property
     def nlp(self) -> np.ndarray:
+        if "nlp" not in self._out:
+            # Sparse cell: the dense tile never existed on device.
+            # Reconstruct it on the host from the pulled t through the
+            # canonical fixed-width refine executable (full-tile QC /
+            # report paths only — extraction never reads this).
+            if "nlp" not in self._cache:
+                if self.dof is None:
+                    raise RuntimeError(
+                        "sparse cell without dof: BatchView cannot "
+                        "reconstruct the nlp tile"
+                    )
+                t_np = self.t
+                self._cache["nlp"] = (
+                    _stats.refine_neglog10p(
+                        t_np.ravel(), float(self.dof),
+                        width=_stats.REFINE_WIDTH,
+                    )
+                    .astype(np.float32)
+                    .reshape(t_np.shape)
+                )
+            return self._cache["nlp"]
         return self._pull("nlp")[: self.m_batch]
 
     @property

@@ -25,9 +25,12 @@ Numerical notes
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
-from jax.scipy.special import betainc, betaln
+import numpy as np
+from jax.scipy.special import betainc, betaln, erfc, gammaincc, gammaln
 
 __all__ = [
     "t_from_r",
@@ -35,6 +38,9 @@ __all__ = [
     "neglog10_p_from_t",
     "neglog10_p_from_r",
     "neglog10_sf_chi2",
+    "t2_screen_threshold",
+    "refine_neglog10p",
+    "REFINE_WIDTH",
     "bh_qvalues",
     "genomic_control_lambda",
     "LOG10E",
@@ -171,8 +177,6 @@ def neglog10_p_from_t(t: jax.Array, dof: jax.Array | float) -> jax.Array:
         ``P(T>t) = Q(t) + (t^3+t) phi(t)/(4 nu) + O(nu^-2)`` — jax's f32
         ``betainc`` loses accuracy for ``a = nu/2 > ~1e4``.
     """
-    from jax.scipy.special import erfc
-
     t = jnp.asarray(t, jnp.float32)
     nu = jnp.asarray(dof, jnp.float32) * jnp.ones_like(t)
     t2 = jnp.square(t)
@@ -200,12 +204,128 @@ def neglog10_p_from_r(r: jax.Array, dof: jax.Array | float) -> jax.Array:
     return neglog10_p_from_t(t_from_r(r, dof), dof)
 
 
+# ------------------------------------------------- sparse-epilogue screening
+#
+# The monotonicity contract (DESIGN.md §13): for fixed dof, the exact
+# two-sided tail is strictly decreasing in t^2, so -log10 p is strictly
+# increasing in t^2.  ``neglog10_p_from_t`` evaluates that function in f32
+# with bounded error (<= ~5e-3 relative, tests/test_stats.py) and bounded
+# local non-monotonic jitter (<= 1e-3, ``test_neglog10_p_deep_tail_monotone``).
+# Inverting the hit threshold through the device function itself therefore
+# yields a t^2 bound that — once padded by a margin dwarfing both error
+# terms — soundly *underestimates* the true boundary: every lane the device
+# would report as a hit passes the screen, and only near-threshold misses
+# are screened in spuriously (the exact CF then rejects them).
+
+_T2_SCREEN_MAX = 1e37  # f32-finite cap for the bracket search
+
+
+@functools.lru_cache(maxsize=1024)
+def t2_screen_threshold(threshold_nlp: float, dof: float) -> float | None:
+    """Invert the hit threshold to a conservative per-dof t^2 screen bound.
+
+    Returns ``t2*`` such that ``neglog10_p_from_t(t, dof) >= threshold_nlp``
+    implies ``t^2 >= t2*`` — the admission test of the sparse p-value
+    epilogue.  Host-side bisection on the f32 device function (so the bound
+    is consistent with the code that later refines survivors), against a
+    reduced target ``threshold - (0.05 + 0.02*threshold)`` whose margin
+    covers both the f32 evaluation error (<= ~5e-3 relative, twice — once
+    at the boundary probe, once on the screened lane) and the
+    non-monotonic jitter.
+    Cached per (threshold, dof): one inversion per scan, reused by every
+    grid cell.
+
+    ``None`` means no useful bound exists (threshold at or below the
+    margin floor): callers must fall back to the dense epilogue.
+    """
+    threshold_nlp = float(threshold_nlp)
+    dof = float(dof)
+    target = threshold_nlp - (0.05 + 0.02 * threshold_nlp)
+    if not (target > 0.0) or not (dof > 0.0):
+        return None
+
+    f = jax.jit(lambda t2: neglog10_p_from_t(jnp.sqrt(t2), dof))
+
+    def nlp32(t2: float) -> float:
+        return float(f(jnp.float32(t2)))
+
+    hi = 1.0
+    while nlp32(hi) < target:
+        hi *= 4.0
+        if hi > _T2_SCREEN_MAX:
+            # Even the largest representable statistic stays below the
+            # target, so no lane can ever reach the threshold: a screen at
+            # the cap soundly rejects everything.
+            return float(_T2_SCREEN_MAX)
+    lo = 0.0
+    for _ in range(96):
+        mid = 0.5 * (lo + hi)
+        if mid <= lo or mid >= hi:
+            break
+        if nlp32(mid) < target:
+            lo = mid
+        else:
+            hi = mid
+    # ``lo`` is the largest probe still below the reduced target; one ulp
+    # down (in f32, the comparison precision on device) for strictness.
+    return float(np.nextafter(np.float32(lo), np.float32(0.0)))
+
+
+# Canonical chunk width for refining hit buffers (DESIGN.md §13).  Every
+# hit-valued refine — compact buffer, overflow fallback, dense audit,
+# tile reconstruction — evaluates in fixed (REFINE_WIDTH,) chunks so the
+# emitted bits cannot depend on the configured buffer capacity.  A full
+# SIMD multiple, so no scalar remainder lanes exist whose position could
+# change a bit.
+REFINE_WIDTH = 64
+
+
+@functools.lru_cache(maxsize=None)
+def _refine_exe(length: int, dof: float):
+    """One cached executable per (shape, dof).  XLA's codegen for the CF
+    loop is context-sensitive — the same values evaluated at a different
+    shape or inside a differently-fused program can differ in the last
+    f32 bit — so every emitted -log10 p must come out of *one* compiled
+    program.  This cache is that program."""
+    return jax.jit(lambda t: neglog10_p_from_t(t, dof))
+
+
+def refine_neglog10p(
+    t_values: np.ndarray, dof: float, *, width: int | None = None
+) -> np.ndarray:
+    """Canonical exact-tail refine (DESIGN.md §13).
+
+    Evaluates the exact 128-trip CF on a 1-D t buffer through the cached
+    per-(shape, dof) executable.  With ``width``, the buffer is zero-padded
+    and evaluated in fixed ``(width,)`` chunks; hit-valued callers always
+    pass ``width=REFINE_WIDTH``, so the sparse compact path, the overflow
+    fallback, the dense audit mode, and the full-tile reconstruction all
+    feed slot-identical chunks to one executable and produce bit-identical
+    values for the same t.  Padding lanes (t=0) map to nlp=0 and are
+    sliced off.
+    """
+    flat = np.ascontiguousarray(np.asarray(t_values, np.float32).ravel())
+    dof = float(dof)
+    if width is None:
+        exe = _refine_exe(int(flat.shape[0]), dof)
+        return np.asarray(exe(jnp.asarray(flat)))
+    width = int(width)
+    k = int(flat.shape[0])
+    n_chunks = max(1, -(-k // width))
+    buf = np.zeros(n_chunks * width, np.float32)
+    buf[:k] = flat
+    exe = _refine_exe(width, dof)
+    out = np.concatenate(
+        [np.asarray(exe(jnp.asarray(buf[i * width:(i + 1) * width])))
+         for i in range(n_chunks)]
+    )
+    return out[:k]
+
+
 def _log_gammaincc_cf(a: jax.Array, z: jax.Array) -> jax.Array:
     """``log( Gamma(a, z) / Gamma(a) )`` via the NR ``gcf`` continued
     fraction, valid (and fast) for ``z > a + 1``.  Log-space: never
     underflows."""
-    from jax.scipy.special import gammaln
-
     b0 = z + 1.0 - a
     c = jnp.full_like(z, 1.0 / _FPMIN)
     d = 1.0 / jnp.where(jnp.abs(b0) < _FPMIN, _FPMIN, b0)
@@ -236,8 +356,6 @@ def neglog10_sf_chi2(stat: jax.Array, k: jax.Array | float) -> jax.Array:
     Bulk lanes (sf not near underflow) use ``gammaincc`` directly; tail lanes
     (``z > a+1`` and sf tiny) use the log-space ``gcf`` continued fraction.
     """
-    from jax.scipy.special import gammaincc
-
     s = jnp.asarray(stat, jnp.float32)
     a = jnp.asarray(k, jnp.float32) * 0.5 * jnp.ones_like(s)
     half = s * 0.5

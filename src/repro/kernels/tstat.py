@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["tstat", "tstat_ref"]
+__all__ = ["screen_compact", "tstat", "tstat_ref"]
 
 
 def _tstat_kernel(r_ref, t_ref, *, dof: float, eps: float):
@@ -60,3 +60,82 @@ def tstat(
         r_pad, dof=float(dof), block_m=block_m, block_p=block_p, interpret=bool(interpret)
     )
     return t[:m_true, :p_true]
+
+
+def _screen_kernel(r_ref, t_ref, mask_ref, count_ref, *, dof: float,
+                   t2_screen: float, eps: float):
+    # Same arithmetic as _tstat_kernel, op for op: the sparse epilogue's t
+    # tile must be bitwise-identical to the dense fused path's.
+    r = jnp.clip(r_ref[...], -1.0, 1.0)
+    denom = jnp.maximum(1.0 - r * r, eps)
+    t = r * jax.lax.rsqrt(denom / dof)
+    t_ref[...] = t
+    keep = t * t >= t2_screen
+    mask_ref[...] = keep.astype(jnp.int8)
+    count_ref[0, 0] = jnp.sum(keep).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dof", "t2_screen", "block_m", "block_p", "interpret")
+)
+def _screen_padded(r, *, dof, t2_screen, block_m, block_p, interpret):
+    m, p = r.shape
+    gm, gp = m // block_m, p // block_p
+    return pl.pallas_call(
+        functools.partial(
+            _screen_kernel, dof=float(dof), t2_screen=float(t2_screen), eps=1e-12
+        ),
+        grid=(gm, gp),
+        in_specs=[pl.BlockSpec((block_m, block_p), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_m, block_p), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, block_p), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, p), jnp.float32),
+            jax.ShapeDtypeStruct((m, p), jnp.int8),
+            jax.ShapeDtypeStruct((gm, gp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(r)
+
+
+def screen_compact(
+    r: jax.Array,
+    dof: float,
+    t2_screen: float,
+    capacity: int,
+    *,
+    block_m: int = 256,
+    block_p: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused t-statistic + ``t^2 >= t2_screen`` survivor screen (DESIGN.md 13).
+
+    One Pallas pass emits the t tile, a survivor mask, and per-block survivor
+    counts; the wrapper then compacts survivor *flat indices* (row-major over
+    the unpadded tile, dense ``np.nonzero`` order) into a fixed ``capacity``
+    buffer with XLA's sized ``nonzero`` — true in-kernel compaction would need
+    a scatter/sort the TPU lacks a cheap lowering for, so only the screen and
+    the reduction fuse into the kernel. Returns ``(t, hit_idx, screen_count)``
+    where ``hit_idx`` pads exhausted slots with ``-1`` and ``screen_count`` is
+    the exact survivor total (trustworthy even when ``> capacity``).
+
+    ``t2_screen`` must be positive: padding lanes carry ``r = 0 -> t = 0`` and
+    must never survive the screen.
+    """
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    r = jnp.asarray(r, jnp.float32)
+    m_true, p_true = r.shape
+    pad_m = (-m_true) % block_m
+    pad_p = (-p_true) % block_p
+    r_pad = jnp.pad(r, ((0, pad_m), (0, pad_p)))
+    t, mask, counts = _screen_padded(
+        r_pad, dof=float(dof), t2_screen=float(t2_screen),
+        block_m=block_m, block_p=block_p, interpret=bool(interpret),
+    )
+    keep = mask[:m_true, :p_true].ravel() != 0
+    idx = jnp.nonzero(keep, size=int(capacity), fill_value=-1)[0].astype(jnp.int32)
+    return t[:m_true, :p_true], idx, jnp.sum(counts).astype(jnp.int32)

@@ -114,6 +114,13 @@ def build_scan_parser() -> argparse.ArgumentParser:
     ap.add_argument("--maf-min", type=float, default=0.0)
     ap.add_argument("--hit-threshold", type=float, default=7.301,
                     help="-log10 p threshold (default genome-wide 5e-8)")
+    ap.add_argument("--no-sparse-epilogue", action="store_true",
+                    help="compute the full dense -log10 p tile per cell "
+                         "instead of the threshold-compacted sparse epilogue "
+                         "(identical output, slower; for audits)")
+    ap.add_argument("--hit-capacity", type=int, default=4096,
+                    help="per-cell compacted hit-buffer slots; overflow "
+                         "falls back to the dense pull for that cell")
     ap.add_argument("--exclude-related", action="store_true")
     ap.add_argument("--multivariate", action="store_true")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -171,6 +178,8 @@ def cmd_scan(argv) -> None:
         multivariate=args.multivariate,
         checkpoint_dir=args.checkpoint_dir,
         input_dtype=args.input_dtype,
+        sparse_epilogue=not args.no_sparse_epilogue,
+        hit_capacity=args.hit_capacity,
     )
     # Writers resolve BEFORE the expensive amortized prepare (GRM/REML for
     # lmm can take hours at scale; a typo'd --writer must fail in
@@ -205,6 +214,7 @@ def cmd_scan(argv) -> None:
         "wall_s": wall,
         "markers_per_s": session.n_markers / wall,
         "engine": args.engine,
+        "sparse_epilogue": not args.no_sparse_epilogue,
         "writers": [w.name for w in writers],
         "genotype_shards": getattr(study.source, "n_shards", 1),
         "trait_block": args.trait_block,

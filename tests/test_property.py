@@ -543,3 +543,91 @@ def test_cell_commit_order_never_changes_checkpoint_merge(seed, perm_seed):
         for f in ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
     }
     assert got == ref
+
+
+# ---------------------------------------------------------- sparse epilogue
+
+
+_sparse_tiles = st.tuples(
+    st.integers(0, 2**31 - 1),       # tile seed
+    st.integers(4, 48),              # markers
+    st.integers(2, 12),              # traits
+    st.floats(1.0, 9.0),             # hit threshold (-log10 p)
+    st.sampled_from([10.0, 240.0, 998.0, 4097.0, 21000.0]),
+)
+
+
+def _sparse_views(r, t, dof, thr, plan):
+    """One synthetic cell twice: as a sparse-epilogue view (compacted
+    device buffers) and as a dense-mode view under the same screen plan —
+    exactly the two extraction paths the §13 contract says must agree."""
+    from repro.core.engines import HostBatch
+    from repro.core.sinks import BatchView
+    from repro.runtime.prefetch import MarkerBatch
+
+    m, p = t.shape
+    sparse_out = {
+        k: np.asarray(v)
+        for k, v in A.sparse_epilogue_outputs(
+            jnp.asarray(r), jnp.asarray(t), dof, plan
+        ).items()
+    }
+    sparse_out["r"] = r
+    sparse_out["t"] = t
+    best_row = np.argmax(t * t, axis=0).astype(np.int32)
+    dense_out = {
+        "r": r,
+        "t": t,
+        "batch_best_row": best_row,
+        "batch_best_t": t[best_row, np.arange(p)],
+    }
+    batch = MarkerBatch(index=0, lo=0, hi=m, source_id=0, local_lo=0, local_hi=m)
+    kw = dict(dof=dof, t2_screen=plan.t2_screen)
+    return (
+        BatchView(HostBatch(batch, ()), sparse_out, p, **kw),
+        BatchView(HostBatch(batch, ()), dense_out, p, **kw),
+        sparse_out,
+    )
+
+
+@given(_sparse_tiles)
+@settings(max_examples=20, deadline=None)
+def test_sparse_screen_preserves_hits_argmax_ties(case):
+    """Screening on t^2 + the canonical host-side refine preserves the hit
+    set, the per-trait argmax, and nlp tie-breaks bitwise vs dense-mode
+    extraction under the same plan — including the overflow fallback
+    (DESIGN.md §13)."""
+    from repro.core.sinks import extract_hits
+
+    seed, m, p, thr, dof = case
+    rng = np.random.default_rng(seed)
+    r = np.clip(rng.normal(0, 0.25, (m, p)), -0.999, 0.999).astype(np.float32)
+    # Inject exact +/- duplicates so the t^2 argmax tie-break is exercised.
+    if m >= 6:
+        r[1, 0], r[4, 0] = 0.5, -0.5
+        r[2, -1], r[3, -1] = 0.25, 0.25
+    t = np.asarray(S.t_from_r(jnp.asarray(r), dof))
+    for capacity in (r.size, 1):  # roomy, and minimum (overflow when hot)
+        plan = A.plan_sparse_epilogue(thr, dof, capacity=capacity)
+        assert plan is not None
+        sv, dv, out = _sparse_views(r, t, dof, thr, plan)
+        assert "batch_best_nlp" not in out and "hit_nlp" not in out
+        np.testing.assert_array_equal(
+            out["batch_best_row"], np.argmax(t * t, axis=0)
+        )
+        np.testing.assert_array_equal(sv.best_nlp, dv.best_nlp)
+        sh, ss = extract_hits(sv, thr)
+        dh, ds = extract_hits(dv, thr)
+        np.testing.assert_array_equal(sh, dh)
+        np.testing.assert_array_equal(ss, ds)
+        assert int(out["screen_count"]) >= len(sh)
+        if len(sh):
+            # the refined values stay within the CF's accuracy envelope of
+            # the full-tile evaluation (bit-equality to the tile is NOT
+            # promised — only sparse-vs-dense-mode equality is)
+            tile = np.asarray(S.neglog10_p_from_t(jnp.asarray(t), dof))
+            np.testing.assert_allclose(
+                ss[:, 2], tile[sh[:, 0], sh[:, 1]], rtol=1e-4, atol=1e-4
+            )
+            np.testing.assert_array_equal(ss[:, 0], r[sh[:, 0], sh[:, 1]])
+            np.testing.assert_array_equal(ss[:, 1], t[sh[:, 0], sh[:, 1]])

@@ -25,6 +25,83 @@ def test_neglog10_p_vs_scipy(nu):
     assert worst < 5e-3, worst
 
 
+@pytest.mark.parametrize("nu", [2, 5, 18, 100, 1000, 4095, 4097, 21000, 499000, 2000000])
+def test_neglog10_p_audit_full_envelope(nu):
+    """Exactness audit for the sparse-epilogue contract (DESIGN.md §13):
+    the same <5e-3 relative envelope as the spot-check above, but over a
+    dense t grid out to 1e3 — the range the compacted refine actually
+    evaluates (screened survivors are arbitrarily deep in the tail)."""
+    ts = np.concatenate(
+        [np.linspace(0.01, 30.0, 40), np.geomspace(30.0, 1000.0, 25)]
+    )
+    nlp = np.asarray(S.neglog10_p_from_t(jnp.asarray(ts, jnp.float32), float(nu)))
+    worst = 0.0
+    for t, ours in zip(ts, nlp):
+        ref = -(sps.t.logsf(t, nu) + math.log(2)) / math.log(10)
+        if math.isinf(ref) or math.isnan(ref):
+            assert ours > 300
+            continue
+        worst = max(worst, abs(float(ours) - ref) / max(abs(ref), 1e-2))
+    assert worst < 5e-3, (nu, worst)
+
+
+@pytest.mark.parametrize("nu", [10.0, 998.0, 4097.0, 21000.0])
+def test_refine_is_canonical_and_deterministic(nu, rng):
+    """XLA's CF codegen is fusion-context-sensitive: the same t evaluated
+    at a different buffer shape can differ in the last f32 bit.  The §13
+    bitwise contract therefore rests on ``refine_neglog10p``: one cached
+    executable per (shape, dof), so (a) repeated calls are bit-identical,
+    (b) a chunked width=W call over k <= W values equals the direct (W,)
+    call on the zero-padded buffer — exactly how the compact-buffer and
+    host-fallback paths line up — and (c) values stay within the CF's
+    accuracy envelope of the tile evaluation."""
+    t = rng.normal(0, 8, 10).astype(np.float32)
+    a = S.refine_neglog10p(t, nu, width=64)
+    b = S.refine_neglog10p(np.pad(t, (0, 54)), nu)
+    np.testing.assert_array_equal(a, b[:10])
+    np.testing.assert_array_equal(a, S.refine_neglog10p(t, nu, width=64))
+    # multi-chunk: 100 values through width=64 -> two chunks, same exe
+    big = rng.normal(0, 8, 100).astype(np.float32)
+    c = S.refine_neglog10p(big, nu, width=64)
+    assert c.shape == (100,)
+    np.testing.assert_array_equal(c[:64], S.refine_neglog10p(big[:64], nu))
+    # tolerance cross-check vs the in-step tile evaluation
+    tile = np.asarray(S.neglog10_p_from_t(jnp.asarray(big.reshape(10, 10)), nu))
+    np.testing.assert_allclose(c, tile.ravel(), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("thr", [1.0, 3.0, 7.301, 20.0])
+@pytest.mark.parametrize("nu", [5.0, 100.0, 998.0, 4097.0, 21000.0, 2000000.0])
+def test_t2_screen_threshold_conservative(thr, nu):
+    """The inverted screen threshold must never reject a true hit: every t
+    with nlp(t) >= thr must satisfy t^2 >= t2*.  Checked on a dense t grid
+    bracketing the threshold plus the deep tail."""
+    t2s = S.t2_screen_threshold(thr, nu)
+    assert t2s is not None and t2s > 0
+    tstar = math.sqrt(t2s)
+    ts = np.concatenate(
+        [
+            np.linspace(0.0, 3 * tstar, 400),
+            np.geomspace(max(tstar, 1.0), 1000.0, 50),
+        ]
+    ).astype(np.float32)
+    nlp = np.asarray(S.neglog10_p_from_t(jnp.asarray(ts), float(nu)))
+    hits = nlp >= thr
+    assert np.all(ts[hits] ** 2 >= t2s), (thr, nu, t2s)
+    # ... and it is tight: the screen admits only a thin sub-threshold
+    # margin, not half the tile.
+    assert float(S.neglog10_p_from_t(jnp.float32(tstar), float(nu))) > 0.5 * thr
+
+
+def test_t2_screen_threshold_degenerate():
+    # Unreachable target: the cap is returned and rejects everything real.
+    cap = S.t2_screen_threshold(1e6, 3.0)
+    assert cap is not None and cap >= 1e36
+    # No meaningful target (threshold margin swallows it): refuse to plan.
+    assert S.t2_screen_threshold(0.0, 100.0) is None
+    assert S.t2_screen_threshold(-1.0, 100.0) is None
+
+
 def test_neglog10_p_deep_tail_monotone():
     ts = jnp.asarray(np.linspace(0, 2000, 4001), jnp.float32)
     nlp = np.asarray(S.neglog10_p_from_t(ts, 21000.0))
