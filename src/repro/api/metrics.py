@@ -33,7 +33,10 @@ class CellTiming:
     n_markers: int
     n_traits: int
     wall_s: float              # compute + payload materialization
-    device: str = "-"          # executor slot label ("serial" | device repr)
+    # Executor slot label: "serial", "dev<i>", or — under a distributed
+    # scheduler backend — host-qualified "<host_id>/dev<i>", since N
+    # processes share one grid and a bare slot index is ambiguous.
+    device: str = "-"
     replayed: bool = False     # loaded from a checkpoint shard, not computed
     # wall_s split (DESIGN.md §13): device step (dispatch .. results ready)
     # vs host payload extraction (D2H pulls + hit globalization).  Both 0.0

@@ -36,7 +36,9 @@ for the curious).
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
+import socket
 import threading
 import time
 from dataclasses import dataclass
@@ -615,7 +617,8 @@ class MultiDeviceExecutor:
     kind = "multi-device"
 
     def __init__(self, prepared: "PreparedScan", *, n_devices: int,
-                 placement: str = "marker-major", lease_batches: int = 2):
+                 placement: str = "marker-major", lease_batches: int = 2,
+                 backend: str = "threads", backend_opts: dict | None = None):
         visible = jax.devices()
         if n_devices > len(visible):
             raise ValueError(
@@ -627,18 +630,36 @@ class MultiDeviceExecutor:
         self.devices = visible[:n_devices]
         self.placement = placement
         self.lease_batches = lease_batches
+        self.backend = backend
+        self.backend_opts = dict(backend_opts or {})
+        # Under a distributed backend the worker labels are host-qualified
+        # (CellTiming.device, summary.json worker stats): N processes share
+        # one grid, and "dev0" alone no longer names a unique slot.
+        host = self.backend_opts.get("host_id")
+        self._label_prefix = f"{host}/" if (backend != "threads" and host) else ""
         self._worker_stats: dict = {}
+        # Distributed-backend commit hook (set by the session): a cell MUST
+        # be committed to the checkpoint BEFORE its lease is marked done —
+        # peers treat a done lease as "in the manifest", so the reverse
+        # order would let a crash between the two lose the cell for good.
+        # Committing on the worker thread (not the consumer) is what makes
+        # the ordering enforceable.
+        self.commit: Callable[["CellResult"], object] | None = None
 
     def info(self) -> dict:
-        return {
+        out = {
             "kind": self.kind,
             "devices": len(self.devices),
             "placement": self.placement,
             "lease_batches": self.lease_batches,
+            "backend": self.backend,
             "workers": {
                 w: dataclasses.asdict(st) for w, st in sorted(self._worker_stats.items())
             },
         }
+        if self.backend != "threads":
+            out["host_id"] = self.backend_opts.get("host_id")
+        return out
 
     def cells(self, todo, pending) -> Iterator[tuple["CellResult", CellTiming]]:
         prep = self.prepared
@@ -648,6 +669,7 @@ class MultiDeviceExecutor:
             todo, prep.trait_blocks, pending,
             placement=self.placement, lease_size=self.lease_batches,
             n_workers=len(self.devices),
+            backend=self.backend, backend_opts=self.backend_opts,
         )
         # Bounded: in-flight materialized cells are capped per slot, so the
         # fleet cannot outrun a slow consumer into unbounded host RAM.
@@ -667,7 +689,7 @@ class MultiDeviceExecutor:
                         return
 
         def worker(wid: int, device) -> None:
-            label = f"dev{wid}"
+            label = f"{self._label_prefix}dev{wid}"
             slot = _Slot(prep, device=device, label=label)
             staged: tuple = (None, None, None)  # (batch index, host, dev args)
             try:
@@ -692,6 +714,8 @@ class MultiDeviceExecutor:
                         jax.block_until_ready(out)
                         t1 = time.perf_counter()
                         cell = _live_cell(hb, out, blk, cfg, prep.dof)
+                        if self.commit is not None:
+                            self.commit(cell)
                         t2 = time.perf_counter()
                         put((cell, CellTiming(
                             batch_index=batch.index,
@@ -730,7 +754,10 @@ class MultiDeviceExecutor:
                     yield item
         finally:
             stop.set()
-            # Unblock producers stuck on the bounded queue, then join.
+            # Unblock workers parked in a blocking claim (the shared-fs
+            # backend polls while peers hold undone leases) ...
+            sched.stop()
+            # ... and producers stuck on the bounded queue, then join.
             for t in threads:
                 while t.is_alive():
                     try:
@@ -788,6 +815,12 @@ class ScanSession:
         self.progress: Callable[[ScanMetrics], None] | None = None
         self.executor_info: dict | None = None
 
+        if self.config.exec_backend != "threads" and not self.config.checkpoint_dir:
+            raise ValueError(
+                f"exec_backend={self.config.exec_backend!r} coordinates "
+                "through the checkpoint directory (lease table + manifest); "
+                "pass checkpoint_dir="
+            )
         self.checkpoint: ScanCheckpoint | None = None
         if self.config.checkpoint_dir:
             # Engine state (e.g. the LMM's GRM spectrum hash) is part of the
@@ -848,23 +881,41 @@ class ScanSession:
 
     # --------------------------------------------------------------- events
 
+    def _backend_opts(self) -> dict:
+        """Construction kwargs for a distributed scheduler backend: the
+        lease table lives next to the checkpoint it coordinates."""
+        if self.config.exec_backend == "threads":
+            return {}
+        return {
+            "root": os.path.join(self.checkpoint.root, "leases"),
+            "host_id": self.config.host_id or f"{socket.gethostname()}-{os.getpid()}",
+            "lease_ttl": self.config.lease_ttl,
+        }
+
     def _make_executor(self):
-        if self.n_devices > 1:
+        # A distributed backend routes through the scheduler even on one
+        # device: the lease table is what coordinates this process with its
+        # peers, and the serial walk never touches it.
+        if self.n_devices > 1 or self.config.exec_backend != "threads":
             if self._step is not self.prepared.step:
                 # A swapped step (the shim's historical ``_step`` hook) is a
                 # single callable with a single prolog memo — it cannot be
                 # shared across worker threads, and silently ignoring it
                 # would drop the caller's patched math.
                 raise ValueError(
-                    "a custom step was supplied but devices > 1: the "
-                    "multi-device executor builds one step per device slot; "
-                    "run with devices=1 to use a swapped step"
+                    "a custom step was supplied but the scan runs on the "
+                    "multi-device executor (devices > 1 or a distributed "
+                    "exec backend), which builds one step per device slot; "
+                    "run with devices=1 on the threads backend to use a "
+                    "swapped step"
                 )
             return MultiDeviceExecutor(
                 self.prepared,
                 n_devices=self.n_devices,
                 placement=self.config.placement,
                 lease_batches=self.config.lease_batches,
+                backend=self.config.exec_backend,
+                backend_opts=self._backend_opts(),
             )
         return SerialExecutor(self.prepared, step=self._step)
 
@@ -884,6 +935,9 @@ class ScanSession:
         todo = self.prepared.batches
         pending: set[tuple[int, int]] | None = None   # (batch, block) cells
         if ckpt is not None and self.resume:
+            # Fold in cells peer processes committed since we opened the
+            # manifest (shared-fs hosts join an in-flight grid).
+            ckpt.refresh()
             pending = set(ckpt.pending_cells())
             # A marker batch is re-staged iff ANY of its cells is pending;
             # completed cells of a re-staged batch are skipped by the
@@ -892,12 +946,21 @@ class ScanSession:
             todo = [b for b in self.prepared.batches if b.index in batches_pending]
 
         executor = self._make_executor()
+        distributed = getattr(executor, "backend", "threads") != "threads"
+        if ckpt is not None and distributed:
+            # Shared-fs ordering contract: commit BEFORE the lease-done
+            # marker (on the worker thread), so peers that see "done" can
+            # trust the manifest.  The consumer loop then must not commit
+            # again.
+            executor.commit = lambda cell: ckpt.commit_cell(
+                cell.batch_index, cell.block_index, cell.payload()
+            )
         computed: set[tuple[int, int]] = set()
         self.metrics.start()
         stream = executor.cells(todo, pending)
         try:
             for cell, timing in stream:
-                if ckpt is not None:
+                if ckpt is not None and not distributed:
                     # Commit the shard, then the manifest — a crash between
                     # the two just re-does one grid cell.  Commit-before-
                     # yield makes the manifest the multi-device coordination
@@ -918,7 +981,11 @@ class ScanSession:
             self.metrics.finish()
 
         # Resume path: replay committed-but-not-recomputed cells' shards.
+        # Refresh first: under shared-fs the cells this process lost to its
+        # peers were committed by them, and every host must still emit the
+        # COMPLETE grid (that is what makes N hosts' outputs identical).
         if ckpt is not None:
+            ckpt.refresh()
             for bidx, kidx in sorted(ckpt.completed_cells() - computed):
                 t0 = time.perf_counter()
                 cell = CellResult.from_shard(bidx, kidx, ckpt.load_cell(bidx, kidx))

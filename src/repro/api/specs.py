@@ -107,8 +107,17 @@ class ExecSpec:
     # Work items leased per scheduler claim.  The scheduler caps this at
     # n_items / n_devices so a short scan still spreads over every slot.
     lease_batches: int = 2
+    # Scheduler backend (DESIGN.md §14): "threads" keeps the lease table
+    # in-process; "shared-fs" puts it on the shared filesystem next to the
+    # checkpoint (requires checkpoint_dir), letting N independent processes
+    # on as many hosts drain one grid elastically.
+    backend: str = "threads"
+    host_id: str | None = None     # lease-table identity; None = host-pid
+    lease_ttl: float = 60.0        # heartbeat expiry before peers steal (s)
 
     def validate(self) -> None:
+        from repro.runtime.workqueue import available_backends
+
         if self.devices < 0:
             raise ValueError(f"ExecSpec.devices must be >= 0, got {self.devices}")
         if self.placement not in PLACEMENTS:
@@ -118,6 +127,15 @@ class ExecSpec:
         if self.lease_batches < 1:
             raise ValueError(
                 f"ExecSpec.lease_batches must be >= 1, got {self.lease_batches}"
+            )
+        if self.backend not in available_backends():
+            raise ValueError(
+                f"unknown scheduler backend {self.backend!r}; "
+                f"available: {available_backends()}"
+            )
+        if self.lease_ttl <= 0:
+            raise ValueError(
+                f"ExecSpec.lease_ttl must be positive, got {self.lease_ttl}"
             )
 
 
@@ -166,6 +184,9 @@ class ScanConfig:
     devices: int = 1               # executor slots; 0 = every visible device
     placement: str = "marker-major"  # "marker-major" | "trait-major"
     lease_batches: int = 2         # scheduler lease size (work items/claim)
+    exec_backend: str = "threads"  # scheduler backend: "threads" | "shared-fs"
+    host_id: str | None = None     # shared-fs lease identity (None: host-pid)
+    lease_ttl: float = 60.0        # shared-fs heartbeat expiry (seconds)
 
     def fingerprint_payload(self) -> dict:
         d = dataclasses.asdict(self)
@@ -177,6 +198,7 @@ class ScanConfig:
         for k in ("prefetch_depth", "io_workers", "checkpoint_dir",
                   "panel_resident_blocks", "spill_dir", "hit_spill_rows",
                   "devices", "placement", "lease_batches",
+                  "exec_backend", "host_id", "lease_ttl",
                   # bitwise-neutral epilogue strategy (§13): a scan
                   # checkpointed sparse resumes dense and vice versa
                   "sparse_epilogue", "hit_capacity"):
@@ -239,6 +261,11 @@ class ScanConfig:
             raise ValueError(f"unknown sharding mode {mode!r}")
         if hit_capacity < 1:
             raise ValueError(f"hit_capacity must be >= 1, got {hit_capacity}")
+        if executor.backend != "threads" and checkpoint_dir is None:
+            raise ValueError(
+                f"ExecSpec.backend={executor.backend!r} coordinates through "
+                "the checkpoint directory; pass checkpoint_dir="
+            )
         lmm = lmm or LmmSpec()
         return cls(
             batch_markers=grid.batch_markers,
@@ -270,6 +297,9 @@ class ScanConfig:
             devices=executor.devices,
             placement=executor.placement,
             lease_batches=executor.lease_batches,
+            exec_backend=executor.backend,
+            host_id=executor.host_id,
+            lease_ttl=executor.lease_ttl,
         )
 
     def grid_spec(self) -> GridSpec:
@@ -304,4 +334,7 @@ class ScanConfig:
             devices=self.devices,
             placement=self.placement,
             lease_batches=self.lease_batches,
+            backend=self.exec_backend,
+            host_id=self.host_id,
+            lease_ttl=self.lease_ttl,
         )

@@ -100,6 +100,22 @@ def build_scan_parser() -> argparse.ArgumentParser:
     ex.add_argument("--lease-batches", type=int, default=2,
                     help="work items leased per scheduler claim (work "
                          "stealing splits at marker-batch granularity)")
+    ex.add_argument("--exec-backend", default="threads",
+                    choices=["threads", "shared-fs"],
+                    help="scheduler backend: threads keeps the lease table "
+                         "in-process; shared-fs puts it on the filesystem "
+                         "next to --checkpoint-dir so N independent "
+                         "processes (across hosts) drain one grid — run the "
+                         "same command on each host")
+    ex.add_argument("--host-id", default=None,
+                    help="this process's identity in the shared-fs lease "
+                         "table (default hostname-pid); must be unique per "
+                         "live process")
+    ex.add_argument("--lease-ttl", type=float, default=60.0,
+                    help="shared-fs heartbeat expiry in seconds: a lease "
+                         "not refreshed for this long counts as a dead "
+                         "host's and is stolen (safe either way — cells "
+                         "are idempotent; this only tunes reclaim latency)")
     ap.add_argument("--progress", action="store_true",
                     help="live per-cell progress line on stderr (auto when "
                          "stderr is a tty)")
@@ -138,6 +154,12 @@ def cmd_scan(argv) -> None:
     from repro.api import ExecSpec, GridSpec, IOSpec, LmmSpec, Study, get_writer
 
     args = build_scan_parser().parse_args(argv)
+    if args.exec_backend != "threads" and not args.checkpoint_dir:
+        raise SystemExit(
+            f"--exec-backend {args.exec_backend} coordinates processes "
+            "through the checkpoint directory (lease table + manifest); "
+            "pass --checkpoint-dir (the SAME path on every host)"
+        )
     os.makedirs(args.out, exist_ok=True)
 
     try:
@@ -170,7 +192,9 @@ def cmd_scan(argv) -> None:
         io=IOSpec(io_workers=args.io_workers, spill_dir=args.out,
                   hit_spill_rows=args.hit_spill_rows),
         executor=ExecSpec(devices=args.devices, placement=args.placement,
-                          lease_batches=args.lease_batches),
+                          lease_batches=args.lease_batches,
+                          backend=args.exec_backend, host_id=args.host_id,
+                          lease_ttl=args.lease_ttl),
         options=AssocOptions(dof_mode=args.dof_mode, precision=args.precision),
         mode=args.mode,
         hit_threshold_nlp=args.hit_threshold,

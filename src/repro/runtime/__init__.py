@@ -11,7 +11,13 @@ from repro.runtime.sharding import (
 from repro.runtime.checkpoint import ScanCheckpoint, TrainCheckpoint
 from repro.runtime.prefetch import Prefetcher
 from repro.runtime.scheduler import CellRun, CellScheduler
-from repro.runtime.workqueue import WorkQueue
+from repro.runtime.workqueue import (
+    FsWorkQueue,
+    WorkQueue,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 
 __all__ = [
     "LogicalAxisRules",
@@ -24,4 +30,8 @@ __all__ = [
     "CellRun",
     "CellScheduler",
     "WorkQueue",
+    "FsWorkQueue",
+    "register_backend",
+    "get_backend",
+    "available_backends",
 ]

@@ -15,6 +15,7 @@ offline, and the format must stay greppable in production triage.)
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -23,6 +24,11 @@ import time
 from dataclasses import dataclass
 
 import numpy as np
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: merge still runs, just without the advisory lock
+    fcntl = None
 
 __all__ = ["ScanCheckpoint", "TrainCheckpoint", "config_fingerprint"]
 
@@ -178,27 +184,97 @@ class ScanCheckpoint:
 
     # --------------------------------------------------------------- commits
 
+    @contextlib.contextmanager
+    def _commit_lock(self):
+        """Advisory flock serializing manifest read-merge-write on one host
+        (and across hosts where the shared FS honors flock).  Best-effort:
+        where locking is unavailable the atomic-rename merge below still
+        converges — concurrent writers can each see the other's entries via
+        re-read, and a lost race costs at most a recomputed idempotent cell,
+        never a corrupt manifest."""
+        if fcntl is None:
+            yield
+            return
+        lock_path = os.path.join(self.root, ".manifest.lock")
+        try:
+            fd = os.open(lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+        except OSError:
+            yield
+            return
+        try:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_EX)
+            except OSError:
+                pass  # FS without flock support (some NFS mounts)
+            yield
+        finally:
+            os.close(fd)
+
+    def _locked_manifest_update(self, mutate) -> None:
+        """Re-read, merge, mutate, atomically publish the manifest.
+
+        ``commit_cell`` used to rewrite the file from the process-local
+        dict, so two processes sharing a checkpoint dir dropped each
+        other's ``completed`` entries (classic lost update).  Now every
+        manifest write folds the on-disk state in first: ``completed`` is
+        the union (shard payloads are deterministic, so colliding keys
+        agree), ``failed`` is the union minus anything since completed."""
+        with self._commit_lock():
+            disk = self._load_manifest()
+            if disk is not None:
+                merged_completed = {**disk.get("completed", {}), **self._manifest["completed"]}
+                merged_failed = {**disk.get("failed", {}), **self._manifest["failed"]}
+                self._manifest["completed"] = merged_completed
+                self._manifest["failed"] = {
+                    k: v for k, v in merged_failed.items() if k not in merged_completed
+                }
+            mutate(self._manifest)
+            self._manifest["updated"] = time.time()
+            _atomic_write_json(self._manifest_path, self._manifest)
+
+    def refresh(self) -> None:
+        """Fold the on-disk manifest into memory without writing — lets a
+        shared-fs host see cells its peers committed (pending computation,
+        final replay) without racing a write of its own."""
+        disk = self._load_manifest()
+        if disk is None:
+            return
+        completed = {**disk.get("completed", {}), **self._manifest["completed"]}
+        failed = {**disk.get("failed", {}), **self._manifest["failed"]}
+        self._manifest["completed"] = completed
+        self._manifest["failed"] = {k: v for k, v in failed.items() if k not in completed}
+
     def commit_cell(self, batch: int, block: int, arrays: dict[str, np.ndarray]) -> str:
         """Write the shard, then the manifest — in that order, so a crash
-        between the two just re-does one grid cell."""
+        between the two just re-does one grid cell.  The manifest write is
+        a read-merge-write (see ``_locked_manifest_update``), so concurrent
+        committers in different processes never drop each other's cells."""
         shard = os.path.join(self.root, self._shard_name(batch, block))
         tmp = shard + ".tmp.npz"
         np.savez_compressed(tmp, **arrays)
         os.replace(tmp, shard)
         key = self._key(batch, block)
-        self._manifest["completed"][key] = os.path.basename(shard)
-        self._manifest["failed"].pop(key, None)
-        self._manifest["updated"] = time.time()
-        _atomic_write_json(self._manifest_path, self._manifest)
+        base = os.path.basename(shard)
+
+        def mutate(m):
+            m["completed"][key] = base
+            m["failed"].pop(key, None)
+
+        self._locked_manifest_update(mutate)
         return shard
 
     def commit_batch(self, idx: int, arrays: dict[str, np.ndarray]) -> str:
         return self.commit_cell(idx, 0, arrays)
 
     def record_failure(self, idx: int, err: str, block: int = 0) -> None:
-        self._manifest["failed"][self._key(idx, block)] = err[:500]
-        self._manifest["updated"] = time.time()
-        _atomic_write_json(self._manifest_path, self._manifest)
+        key = self._key(idx, block)
+        msg = err[:500]
+
+        def mutate(m):
+            if key not in m["completed"]:
+                m["failed"][key] = msg
+
+        self._locked_manifest_update(mutate)
 
     def load_cell(self, batch: int, block: int) -> dict[str, np.ndarray]:
         name = self._manifest["completed"][self._key(batch, block)]

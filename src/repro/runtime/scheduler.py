@@ -36,7 +36,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Sequence
 
-from repro.runtime.workqueue import WorkerStats, WorkQueue
+from repro.runtime.workqueue import WorkerStats, get_backend
 
 __all__ = ["CellRun", "CellScheduler", "PLACEMENTS"]
 
@@ -77,6 +77,8 @@ class CellScheduler:
         placement: str = "marker-major",
         lease_size: int = 2,
         n_workers: int | None = None,
+        backend: str = "threads",
+        backend_opts: dict | None = None,
     ):
         if placement not in PLACEMENTS:
             raise ValueError(
@@ -104,7 +106,24 @@ class CellScheduler:
         if n_workers is not None:
             lease_size = min(lease_size, max(1, len(items) // max(1, n_workers)))
         self.lease_size = max(1, lease_size)
-        self._queue = WorkQueue(len(items), lease_size=self.lease_size)
+        self.backend = backend
+        self._queue = get_backend(backend)(
+            len(items),
+            keys=[self._item_key(run) for run in items],
+            lease_size=self.lease_size,
+            **(backend_opts or {}),
+        )
+
+    def _item_key(self, run: CellRun) -> str:
+        """Canonical cross-host identity of a work item.  Distributed
+        backends coordinate by key, and hosts resuming with different
+        local pending filters must agree on what each key means: under
+        marker-major an item is the batch (whatever subset of its blocks
+        is pending locally — the checkpoint dedups the overlap); under
+        trait-major it is the single (batch, block) cell."""
+        if self.placement == "marker-major":
+            return f"b{run.batch.index:06d}"
+        return f"b{run.batch.index:06d}k{run.blocks[0].index:04d}"
 
     @property
     def n_items(self) -> int:
@@ -130,3 +149,9 @@ class CellScheduler:
 
     def stats(self) -> dict[str, WorkerStats]:
         return self._queue.stats()
+
+    def stop(self) -> None:
+        """Unblock any worker parked in a blocking ``claim`` (distributed
+        backends poll while peers hold undone leases) — executor teardown
+        must call this before joining its worker threads."""
+        self._queue.stop()

@@ -6,19 +6,75 @@ un-started tail of its lease re-assigned to finished hosts (work stealing).
 Batches are idempotent — the checkpoint manifest deduplicates double
 completion, so stealing is always safe.
 
-The same class drives the single-host thread pool in tests and examples;
-at true multi-host scale the lease table would live in the shared filesystem
-next to the manifest (same atomic-rename discipline), which is how
-``examples/ukb_screening.py`` exercises it.
+Two backends implement the same lease/steal discipline (the scheduler
+backend is a registry, like engines and writers):
+
+    "threads"    ``WorkQueue`` — the in-process queue that drives one
+                 host's device worker threads (DESIGN.md §12).
+    "shared-fs"  ``FsWorkQueue`` — the lease table moved to the shared
+                 filesystem next to the checkpoint manifest (DESIGN.md
+                 §14): one JSON lease file per work item, claimed with
+                 the same write-tmp/fsync/atomic-publish discipline the
+                 manifest uses, heartbeat timestamps refreshed by a
+                 daemon thread, and expiry-based stealing so a
+                 SIGKILL'd host's un-started lease tail is reclaimed by
+                 the survivors.  N independent processes (on as many
+                 hosts as share the filesystem) drain one grid.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
+import socket
+import tempfile
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-__all__ = ["WorkQueue", "WorkerStats"]
+__all__ = [
+    "WorkQueue",
+    "FsWorkQueue",
+    "WorkerStats",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+
+# ------------------------------------------------------------------ registry
+
+
+_BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Register a scheduler backend class under ``name`` (decorator) — the
+    same plug-in idiom as ``core.engines.register_engine`` and
+    ``api.writers.register_writer``.  Backends share the ``WorkQueue``
+    surface: ``claim`` / ``complete`` / ``remaining`` / ``stats`` /
+    ``stop``, constructed as ``cls(n_items, keys=..., lease_size=...,
+    **backend_opts)``."""
+
+    def deco(cls: type) -> type:
+        _BACKENDS[name] = cls
+        cls.backend_name = name
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> type:
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown scheduler backend {name!r}; available: {available_backends()}"
+        )
+    return _BACKENDS[name]
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
 
 
 @dataclass
@@ -27,9 +83,11 @@ class WorkerStats:
     completed: int = 0
     stolen_from: int = 0
     stolen_by: int = 0
+    reclaimed: int = 0     # expired foreign leases taken over (shared-fs only)
     busy_s: float = 0.0
 
 
+@register_backend("threads")
 class WorkQueue:
     """Lease-based batch distribution with work stealing.
 
@@ -38,7 +96,18 @@ class WorkQueue:
     from the slowest worker.  Thread-safe; deterministic completion set.
     """
 
-    def __init__(self, n_items: int, *, lease_size: int = 8, skip: set[int] | None = None):
+    def __init__(
+        self,
+        n_items: int,
+        *,
+        lease_size: int = 8,
+        skip: set[int] | None = None,
+        keys: list[str] | None = None,
+    ):
+        # ``keys`` is the cross-host item identity used by distributed
+        # backends; the in-process queue moves plain indices and ignores it
+        # (accepted so the scheduler constructs every backend uniformly).
+        del keys
         pending = [i for i in range(n_items) if not skip or i not in skip]
         self._pending: list[int] = pending
         self._leases: dict[str, list[int]] = {}
@@ -53,9 +122,19 @@ class WorkQueue:
         Returns copies, not the live ``WorkerStats`` objects: callers hold
         the result across further claims (progress lines, summary.json),
         and handing out the mutable internals would let them corrupt — or
-        observe mid-update — the queue's own accounting."""
+        observe mid-update — the queue's own accounting.  The in-flight
+        interval of a worker mid-claim is folded into its *copy* (never
+        the live state), so ``busy_s`` is monotone across snapshots and a
+        long cell shows up in ``--progress`` utilization while it runs."""
         with self._lock:
-            return {w: dataclasses.replace(st) for w, st in self._stats.items()}
+            now = time.monotonic()
+            out: dict[str, WorkerStats] = {}
+            for w, st in self._stats.items():
+                snap = dataclasses.replace(st)
+                if w in self._t0:
+                    snap.busy_s += now - self._t0[w]
+                out[w] = snap
+            return out
 
     def remaining(self) -> int:
         with self._lock:
@@ -66,8 +145,13 @@ class WorkQueue:
         with self._lock:
             st = self._stats.setdefault(worker, WorkerStats())
             now = time.monotonic()
+            # Fold the busy interval since the last claim and POP the mark:
+            # a drained/unstealable claim below returns None, and a polling
+            # worker must not re-fold the same interval (idle spin is not
+            # busy time).  The mark is re-armed only when an item is handed
+            # out.
             if worker in self._t0:
-                st.busy_s += now - self._t0[worker]
+                st.busy_s += now - self._t0.pop(worker)
             lease = self._leases.setdefault(worker, [])
             if not lease:
                 if self._pending:
@@ -106,3 +190,370 @@ class WorkQueue:
             st.completed += 1
             if worker in self._t0:
                 st.busy_s += time.monotonic() - self._t0.pop(worker)
+
+    def stop(self) -> None:
+        """Teardown hook (no-op: in-process claims never block)."""
+
+
+# -------------------------------------------------------- shared-fs backend
+
+
+def _publish_exclusive(path: str, payload: dict) -> bool:
+    """Atomically publish ``payload`` at ``path`` iff nothing is there.
+
+    write-tmp + fsync (the manifest's discipline), then ``os.link`` —
+    which, unlike ``os.replace``, FAILS when the target exists: the
+    exclusive-create that makes a fresh lease claim race-free across
+    hosts (hard links are atomic on POSIX shared filesystems, NFS
+    included)."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        try:
+            os.link(tmp, path)
+            return True
+        except FileExistsError:
+            return False
+    finally:
+        os.unlink(tmp)
+
+
+def _overwrite_json(path: str, payload: dict) -> None:
+    """Atomic clobbering write (heartbeat refresh, steal, done marker) —
+    write-tmp/fsync/``os.replace``, byte-for-byte the manifest's idiom."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+@register_backend("shared-fs")
+class FsWorkQueue:
+    """Shared-filesystem lease table: elastic multi-host work distribution.
+
+    One JSON lease file per work item under ``root/`` (DESIGN.md §14):
+
+        lease_<key>.json   {key, host, worker, claimed, heartbeat,
+                            state: "leased" | "done", steals}
+
+    Claim protocol:
+
+    * **fresh claim** — exclusive atomic publish of the lease file
+      (``os.link``); losing the race means another host owns the item.
+    * **heartbeat** — a daemon thread refreshes the ``heartbeat`` wall
+      timestamp of every lease this host holds (every ``lease_ttl / 4``),
+      so liveness is observable through the filesystem alone.
+    * **expiry steal** — a lease whose heartbeat is older than
+      ``lease_ttl`` belongs to a dead (or stalled) host: any survivor
+      atomically overwrites it with its own lease and recomputes the item.
+      A SIGKILL kills the heartbeat thread with the process, so the
+      victim's whole un-started lease tail expires and is reclaimed.
+    * **done** — completion overwrites the lease with ``state: "done"``;
+      done leases are never stolen and tell late joiners to skip.
+
+    Safety does NOT depend on mutual exclusion: two hosts that race a
+    steal (or a too-small ``lease_ttl`` under a long cell) both compute
+    the item, and the checkpoint manifest deduplicates the idempotent,
+    bit-identical commits.  ``lease_ttl`` is a liveness/efficiency knob,
+    never a correctness one.
+
+    Items are identified by ``keys`` — canonical strings that mean the
+    same grid cells on every host regardless of each host's local pending
+    filter — and ``claim`` returns the *local* index of the claimed key.
+    ``claim`` blocks (polling) while other hosts still hold undone items,
+    so a surviving host drains a dead host's tail instead of exiting
+    early; pass ``block=False`` to poll once.  Hosts' wall clocks are
+    assumed loosely synchronized (well within ``lease_ttl``), the usual
+    shared-filesystem-cluster contract.
+    """
+
+    def __init__(
+        self,
+        n_items: int,
+        *,
+        keys: list[str] | None = None,
+        lease_size: int = 8,
+        skip: set[int] | None = None,
+        root: str | None = None,
+        host_id: str | None = None,
+        lease_ttl: float = 60.0,
+        poll_s: float | None = None,
+    ):
+        if root is None:
+            raise ValueError("FsWorkQueue needs root= (the shared lease directory)")
+        if lease_ttl <= 0:
+            raise ValueError(f"lease_ttl must be positive, got {lease_ttl}")
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        all_keys = (
+            list(keys) if keys is not None else [f"{i:06d}" for i in range(n_items)]
+        )
+        if len(all_keys) != n_items:
+            raise ValueError(f"{len(all_keys)} keys for {n_items} items")
+        if len(set(all_keys)) != len(all_keys):
+            raise ValueError("work item keys must be unique")
+        self._key_of: dict[int, str] = dict(enumerate(all_keys))
+        self._index_of: dict[str, int] = {k: i for i, k in enumerate(all_keys)}
+        self._keys: list[str] = [
+            k for i, k in enumerate(all_keys) if not skip or i not in skip
+        ]
+        self.host_id = host_id or f"{socket.gethostname()}-{os.getpid()}"
+        self.lease_ttl = float(lease_ttl)
+        self.poll_s = (
+            float(poll_s)
+            if poll_s is not None
+            else max(0.05, min(1.0, self.lease_ttl / 10.0))
+        )
+        self._lease_size = max(1, lease_size)
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._stats: dict[str, WorkerStats] = {}
+        self._t0: dict[str, float] = {}
+        self._leases: dict[str, list[str]] = {}   # worker -> claimed, unserved
+        self._held: set[str] = set()              # our live FS leases
+        self._records: dict[str, dict] = {}       # held key -> last lease JSON
+        self._not_done: set[str] = set(self._keys)
+        # Hosts start their fresh-claim scan at a host-hash offset so a
+        # simultaneously-starting fleet mostly claims disjoint regions
+        # first (fewer lost races; results are identical regardless).
+        n = max(1, len(self._keys))
+        self._scan0 = int(hashlib.sha256(self.host_id.encode()).hexdigest(), 16) % n
+        self._hb_thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------ lease files
+
+    def _lease_path(self, key: str) -> str:
+        return os.path.join(self.root, f"lease_{key}.json")
+
+    def _record(self, key: str, worker: str, state: str, *, steals: int = 0) -> dict:
+        now = time.time()
+        return {
+            "key": key,
+            "host": self.host_id,
+            "worker": worker,
+            "claimed": now,
+            "heartbeat": now,
+            "state": state,
+            "steals": steals,
+        }
+
+    def _read_lease(self, key: str) -> dict | None:
+        """None: no lease file (unclaimed).  A torn/corrupt file reads as an
+        empty record — its heartbeat then falls back to the file mtime, so
+        a crashed writer's leftovers still expire and get reclaimed."""
+        try:
+            with open(self._lease_path(key)) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+        except (json.JSONDecodeError, OSError):
+            return {}
+
+    # -------------------------------------------------------------- heartbeat
+
+    def _ensure_heartbeat_locked(self) -> None:
+        if self._hb_thread is None and not self._stop.is_set():
+            t = threading.Thread(
+                target=self._heartbeat_loop,
+                daemon=True,
+                name=f"fs-lease-heartbeat-{self.host_id}",
+            )
+            self._hb_thread = t
+            t.start()
+
+    def _heartbeat_loop(self) -> None:
+        interval = max(0.05, self.lease_ttl / 4.0)
+        while not self._stop.wait(interval):
+            with self._lock:
+                now = time.time()
+                for key in sorted(self._held):
+                    rec = self._records.get(key)
+                    if rec is None or rec.get("state") == "done":
+                        continue
+                    rec["heartbeat"] = now
+                    try:
+                        _overwrite_json(self._lease_path(key), rec)
+                    except OSError:
+                        # A transiently unwritable shared FS must not kill
+                        # the heartbeat; worst case the lease expires and a
+                        # peer recomputes (idempotent).
+                        pass
+
+    # ------------------------------------------------------------------ claim
+
+    def claim(self, worker: str, *, block: bool = True) -> int | None:
+        """Local index of the next work item, or None when every item is
+        done (all hosts) or ``stop()`` was called.  While peers still hold
+        undone leases this polls — waiting out either their completion or
+        their expiry — unless ``block=False``."""
+        while True:
+            with self._lock:
+                st = self._stats.setdefault(worker, WorkerStats())
+                now = time.monotonic()
+                if worker in self._t0:
+                    st.busy_s += now - self._t0.pop(worker)
+                if not self._stop.is_set():
+                    idx = self._next_locked(worker, st)
+                    if idx is not None:
+                        st.claimed += 1
+                        self._t0[worker] = time.monotonic()
+                        return idx
+                drained = not self._not_done
+            if drained or not block or self._stop.is_set():
+                return None
+            self._stop.wait(self.poll_s)
+
+    def _next_locked(self, worker: str, st: WorkerStats) -> int | None:
+        lease = self._leases.setdefault(worker, [])
+        if not lease:
+            self._refill_locked(worker, lease)
+        if not lease:
+            self._steal_local_locked(worker, st, lease)
+        if not lease:
+            self._steal_expired_locked(worker, st, lease)
+        if not lease:
+            return None
+        return self._index_of[lease.pop(0)]
+
+    def _rotated_keys(self):
+        return self._keys[self._scan0:] + self._keys[: self._scan0]
+
+    def _refill_locked(self, worker: str, lease: list[str]) -> None:
+        """Claim up to ``lease_size`` unclaimed items via exclusive publish."""
+        try:
+            existing = set(os.listdir(self.root))
+        except OSError:
+            return
+        for key in self._rotated_keys():
+            if len(lease) >= self._lease_size:
+                break
+            if key not in self._not_done or key in self._held:
+                continue
+            if os.path.basename(self._lease_path(key)) in existing:
+                continue
+            rec = self._record(key, worker, "leased")
+            try:
+                claimed = _publish_exclusive(self._lease_path(key), rec)
+            except OSError:
+                continue
+            if claimed:
+                self._records[key] = rec
+                self._held.add(key)
+                lease.append(key)
+                self._ensure_heartbeat_locked()
+
+    def _steal_local_locked(self, worker: str, st: WorkerStats, lease: list[str]) -> None:
+        """Rebalance within this host first (no FS traffic): same
+        largest-victim/half-tail/deterministic-tie-break rule as the
+        threads backend.  The moved keys stay in ``_held`` — the FS lease
+        is per-host, only the serving worker changes."""
+        candidates = [
+            (len(l), w) for w, l in self._leases.items() if w != worker and len(l) > 1
+        ]
+        if not candidates:
+            return
+        victim = max(candidates)[1]
+        vlease = self._leases[victim]
+        steal = len(vlease) // 2
+        if steal:
+            lease.extend(vlease[-steal:])
+            del vlease[-steal:]
+            self._stats[victim].stolen_from += steal
+            st.stolen_by += steal
+
+    def _steal_expired_locked(self, worker: str, st: WorkerStats, lease: list[str]) -> None:
+        """Reclaim leases whose heartbeat expired (dead host's tail).  The
+        scan doubles as done-marker discovery: peers' completed items are
+        retired from ``_not_done`` here."""
+        now = time.time()
+        for key in self._rotated_keys():
+            if len(lease) >= self._lease_size:
+                break
+            if key not in self._not_done or key in self._held:
+                continue
+            rec = self._read_lease(key)
+            if rec is None:
+                continue  # unclaimed: the next refill's exclusive publish wins it
+            if rec.get("state") == "done":
+                self._not_done.discard(key)
+                continue
+            hb = rec.get("heartbeat")
+            if hb is None:
+                try:
+                    hb = os.path.getmtime(self._lease_path(key))
+                except OSError:
+                    continue
+            if now - float(hb) <= self.lease_ttl:
+                continue
+            new = self._record(key, worker, "leased", steals=int(rec.get("steals", 0) or 0) + 1)
+            try:
+                _overwrite_json(self._lease_path(key), new)
+            except OSError:
+                continue
+            self._records[key] = new
+            self._held.add(key)
+            lease.append(key)
+            st.stolen_by += 1
+            st.reclaimed += 1
+            self._ensure_heartbeat_locked()
+
+    # --------------------------------------------------------------- complete
+
+    def complete(self, worker: str, idx: int) -> None:
+        key = self._key_of[idx]
+        with self._lock:
+            st = self._stats.setdefault(worker, WorkerStats())
+            st.completed += 1
+            if worker in self._t0:
+                st.busy_s += time.monotonic() - self._t0.pop(worker)
+            rec = self._records.pop(key, None) or self._record(key, worker, "done")
+            rec["state"] = "done"
+            rec["heartbeat"] = time.time()
+            _overwrite_json(self._lease_path(key), rec)
+            self._held.discard(key)
+            self._not_done.discard(key)
+
+    # ------------------------------------------------------------- inspection
+
+    def remaining(self) -> int:
+        """Undone items across ALL hosts (reads peers' done markers)."""
+        with self._lock:
+            for key in sorted(self._not_done):
+                if key in self._held:
+                    continue
+                rec = self._read_lease(key)
+                if rec is not None and rec.get("state") == "done":
+                    self._not_done.discard(key)
+            return len(self._not_done)
+
+    def stats(self) -> dict[str, WorkerStats]:
+        """Snapshot copies with the in-flight interval folded in — the same
+        contract as the threads backend (this host's workers only; peers
+        account for themselves)."""
+        with self._lock:
+            now = time.monotonic()
+            out: dict[str, WorkerStats] = {}
+            for w, st in self._stats.items():
+                snap = dataclasses.replace(st)
+                if w in self._t0:
+                    snap.busy_s += now - self._t0[w]
+                out[w] = snap
+            return out
+
+    def stop(self) -> None:
+        """Unblock polling claims and stop the heartbeat thread.  Held
+        leases are left to expire — exactly what a crash would do, and how
+        survivors are meant to pick the items up."""
+        self._stop.set()

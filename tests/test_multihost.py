@@ -1,0 +1,437 @@
+"""The shared-fs scheduler backend (DESIGN.md §14).
+
+The contract under test: N independent processes pointed at one checkpoint
+directory drain one scan grid through the filesystem lease table, and every
+one of them emits outputs byte-identical to a serial single-process scan —
+under any kill/join sequence.  Units cover the lease/steal/expiry protocol
+and the manifest's read-merge-write; subprocesses cover two live hosts and
+a SIGKILL'd host whose tail a survivor reclaims.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
+from repro.runtime.workqueue import (
+    FsWorkQueue,
+    WorkQueue,
+    available_backends,
+    get_backend,
+)
+
+FILES = ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+
+
+def _read_out(d):
+    return {f: open(os.path.join(d, f), "rb").read() for f in FILES}
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_backend_registry():
+    assert available_backends() == ("shared-fs", "threads")
+    assert get_backend("threads") is WorkQueue
+    assert get_backend("shared-fs") is FsWorkQueue
+    with pytest.raises(ValueError, match="shared-fs"):
+        get_backend("carrier-pigeon")
+
+
+# ------------------------------------------------------- lease-table units
+
+
+def _drain(q, worker="w"):
+    got = []
+    while (i := q.claim(worker, block=False)) is not None:
+        got.append(i)
+        q.complete(worker, i)
+    return got
+
+
+def test_fs_queue_single_host_lifecycle(tmp_path):
+    q = FsWorkQueue(5, keys=[f"k{i}" for i in range(5)], lease_size=2,
+                    root=str(tmp_path), host_id="A", lease_ttl=60.0)
+    assert sorted(_drain(q)) == list(range(5))
+    assert q.remaining() == 0
+    # every lease file ended in the done state
+    for i in range(5):
+        rec = json.load(open(tmp_path / f"lease_k{i}.json"))
+        assert rec["state"] == "done" and rec["host"] == "A"
+    # a fresh joiner sees a finished grid, not work
+    late = FsWorkQueue(5, keys=[f"k{i}" for i in range(5)], lease_size=2,
+                       root=str(tmp_path), host_id="B", lease_ttl=60.0)
+    assert late.claim("w", block=False) is None
+    assert late.remaining() == 0
+    q.stop(); late.stop()
+
+
+def test_fs_queue_two_hosts_partition_items(tmp_path):
+    keys = [f"b{i:06d}" for i in range(12)]
+    a = FsWorkQueue(12, keys=keys, lease_size=3, root=str(tmp_path),
+                    host_id="A", lease_ttl=60.0)
+    b = FsWorkQueue(12, keys=keys, lease_size=3, root=str(tmp_path),
+                    host_id="B", lease_ttl=60.0)
+    got_a, got_b = [], []
+    while True:
+        ia = a.claim("w", block=False)
+        ib = b.claim("w", block=False)
+        if ia is None and ib is None:
+            break
+        if ia is not None:
+            got_a.append(ia); a.complete("w", ia)
+        if ib is not None:
+            got_b.append(ib); b.complete("w", ib)
+    # exclusive-create claims: a strict partition, nothing lost or doubled
+    assert not set(got_a) & set(got_b)
+    assert sorted(got_a + got_b) == list(range(12))
+    assert a.remaining() == 0 and b.remaining() == 0
+    a.stop(); b.stop()
+
+
+def test_fs_queue_expired_lease_is_reclaimed(tmp_path):
+    keys = [f"k{i}" for i in range(4)]
+    dead = FsWorkQueue(4, keys=keys, lease_size=2, root=str(tmp_path),
+                       host_id="dead", lease_ttl=0.25)
+    first = dead.claim("w")
+    assert first is not None
+    dead.stop()               # kills the heartbeat thread — a portable SIGKILL
+    time.sleep(0.6)           # > ttl: the held leases are now stale
+    surv = FsWorkQueue(4, keys=keys, lease_size=4, root=str(tmp_path),
+                       host_id="surv", lease_ttl=0.25)
+    got = _drain(surv)
+    assert sorted(got) == [0, 1, 2, 3]   # incl. the dead host's lease tail
+    st = surv.stats()["w"]
+    assert st.reclaimed >= 1 and st.stolen_by >= st.reclaimed
+    rec = json.load(open(tmp_path / f"lease_k{first}.json"))
+    assert rec["host"] == "surv" and rec["steals"] >= 1
+    surv.stop()
+
+
+def test_fs_queue_live_lease_is_not_stolen(tmp_path):
+    keys = ["x", "y"]
+    a = FsWorkQueue(2, keys=keys, lease_size=1, root=str(tmp_path),
+                    host_id="A", lease_ttl=0.4)
+    held = a.claim("w")
+    b = FsWorkQueue(2, keys=keys, lease_size=2, root=str(tmp_path),
+                    host_id="B", lease_ttl=0.4)
+    other = b.claim("w", block=False)
+    assert other is not None and other != held
+    # b has the rest; a's lease is heartbeat-fresh across several ttls
+    deadline = time.monotonic() + 1.2
+    while time.monotonic() < deadline:
+        assert b.claim("w", block=False) is None or pytest.fail("stole a live lease")
+        time.sleep(0.1)
+    a.complete("w", held)
+    b.complete("w", other)
+    assert b.remaining() == 0
+    a.stop(); b.stop()
+
+
+def test_fs_queue_done_is_never_stolen(tmp_path):
+    keys = ["only"]
+    a = FsWorkQueue(1, keys=keys, lease_size=1, root=str(tmp_path),
+                    host_id="A", lease_ttl=0.2)
+    idx = a.claim("w")
+    a.complete("w", idx)
+    a.stop()
+    time.sleep(0.5)           # well past ttl: done markers do not expire
+    b = FsWorkQueue(1, keys=keys, lease_size=1, root=str(tmp_path),
+                    host_id="B", lease_ttl=0.2)
+    assert b.claim("w", block=False) is None
+    assert b.remaining() == 0
+    b.stop()
+
+
+def test_fs_queue_corrupt_lease_expires_by_mtime(tmp_path):
+    (tmp_path / "lease_k0.json").write_text("{torn write")
+    q = FsWorkQueue(1, keys=["k0"], lease_size=1, root=str(tmp_path),
+                    host_id="A", lease_ttl=0.2)
+    assert q.claim("w", block=False) is None    # fresh mtime: not expired yet
+    old = time.time() - 5.0
+    os.utime(tmp_path / "lease_k0.json", (old, old))
+    idx = q.claim("w", block=False)
+    assert idx == 0                             # reclaimed via mtime fallback
+    q.stop()
+
+
+def test_fs_queue_stop_unblocks_blocking_claim(tmp_path):
+    import threading
+
+    keys = ["x", "y"]
+    a = FsWorkQueue(2, keys=keys, lease_size=2, root=str(tmp_path),
+                    host_id="A", lease_ttl=60.0)
+    assert a.claim("w") is not None
+    b = FsWorkQueue(2, keys=keys, lease_size=2, root=str(tmp_path),
+                    host_id="B", lease_ttl=60.0, poll_s=0.05)
+    got = []
+    t = threading.Thread(target=lambda: got.append(b.claim("w")), daemon=True)
+    t.start()                 # parks: A holds both keys, neither done
+    time.sleep(0.2)
+    assert t.is_alive()
+    b.stop()
+    t.join(timeout=2.0)
+    assert not t.is_alive() and got == [None]
+    a.stop()
+
+
+def test_fs_queue_requires_root_and_unique_keys(tmp_path):
+    with pytest.raises(ValueError, match="root"):
+        FsWorkQueue(2)
+    with pytest.raises(ValueError, match="unique"):
+        FsWorkQueue(2, keys=["a", "a"], root=str(tmp_path))
+    with pytest.raises(ValueError, match="2 keys for 3"):
+        FsWorkQueue(3, keys=["a", "b"], root=str(tmp_path))
+
+
+# --------------------------------------------- manifest read-merge-write
+
+
+def test_checkpoint_concurrent_committers_union(tmp_path):
+    """Two processes share one checkpoint dir; each holds a process-local
+    manifest dict.  Interleaved commits must UNION on disk — the old
+    write-from-local-state dropped whichever entries the other process
+    committed in between (lost update)."""
+    fp = config_fingerprint({"scan": 1})
+    a = ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=2, n_blocks=2)
+    b = ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=2, n_blocks=2)
+    a.commit_cell(0, 0, {"x": np.arange(2)})
+    b.commit_cell(1, 1, {"x": np.arange(3)})     # b never saw a's commit
+    a.commit_cell(0, 1, {"x": np.arange(4)})     # a never saw b's commit
+    disk = json.load(open(tmp_path / "manifest.json"))
+    assert set(disk["completed"]) == {"0.0", "1.1", "0.1"}
+    # refresh folds peers' commits into memory without writing
+    b.refresh()
+    assert b.completed_cells() == {(0, 0), (1, 1), (0, 1)}
+    assert (1, 0) in b.pending_cells()
+
+
+def test_checkpoint_commit_clears_merged_failure(tmp_path):
+    fp = config_fingerprint({"scan": 2})
+    a = ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=2)
+    b = ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=2)
+    a.record_failure(0, "transient decode error")
+    b.commit_batch(0, {"x": np.arange(2)})       # peer retried and succeeded
+    disk = json.load(open(tmp_path / "manifest.json"))
+    assert "0" in disk["completed"] and "0" not in disk["failed"]
+    # the stale failure does not resurrect through a's next write either
+    a.commit_batch(1, {"x": np.arange(2)})
+    disk = json.load(open(tmp_path / "manifest.json"))
+    assert set(disk["completed"]) == {"0", "1"} and disk["failed"] == {}
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_shared_fs_requires_checkpoint_dir():
+    from repro.api.specs import ExecSpec, ScanConfig
+
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        ScanConfig.from_specs(executor=ExecSpec(backend="shared-fs"))
+    with pytest.raises(ValueError, match="backend"):
+        ExecSpec(backend="smoke-signals").validate()
+    with pytest.raises(ValueError, match="lease_ttl"):
+        ExecSpec(backend="shared-fs", lease_ttl=0.0).validate()
+
+
+def test_cli_shared_fs_requires_checkpoint_dir():
+    from repro.launch.gwas import cmd_scan
+
+    with pytest.raises(SystemExit, match="checkpoint-dir"):
+        cmd_scan([
+            "--genotypes", "x.bed", "--pheno", "p.tsv", "--out", "o",
+            "--exec-backend", "shared-fs",
+        ])
+
+
+# ------------------------------- multi-process semantics (subprocesses)
+#
+# Children run real independent interpreters against one checkpoint dir on
+# tmpfs — the same coordination surface N hosts would share over NFS.
+
+_HOST = textwrap.dedent(
+    """
+    import json, os, sys, time
+    from repro.api import ExecSpec, GridSpec, Study, TsvWriter
+
+    bed, pheno, cov, ck, out, host_id = sys.argv[1:7]
+    ttl = float(sys.argv[7])
+    cell_sleep = float(sys.argv[8])
+    study = Study.from_files(bed, pheno, cov)
+    # 6 trait blocks per batch: one marker-major item (6 cells) overflows
+    # the executor's bounded results queue (4 slots), so a slow consumer
+    # parks the worker MID-item — which is what lets the SIGKILL test kill
+    # a host with a partially-committed lease.
+    session = study.plan(
+        grid=GridSpec(batch_markers=64, block_m=64, block_n=128, block_p=2,
+                      trait_block=2),
+        hit_threshold_nlp=2.0,
+        executor=ExecSpec(devices=1, lease_batches=2, backend="shared-fs",
+                          host_id=host_id, lease_ttl=ttl),
+        checkpoint_dir=ck,
+    ).run()
+
+    def progress(m):
+        print("CELL", flush=True)       # the parent's kill trigger
+        if cell_sleep:
+            time.sleep(cell_sleep)
+
+    session.progress = progress
+    session.stream_to(TsvWriter(out))
+    print("INFO " + json.dumps({
+        "executor": session.executor_info,
+        "live": session.metrics.summary()["live_cells"],
+        "replayed": session.metrics.summary()["replayed_cells"],
+    }), flush=True)
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def serial_ref(cohort_files, tmp_path_factory):
+    """Serial single-process reference outputs for the subprocess cohort."""
+    from repro.api import GridSpec, Study, TsvWriter
+
+    study = Study.from_files(
+        cohort_files["bed"], cohort_files["pheno"], cohort_files["cov"]
+    )
+    out = str(tmp_path_factory.mktemp("serial_ref"))
+    study.plan(
+        grid=GridSpec(batch_markers=64, block_m=64, block_n=128, block_p=2,
+                      trait_block=2),
+        hit_threshold_nlp=2.0,
+    ).run().stream_to(TsvWriter(out))
+    return _read_out(out)
+
+
+TOTAL_CELLS = 60   # 10 batches (600 markers / 64) x 6 trait blocks (12 / 2)
+
+
+def _spawn_host(cohort_files, ck, out, host_id, *, ttl=60.0, cell_sleep=0.0):
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    return subprocess.Popen(
+        [sys.executable, "-c", _HOST, cohort_files["bed"],
+         cohort_files["pheno"], cohort_files["cov"], ck, out, host_id,
+         str(ttl), str(cell_sleep)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+
+
+def _host_info(stdout):
+    for line in stdout.splitlines():
+        if line.startswith("INFO "):
+            return json.loads(line[5:])
+    raise AssertionError(f"no INFO line in child stdout: {stdout[-500:]}")
+
+
+def test_two_concurrent_hosts_byte_identical(cohort_files, serial_ref, tmp_path):
+    ck = str(tmp_path / "ck")
+    outs = [str(tmp_path / "host_a"), str(tmp_path / "host_b")]
+    procs = [
+        _spawn_host(cohort_files, ck, outs[0], "hostA"),
+        _spawn_host(cohort_files, ck, outs[1], "hostB"),
+    ]
+    results = [p.communicate(timeout=600) for p in procs]
+    for p, (stdout, stderr) in zip(procs, results):
+        assert p.returncode == 0, stderr[-3000:]
+    infos = [_host_info(stdout) for stdout, _ in results]
+    # BOTH hosts emit the complete grid, byte-identical to the serial scan
+    for out in outs:
+        assert _read_out(out) == serial_ref
+    # the grid was actually split: each host computed some cells live and
+    # replayed its peer's committed cells; together they covered everything
+    for info in infos:
+        assert info["executor"]["backend"] == "shared-fs"
+        assert info["live"] + info["replayed"] == TOTAL_CELLS
+    assert infos[0]["live"] + infos[1]["live"] >= TOTAL_CELLS  # >=: steal overlap
+    assert all(info["live"] > 0 for info in infos)
+    # host-qualified worker labels in the stats
+    assert all(
+        w.startswith(("hostA/", "hostB/"))
+        for info in infos for w in info["executor"]["workers"]
+    )
+
+
+def test_sigkilled_host_tail_reclaimed_by_survivor(
+    cohort_files, serial_ref, tmp_path
+):
+    ck = str(tmp_path / "ck")
+    victim_out = str(tmp_path / "victim")
+    victim = _spawn_host(
+        cohort_files, ck, victim_out, "victim", ttl=1.5, cell_sleep=0.3
+    )
+    # Let it claim leases and commit a couple of cells, then SIGKILL —
+    # no teardown runs, its lease files simply stop heartbeating.
+    cells_seen = 0
+    for line in victim.stdout:
+        if line.startswith("CELL"):
+            cells_seen += 1
+            if cells_seen >= 2:
+                break
+    os.kill(victim.pid, signal.SIGKILL)
+    victim.wait(timeout=60)
+    victim.stdout.close(); victim.stderr.close()
+    assert victim.returncode != 0
+
+    surv_out = str(tmp_path / "survivor")
+    surv = _spawn_host(cohort_files, ck, surv_out, "survivor", ttl=1.5)
+    stdout, stderr = surv.communicate(timeout=600)
+    assert surv.returncode == 0, stderr[-3000:]
+    info = _host_info(stdout)
+
+    # the survivor reclaimed the dead host's expired lease tail ...
+    stats = info["executor"]["workers"]
+    assert sum(w["reclaimed"] for w in stats.values()) >= 1
+    # ... finished the grid, and its outputs are byte-identical to serial
+    assert info["live"] + info["replayed"] == TOTAL_CELLS
+    assert _read_out(surv_out) == serial_ref
+
+
+# --------------------------------------------------- property: partition
+
+
+def test_fs_queue_claims_partition_property(tmp_path):
+    """Any interleaving of two hosts' claims yields a partition of the item
+    set: no item claimed twice, none lost (huge ttl: no expiry stealing, so
+    the partition is strict)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        order=st.lists(st.sampled_from(["A", "B"]), min_size=1, max_size=40),
+        lease_a=st.integers(min_value=1, max_value=5),
+        lease_b=st.integers(min_value=1, max_value=5),
+        n_items=st.integers(min_value=1, max_value=12),
+    )
+    def check(order, lease_a, lease_b, n_items):
+        import tempfile
+
+        root = tempfile.mkdtemp(dir=str(tmp_path))
+        keys = [f"k{i}" for i in range(n_items)]
+        hosts = {
+            "A": FsWorkQueue(n_items, keys=keys, lease_size=lease_a,
+                             root=root, host_id="A", lease_ttl=1e6),
+            "B": FsWorkQueue(n_items, keys=keys, lease_size=lease_b,
+                             root=root, host_id="B", lease_ttl=1e6),
+        }
+        claims = {"A": [], "B": []}
+        for who in order + ["A"] * n_items + ["B"] * n_items:
+            idx = hosts[who].claim("w", block=False)
+            if idx is not None:
+                claims[who].append(idx)
+                hosts[who].complete("w", idx)
+        assert not set(claims["A"]) & set(claims["B"])
+        assert sorted(claims["A"] + claims["B"]) == list(range(n_items))
+        for q in hosts.values():
+            assert q.remaining() == 0
+            q.stop()
+
+    check()

@@ -112,6 +112,47 @@ def test_workqueue_victim_tie_break_deterministic():
         assert q3._pick_victim("thief") is None
 
 
+def test_workqueue_idle_polling_is_not_busy():
+    """A polling worker must not re-fold the same interval every None
+    claim: busy marks are popped on EVERY claim path, so idle spin on a
+    drained queue adds ~nothing to busy_s (the bug inflated utilization
+    by the stale interval once per poll)."""
+    q = WorkQueue(1, lease_size=1)
+    idx = q.claim("w")
+    time.sleep(0.05)
+    assert q.claim("w") is None       # drained: folds the real interval once
+    base = q.stats()["w"].busy_s
+    assert base >= 0.04
+    for _ in range(5):
+        time.sleep(0.01)
+        assert q.claim("w") is None
+    assert q.stats()["w"].busy_s - base < 0.04   # bug added ~50ms per poll
+    # the mark was popped: complete() after the None claims must not
+    # double-count the long-gone interval either
+    q.complete("w", idx)
+    assert q.stats()["w"].busy_s - base < 0.04
+
+
+def test_workqueue_stats_fold_in_flight_busy():
+    """busy_s is monotone across snapshots taken DURING a long cell: the
+    in-flight interval is folded into the returned copies (a claim-to-
+    complete gap no longer reads as 0% utilization), without mutating the
+    live accounting."""
+    q = WorkQueue(4, lease_size=2)
+    idx = q.claim("w")
+    s1 = q.stats()["w"].busy_s
+    time.sleep(0.03)
+    s2 = q.stats()["w"].busy_s
+    assert s2 >= s1 + 0.02            # mid-claim snapshots see the work
+    time.sleep(0.03)
+    s3 = q.stats()["w"].busy_s
+    assert s3 >= s2 + 0.02            # and stay monotone
+    q.complete("w", idx)
+    done = q.stats()["w"].busy_s
+    assert done >= s3 - 1e-6          # the fold was snapshot-only: no
+    assert done < s3 + 1.0            # double count on complete
+
+
 def test_workqueue_skip_completed():
     q = WorkQueue(10, lease_size=4, skip={0, 1, 2})
     seen = []
