@@ -890,6 +890,12 @@ class ScanSession:
             "root": os.path.join(self.checkpoint.root, "leases"),
             "host_id": self.config.host_id or f"{socket.gethostname()}-{os.getpid()}",
             "lease_ttl": self.config.lease_ttl,
+            # A peer's done lease is trusted only if its cells actually
+            # reached the manifest: commit-before-done makes that the
+            # invariant, but a lost manifest merge (flock-less mount) would
+            # otherwise turn a done marker into a cell nobody ever
+            # computes or replays.
+            "cell_committed": self.checkpoint.has_cell,
         }
 
     def _make_executor(self):

@@ -20,6 +20,7 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
 import time
 from dataclasses import dataclass
 
@@ -83,6 +84,12 @@ class ScanCheckpoint:
         self.n_batches = n_batches
         self.n_blocks = n_blocks
         self._manifest_path = os.path.join(root, self.MANIFEST)
+        # Process-local serialization of manifest state: the distributed
+        # executor commits from N worker threads while the scheduler's
+        # done-lease verification refreshes from another; the flock below
+        # only covers cross-process writers (and not even those on
+        # flock-less mounts).
+        self._tlock = threading.Lock()
         existing = self._load_manifest()
         if existing is None:
             self._manifest = {
@@ -219,7 +226,7 @@ class ScanCheckpoint:
         manifest write folds the on-disk state in first: ``completed`` is
         the union (shard payloads are deterministic, so colliding keys
         agree), ``failed`` is the union minus anything since completed."""
-        with self._commit_lock():
+        with self._tlock, self._commit_lock():
             disk = self._load_manifest()
             if disk is not None:
                 merged_completed = {**disk.get("completed", {}), **self._manifest["completed"]}
@@ -236,13 +243,23 @@ class ScanCheckpoint:
         """Fold the on-disk manifest into memory without writing — lets a
         shared-fs host see cells its peers committed (pending computation,
         final replay) without racing a write of its own."""
-        disk = self._load_manifest()
-        if disk is None:
-            return
-        completed = {**disk.get("completed", {}), **self._manifest["completed"]}
-        failed = {**disk.get("failed", {}), **self._manifest["failed"]}
-        self._manifest["completed"] = completed
-        self._manifest["failed"] = {k: v for k, v in failed.items() if k not in completed}
+        with self._tlock:
+            disk = self._load_manifest()
+            if disk is None:
+                return
+            completed = {**disk.get("completed", {}), **self._manifest["completed"]}
+            failed = {**disk.get("failed", {}), **self._manifest["failed"]}
+            self._manifest["completed"] = completed
+            self._manifest["failed"] = {k: v for k, v in failed.items() if k not in completed}
+
+    def has_cell(self, batch: int, block: int) -> bool:
+        """True iff the cell is in the freshly re-read manifest — the
+        shared-fs queue's arbiter for whether a peer's done lease can be
+        trusted (DESIGN.md §14): a done marker whose commit lost the
+        manifest merge must be recomputed, not skipped forever."""
+        self.refresh()
+        with self._tlock:
+            return self._key(batch, block) in self._manifest["completed"]
 
     def commit_cell(self, batch: int, block: int, arrays: dict[str, np.ndarray]) -> str:
         """Write the shard, then the manifest — in that order, so a crash
@@ -250,9 +267,22 @@ class ScanCheckpoint:
         a read-merge-write (see ``_locked_manifest_update``), so concurrent
         committers in different processes never drop each other's cells."""
         shard = os.path.join(self.root, self._shard_name(batch, block))
-        tmp = shard + ".tmp.npz"
-        np.savez_compressed(tmp, **arrays)
-        os.replace(tmp, shard)
+        # Unique tmp (same idiom as _atomic_write_json): double completion
+        # of one cell across processes is a SUPPORTED race (lease steal,
+        # TTL expiry), and a fixed ``shard + ".tmp"`` path would let one
+        # committer truncate the file the other is about to publish —
+        # worst case a torn shard recorded completed.
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp.npz")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez_compressed(f, **arrays)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, shard)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
         key = self._key(batch, block)
         base = os.path.basename(shard)
 

@@ -107,11 +107,30 @@ class CellScheduler:
             lease_size = min(lease_size, max(1, len(items) // max(1, n_workers)))
         self.lease_size = max(1, lease_size)
         self.backend = backend
+        # ``cell_committed`` in backend_opts is a (batch, block) -> bool
+        # manifest probe supplied by the session; distributed backends need
+        # it keyed by *item*, and the key->cells mapping is this class's —
+        # so the translation happens here: an item's done marker is trusted
+        # iff every cell this host would compute for it is in the manifest.
+        opts = dict(backend_opts or {})
+        cell_committed = opts.pop("cell_committed", None)
+        if cell_committed is not None:
+            by_key = {self._item_key(run): run for run in items}
+
+            def done_check(key: str) -> bool:
+                run = by_key.get(key)
+                if run is None:
+                    return True   # not an item this host schedules: nothing to verify
+                return all(
+                    cell_committed(run.batch.index, blk.index) for blk in run.blocks
+                )
+
+            opts["done_check"] = done_check
         self._queue = get_backend(backend)(
             len(items),
             keys=[self._item_key(run) for run in items],
             lease_size=self.lease_size,
-            **(backend_opts or {}),
+            **opts,
         )
 
     def _item_key(self, run: CellRun) -> str:

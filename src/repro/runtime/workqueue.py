@@ -32,6 +32,7 @@ import tempfile
 import threading
 import time
 from dataclasses import dataclass
+from typing import Callable
 
 __all__ = [
     "WorkQueue",
@@ -103,11 +104,13 @@ class WorkQueue:
         lease_size: int = 8,
         skip: set[int] | None = None,
         keys: list[str] | None = None,
+        done_check: Callable[[str], bool] | None = None,
     ):
-        # ``keys`` is the cross-host item identity used by distributed
-        # backends; the in-process queue moves plain indices and ignores it
-        # (accepted so the scheduler constructs every backend uniformly).
-        del keys
+        # ``keys`` and ``done_check`` are the cross-host item identity and
+        # completion arbiter used by distributed backends; the in-process
+        # queue moves plain indices and ignores them (accepted so the
+        # scheduler constructs every backend uniformly).
+        del keys, done_check
         pending = [i for i in range(n_items) if not skip or i not in skip]
         self._pending: list[int] = pending
         self._leases: dict[str, list[int]] = {}
@@ -261,7 +264,14 @@ class FsWorkQueue:
       A SIGKILL kills the heartbeat thread with the process, so the
       victim's whole un-started lease tail expires and is reclaimed.
     * **done** — completion overwrites the lease with ``state: "done"``;
-      done leases are never stolen and tell late joiners to skip.
+      done leases are never stolen and tell late joiners to skip.  When a
+      ``done_check`` is installed (the scheduler wires it to the
+      checkpoint manifest), a done marker is only trusted if the check
+      confirms it: a marker whose commit lost the manifest merge (a
+      flock-less mount dropping a concurrent write) names a cell that
+      was never durably recorded — nobody heartbeats it and resumes
+      would skip it, so it is reclaimed and recomputed instead of
+      silently leaving the grid incomplete.
 
     Safety does NOT depend on mutual exclusion: two hosts that race a
     steal (or a too-small ``lease_ttl`` under a long cell) both compute
@@ -290,6 +300,7 @@ class FsWorkQueue:
         host_id: str | None = None,
         lease_ttl: float = 60.0,
         poll_s: float | None = None,
+        done_check: Callable[[str], bool] | None = None,
     ):
         if root is None:
             raise ValueError("FsWorkQueue needs root= (the shared lease directory)")
@@ -317,7 +328,13 @@ class FsWorkQueue:
             else max(0.05, min(1.0, self.lease_ttl / 10.0))
         )
         self._lease_size = max(1, lease_size)
+        self._done_check = done_check
         self._lock = threading.Lock()
+        # Serializes per-key lease-file writes between the heartbeat loop
+        # and ``complete`` — never held across FS scans, so it cannot
+        # starve anything; see ``_heartbeat_loop`` for the ordering it
+        # guarantees.
+        self._write_lock = threading.Lock()
         self._stop = threading.Event()
         self._stats: dict[str, WorkerStats] = {}
         self._t0: dict[str, float] = {}
@@ -374,17 +391,34 @@ class FsWorkQueue:
             t.start()
 
     def _heartbeat_loop(self) -> None:
+        """Refresh held leases' heartbeats.  The FS writes run OUTSIDE
+        ``self._lock`` (a slow shared FS must not block claims, and claims
+        must not block heartbeats): the held set is snapshotted under the
+        lock, then each write re-checks the key under the lock while
+        holding ``_write_lock`` — ``complete`` writes its done marker
+        under the same ``_write_lock`` *after* releasing the key, so a
+        stale "leased" record can never clobber a done marker (either the
+        re-check sees the key released and skips, or the done write lands
+        after ours)."""
         interval = max(0.05, self.lease_ttl / 4.0)
         while not self._stop.wait(interval):
             with self._lock:
-                now = time.time()
-                for key in sorted(self._held):
-                    rec = self._records.get(key)
-                    if rec is None or rec.get("state") == "done":
-                        continue
-                    rec["heartbeat"] = now
+                held = sorted(self._held)
+            now = time.time()
+            for key in held:
+                with self._write_lock:
+                    with self._lock:
+                        rec = self._records.get(key)
+                        if (
+                            key not in self._held
+                            or rec is None
+                            or rec.get("state") == "done"
+                        ):
+                            continue
+                        rec["heartbeat"] = now
+                        payload = dict(rec)
                     try:
-                        _overwrite_json(self._lease_path(key), rec)
+                        _overwrite_json(self._lease_path(key), payload)
                     except OSError:
                         # A transiently unwritable shared FS must not kill
                         # the heartbeat; worst case the lease expires and a
@@ -397,32 +431,39 @@ class FsWorkQueue:
         """Local index of the next work item, or None when every item is
         done (all hosts) or ``stop()`` was called.  While peers still hold
         undone leases this polls — waiting out either their completion or
-        their expiry — unless ``block=False``."""
+        their expiry — unless ``block=False``.
+
+        All lease-file traffic (the refill ``listdir``, per-key exclusive
+        publishes, expiry reads and steals) runs with ``self._lock``
+        RELEASED: on a slow shared FS an O(grid) scan held under the lock
+        would starve the heartbeat thread past ``lease_ttl``, getting this
+        host's own *live* leases stolen and recomputed by peers."""
         while True:
             with self._lock:
                 st = self._stats.setdefault(worker, WorkerStats())
                 now = time.monotonic()
                 if worker in self._t0:
                     st.busy_s += now - self._t0.pop(worker)
-                if not self._stop.is_set():
-                    idx = self._next_locked(worker, st)
-                    if idx is not None:
-                        st.claimed += 1
-                        self._t0[worker] = time.monotonic()
-                        return idx
+                idx = None if self._stop.is_set() else self._serve_locked(worker, st)
+                if idx is not None:
+                    st.claimed += 1
+                    self._t0[worker] = time.monotonic()
+                    return idx
                 drained = not self._not_done
-            if drained or not block or self._stop.is_set():
+            if drained or self._stop.is_set():
+                return None
+            if self._acquire_fs(worker):
+                continue                      # fresh keys registered: serve them
+            if not block:
                 return None
             self._stop.wait(self.poll_s)
 
-    def _next_locked(self, worker: str, st: WorkerStats) -> int | None:
+    def _serve_locked(self, worker: str, st: WorkerStats) -> int | None:
+        """Pop from the worker's lease, rebalancing locally first — no FS
+        traffic on this path."""
         lease = self._leases.setdefault(worker, [])
         if not lease:
-            self._refill_locked(worker, lease)
-        if not lease:
             self._steal_local_locked(worker, st, lease)
-        if not lease:
-            self._steal_expired_locked(worker, st, lease)
         if not lease:
             return None
         return self._index_of[lease.pop(0)]
@@ -430,29 +471,64 @@ class FsWorkQueue:
     def _rotated_keys(self):
         return self._keys[self._scan0:] + self._keys[: self._scan0]
 
-    def _refill_locked(self, worker: str, lease: list[str]) -> None:
+    def _acquire_fs(self, worker: str) -> bool:
+        """Acquire new FS leases for ``worker`` — fresh exclusive publishes
+        first, expired-lease steals only when nothing is left to publish —
+        and register what was won.  The lease I/O runs on snapshots taken
+        under the lock; registration re-checks under the lock, so a key
+        two local workers raced lands in exactly one lease (the lease file
+        itself carries the same host either way)."""
+        with self._lock:
+            not_done = set(self._not_done)
+            held = set(self._held)
+        got = self._publish_fresh(worker, not_done, held)
+        reclaimed = False
+        retired: list[str] = []
+        if not got:
+            got = self._steal_expired(worker, not_done, held, retired)
+            reclaimed = True
+        with self._lock:
+            self._not_done.difference_update(retired)
+            st = self._stats.setdefault(worker, WorkerStats())
+            lease = self._leases.setdefault(worker, [])
+            served = False
+            for key, rec in got:
+                if key in self._held or key not in self._not_done:
+                    continue
+                self._records[key] = rec
+                self._held.add(key)
+                lease.append(key)
+                served = True
+                if reclaimed:
+                    st.stolen_by += 1
+                    st.reclaimed += 1
+            if served:
+                self._ensure_heartbeat_locked()
+            return served
+
+    def _publish_fresh(
+        self, worker: str, not_done: set[str], held: set[str]
+    ) -> list[tuple[str, dict]]:
         """Claim up to ``lease_size`` unclaimed items via exclusive publish."""
         try:
             existing = set(os.listdir(self.root))
         except OSError:
-            return
+            return []
+        got: list[tuple[str, dict]] = []
         for key in self._rotated_keys():
-            if len(lease) >= self._lease_size:
+            if len(got) >= self._lease_size:
                 break
-            if key not in self._not_done or key in self._held:
+            if key not in not_done or key in held:
                 continue
             if os.path.basename(self._lease_path(key)) in existing:
                 continue
             rec = self._record(key, worker, "leased")
             try:
-                claimed = _publish_exclusive(self._lease_path(key), rec)
+                if _publish_exclusive(self._lease_path(key), rec):
+                    got.append((key, rec))
             except OSError:
                 continue
-            if claimed:
-                self._records[key] = rec
-                self._held.add(key)
-                lease.append(key)
-                self._ensure_heartbeat_locked()
+        return got
 
     def _steal_local_locked(self, worker: str, st: WorkerStats, lease: list[str]) -> None:
         """Rebalance within this host first (no FS traffic): same
@@ -473,41 +549,62 @@ class FsWorkQueue:
             self._stats[victim].stolen_from += steal
             st.stolen_by += steal
 
-    def _steal_expired_locked(self, worker: str, st: WorkerStats, lease: list[str]) -> None:
-        """Reclaim leases whose heartbeat expired (dead host's tail).  The
-        scan doubles as done-marker discovery: peers' completed items are
-        retired from ``_not_done`` here."""
+    def _done_confirmed(self, key: str) -> bool | None:
+        """Can a done lease for ``key`` be trusted?  True: yes — no checker
+        installed, or the cells are in the manifest.  False: a done marker
+        whose commit never reached the manifest (lost merge) — recompute.
+        None: the check itself failed transiently; recheck next scan."""
+        if self._done_check is None:
+            return True
+        try:
+            return bool(self._done_check(key))
+        except OSError:
+            return None
+
+    def _steal_expired(
+        self, worker: str, not_done: set[str], held: set[str], retired: list[str]
+    ) -> list[tuple[str, dict]]:
+        """Overwrite leases whose heartbeat expired (dead host's tail).
+        The scan doubles as done-marker discovery: peers' completed items
+        — confirmed against the manifest when a ``done_check`` is
+        installed — are appended to ``retired``."""
         now = time.time()
+        got: list[tuple[str, dict]] = []
         for key in self._rotated_keys():
-            if len(lease) >= self._lease_size:
+            if len(got) >= self._lease_size:
                 break
-            if key not in self._not_done or key in self._held:
+            if key not in not_done or key in held:
                 continue
             rec = self._read_lease(key)
             if rec is None:
                 continue  # unclaimed: the next refill's exclusive publish wins it
             if rec.get("state") == "done":
-                self._not_done.discard(key)
-                continue
-            hb = rec.get("heartbeat")
-            if hb is None:
-                try:
-                    hb = os.path.getmtime(self._lease_path(key))
-                except OSError:
+                ok = self._done_confirmed(key)
+                if ok is None:
                     continue
-            if now - float(hb) <= self.lease_ttl:
-                continue
+                if ok:
+                    retired.append(key)
+                    continue
+                # Done marker with no manifest entry: nobody heartbeats a
+                # done lease and resumes skip its cell, so without
+                # reclaiming it HERE the cell would never be computed —
+                # fall through to the overwrite regardless of ttl.
+            else:
+                hb = rec.get("heartbeat")
+                if hb is None:
+                    try:
+                        hb = os.path.getmtime(self._lease_path(key))
+                    except OSError:
+                        continue
+                if now - float(hb) <= self.lease_ttl:
+                    continue
             new = self._record(key, worker, "leased", steals=int(rec.get("steals", 0) or 0) + 1)
             try:
                 _overwrite_json(self._lease_path(key), new)
             except OSError:
                 continue
-            self._records[key] = new
-            self._held.add(key)
-            lease.append(key)
-            st.stolen_by += 1
-            st.reclaimed += 1
-            self._ensure_heartbeat_locked()
+            got.append((key, new))
+        return got
 
     # --------------------------------------------------------------- complete
 
@@ -521,21 +618,42 @@ class FsWorkQueue:
             rec = self._records.pop(key, None) or self._record(key, worker, "done")
             rec["state"] = "done"
             rec["heartbeat"] = time.time()
-            _overwrite_json(self._lease_path(key), rec)
             self._held.discard(key)
             self._not_done.discard(key)
+        # The marker write runs outside self._lock (slow FS must not block
+        # claims) but under _write_lock, after the discard above — see
+        # _heartbeat_loop for why that ordering keeps the done marker from
+        # being clobbered by a stale heartbeat.
+        with self._write_lock:
+            try:
+                _overwrite_json(self._lease_path(key), rec)
+            except OSError:
+                # The cell is already committed to the manifest (commit-
+                # before-done), so the marker is a skip hint, not a
+                # correctness requirement: leave the lease to expire —
+                # a peer's recompute dedups through the manifest — rather
+                # than aborting a scan whose work actually succeeded.
+                pass
 
     # ------------------------------------------------------------- inspection
 
     def remaining(self) -> int:
-        """Undone items across ALL hosts (reads peers' done markers)."""
+        """Undone items across ALL hosts (reads peers' done markers, each
+        verified against the manifest when a ``done_check`` is installed —
+        an unverifiable done marker still counts as remaining).  Lease
+        reads run outside the lock: same heartbeat-liveness reasoning as
+        ``claim``."""
         with self._lock:
-            for key in sorted(self._not_done):
-                if key in self._held:
-                    continue
-                rec = self._read_lease(key)
-                if rec is not None and rec.get("state") == "done":
-                    self._not_done.discard(key)
+            candidates = [k for k in sorted(self._not_done) if k not in self._held]
+        retired = [
+            key
+            for key in candidates
+            if (rec := self._read_lease(key)) is not None
+            and rec.get("state") == "done"
+            and self._done_confirmed(key)
+        ]
+        with self._lock:
+            self._not_done.difference_update(retired)
             return len(self._not_done)
 
     def stats(self) -> dict[str, WorkerStats]:

@@ -181,6 +181,117 @@ def test_fs_queue_stop_unblocks_blocking_claim(tmp_path):
     a.stop()
 
 
+def test_fs_queue_unverified_done_lease_is_reclaimed(tmp_path):
+    """A done marker whose commit never reached the manifest (lost merge
+    on a flock-less mount) must be recomputed, not trusted: nobody
+    heartbeats a done lease and resumes skip it, so trusting it would
+    silently leave the grid incomplete."""
+    committed: set = set()
+    _forge_done_lease(tmp_path, "a")
+    q = FsWorkQueue(2, keys=["a", "b"], lease_size=2, root=str(tmp_path),
+                    host_id="A", lease_ttl=60.0,
+                    done_check=lambda k: k in committed)
+    got = _drain(q)
+    assert sorted(got) == [0, 1]          # "a" recomputed despite its marker
+    st = q.stats()["w"]
+    assert st.reclaimed >= 1
+    rec = json.load(open(tmp_path / "lease_a.json"))
+    assert rec["host"] == "A" and rec["state"] == "done" and rec["steals"] >= 1
+    assert q.remaining() == 0
+    q.stop()
+
+
+def test_fs_queue_verified_done_lease_is_trusted(tmp_path):
+    """The same done marker IS skipped once the check confirms its cells
+    are in the manifest — done_check gates recompute, it never forces it."""
+    _forge_done_lease(tmp_path, "a")
+    q = FsWorkQueue(2, keys=["a", "b"], lease_size=2, root=str(tmp_path),
+                    host_id="A", lease_ttl=60.0, done_check=lambda k: True)
+    assert _drain(q) == [1]
+    assert q.remaining() == 0
+    q.stop()
+
+
+def _forge_done_lease(root, key):
+    (root / f"lease_{key}.json").write_text(json.dumps({
+        "key": key, "host": "ghost", "worker": "w", "claimed": 0.0,
+        "heartbeat": 0.0, "state": "done", "steals": 0,
+    }))
+
+
+def test_fs_queue_complete_survives_marker_write_failure(tmp_path, monkeypatch):
+    """A transiently unwritable shared FS during the done-marker write
+    must not abort the scan: the cell is already committed to the
+    manifest, the marker is just a skip hint.  The lease is left to
+    expire, so a peer recomputes (idempotent)."""
+    import repro.runtime.workqueue as wq
+
+    q = wq.FsWorkQueue(1, keys=["k"], lease_size=1, root=str(tmp_path),
+                       host_id="A", lease_ttl=0.2)
+    idx = q.claim("w")
+    assert idx == 0
+    monkeypatch.setattr(
+        wq, "_overwrite_json",
+        lambda path, payload: (_ for _ in ()).throw(OSError("fs hiccup")),
+    )
+    q.complete("w", idx)                  # must not raise
+    monkeypatch.undo()
+    q.stop()
+    assert q.remaining() == 0             # locally retired regardless
+    rec = json.load(open(tmp_path / "lease_k.json"))
+    assert rec["state"] == "leased"       # marker never landed
+    time.sleep(0.5)                       # > ttl: the stale lease expires
+    peer = wq.FsWorkQueue(1, keys=["k"], lease_size=1, root=str(tmp_path),
+                          host_id="B", lease_ttl=0.2)
+    assert peer.claim("w", block=False) == 0   # ... and a peer reclaims it
+    peer.stop()
+
+
+def test_fs_queue_heartbeat_survives_slow_claim_scan(tmp_path, monkeypatch):
+    """A slow shared FS making claim's refill listdir take several ttls
+    must not starve the heartbeat thread: held leases stay fresh through
+    the stall, so peers never see them expire and never thrash-recompute
+    live work.  (The old code held the queue lock across the O(grid) FS
+    scan; the heartbeat shares that lock for its bookkeeping.)"""
+    import threading
+
+    import repro.runtime.workqueue as wq
+
+    keys = ["x", "y"]
+    a = FsWorkQueue(2, keys=keys, lease_size=1, root=str(tmp_path),
+                    host_id="A", lease_ttl=0.4)
+    held = a.claim("w")                   # heartbeat thread now live
+    assert held is not None
+    b = FsWorkQueue(2, keys=keys, lease_size=1, root=str(tmp_path),
+                    host_id="B", lease_ttl=0.4)
+    other = b.claim("w", block=False)
+    assert other is not None
+    b.complete("w", other)                # only A's live lease is left
+
+    real_listdir = os.listdir
+    calls = {"n": 0}
+
+    def slow_listdir(path):
+        calls["n"] += 1
+        if calls["n"] == 1:               # stall only A's scan below
+            time.sleep(1.2)
+        return real_listdir(path)
+
+    monkeypatch.setattr(wq.os, "listdir", slow_listdir)
+    t = threading.Thread(
+        target=lambda: a.claim("w2", block=False), daemon=True
+    )
+    t.start()                             # parks ~3 ttl inside the refill scan
+    time.sleep(0.6)                       # mid-stall, > ttl since it began
+    c = FsWorkQueue(2, keys=keys, lease_size=2, root=str(tmp_path),
+                    host_id="C", lease_ttl=0.4)
+    assert c.claim("w", block=False) is None   # A's lease stayed fresh
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    a.complete("w", held)
+    a.stop(); b.stop(); c.stop()
+
+
 def test_fs_queue_requires_root_and_unique_keys(tmp_path):
     with pytest.raises(ValueError, match="root"):
         FsWorkQueue(2)
@@ -224,6 +335,77 @@ def test_checkpoint_commit_clears_merged_failure(tmp_path):
     a.commit_batch(1, {"x": np.arange(2)})
     disk = json.load(open(tmp_path / "manifest.json"))
     assert set(disk["completed"]) == {"0", "1"} and disk["failed"] == {}
+
+
+def test_checkpoint_same_cell_commit_race_no_tmp_collision(tmp_path):
+    """Cross-process double completion of ONE cell is a supported race
+    (lease steal, TTL expiry): concurrent committers must not share a tmp
+    path.  The old fixed ``shard + '.tmp.npz'`` let one writer truncate
+    the bytes the other was about to publish — a torn shard recorded
+    completed — and the loser's os.replace raised FileNotFoundError,
+    aborting its scan."""
+    import threading
+
+    fp = config_fingerprint({"scan": 3})
+    cks = [
+        ScanCheckpoint(str(tmp_path), fingerprint=fp, n_batches=1, n_blocks=1)
+        for _ in range(2)
+    ]
+    payload = {"x": np.arange(4096)}
+    barrier = threading.Barrier(2)
+    errs = []
+
+    def commit(ck):
+        try:
+            for _ in range(25):
+                barrier.wait(timeout=30)
+                ck.commit_cell(0, 0, payload)
+        except BaseException as e:  # noqa: BLE001 — asserted below
+            errs.append(e)
+
+    threads = [threading.Thread(target=commit, args=(ck,)) for ck in cks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    np.testing.assert_array_equal(cks[0].load_cell(0, 0)["x"], payload["x"])
+    assert not [f for f in os.listdir(tmp_path) if ".tmp" in f]
+
+
+def test_scheduler_verifies_done_leases_against_manifest(tmp_path):
+    """End-to-end plumbing of the manifest arbiter: the session passes a
+    (batch, block) probe as ``cell_committed`` and the scheduler keys it
+    by work item — a forged done lease whose cells are absent from the
+    manifest is recomputed; one whose cells are present is skipped."""
+    from repro.runtime.scheduler import CellScheduler
+
+    class _Ax:
+        def __init__(self, index):
+            self.index = index
+
+    def run(root, committed):
+        _forge_done_lease(root, "b000001")
+        sched = CellScheduler(
+            [_Ax(0), _Ax(1)], [_Ax(0)], placement="marker-major",
+            lease_size=1, backend="shared-fs",
+            backend_opts={
+                "root": str(root), "host_id": "A", "lease_ttl": 60.0,
+                "cell_committed": lambda b, k: (b, k) in committed,
+            },
+        )
+        got = []
+        while (c := sched.claim("w")) is not None:
+            idx, item = c
+            got.append(item.batch.index)
+            sched.complete("w", idx)
+        sched.stop()
+        return got
+
+    lying, truthful = tmp_path / "lying", tmp_path / "truthful"
+    lying.mkdir(); truthful.mkdir()
+    assert sorted(run(lying, committed=set())) == [0, 1]   # recomputed
+    assert run(truthful, committed={(1, 0)}) == [0]        # trusted
 
 
 # ------------------------------------------------------------- validation
