@@ -43,6 +43,16 @@ class CellTiming:
     # when the executor did not measure the split (checkpoint replay).
     step_s: float = 0.0
     extract_s: float = 0.0
+    # Upstream host stages (DESIGN.md §15): genotype decode
+    # (``prepare_batch``) and the H2D staging copy.  Attributed to the cell
+    # that *first* used the batch/staged arrays; 0.0 for cells reusing a
+    # still-staged batch, for replay, and when a pipeline overlapped the
+    # stage entirely off the critical path.  These are NOT components of
+    # ``wall_s`` — a pipelined executor pays them concurrently with another
+    # cell's step, which is exactly what their per-device totals make
+    # visible.
+    decode_s: float = 0.0
+    stage_s: float = 0.0
 
 
 class ScanMetrics:
@@ -64,7 +74,9 @@ class ScanMetrics:
         self._trait_markers = 0
         self._step_s = 0.0
         self._extract_s = 0.0
-        self._per_device: dict[str, dict] = {}     # label -> cells/busy_s
+        self._decode_s = 0.0
+        self._stage_s = 0.0
+        self._per_device: dict[str, dict] = {}     # label -> cells/busy_s/...
 
     # ------------------------------------------------------------ recording
 
@@ -83,9 +95,16 @@ class ScanMetrics:
             self._trait_markers += row.n_markers * row.n_traits
             self._step_s += row.step_s
             self._extract_s += row.extract_s
-            d = self._per_device.setdefault(row.device, {"cells": 0, "busy_s": 0.0})
+            self._decode_s += row.decode_s
+            self._stage_s += row.stage_s
+            d = self._per_device.setdefault(
+                row.device,
+                {"cells": 0, "busy_s": 0.0, "decode_s": 0.0, "stage_s": 0.0},
+            )
             d["cells"] += 1
             d["busy_s"] += row.wall_s
+            d["decode_s"] += row.decode_s
+            d["stage_s"] += row.stage_s
 
     def finish(self) -> None:
         """Freeze the stream's wall clock — once.  The session calls this
@@ -117,6 +136,14 @@ class ScanMetrics:
             return None
         return self._extract_s / busy
 
+    @property
+    def step_s_total(self) -> float:
+        return self._step_s
+
+    @property
+    def decode_s_total(self) -> float:
+        return self._decode_s
+
     def _wall(self) -> float:
         if self.wall_s > 0:
             return self.wall_s
@@ -130,6 +157,8 @@ class ScanMetrics:
                 "cells": d["cells"],
                 "busy_s": round(d["busy_s"], 4),
                 "utilization": round(d["busy_s"] / wall, 3) if wall > 0 else None,
+                "decode_s": round(d.get("decode_s", 0.0), 4),
+                "stage_s": round(d.get("stage_s", 0.0), 4),
             }
             for label, d in self._per_device.items()
         }
@@ -146,6 +175,8 @@ class ScanMetrics:
             "trait_markers_per_s": round(tm / wall, 1) if wall > 0 else None,
             "step_s": round(self._step_s, 4),
             "extract_s": round(self._extract_s, 4),
+            "decode_s": round(self._decode_s, 4),
+            "stage_s": round(self._stage_s, 4),
             "extract_share": round(share, 3) if share is not None else None,
             "per_device": per_device,
         }
@@ -158,6 +189,9 @@ class ScanMetrics:
         total = f"/{self.n_cells_total}" if self.n_cells_total else ""
         share = self.extract_share()
         tail = f"  extract {share:.0%}" if share is not None else ""
+        host = self._decode_s + self._stage_s
+        if host > 0 and self._step_s > 0:
+            tail += f"  decode+stage {host / self._step_s:.0%} of step"
         return (
             f"[scan] {self.cells_done}{total} cells  "
             f"{rate:,.0f} markers/s  {len(self._per_device) or 1} device(s)"

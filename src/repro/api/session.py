@@ -41,6 +41,8 @@ import queue
 import socket
 import threading
 import time
+import warnings
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Iterator
 
@@ -60,6 +62,7 @@ from repro.core.sinks import BatchView, extract_hits
 from repro.runtime.checkpoint import ScanCheckpoint, config_fingerprint
 from repro.runtime.prefetch import (
     BatchPlanner,
+    DecodePool,
     MarkerBatch,
     Prefetcher,
     TraitBlock,
@@ -468,6 +471,12 @@ class _Slot:
 
     def reset(self) -> None:
         self.state.reset()
+        # Per-device panel views die with their slot (their device blocks
+        # must not stay pinned after the scan).  The serial slot's view is
+        # the store's SHARED default LRU — deliberately left resident, the
+        # historical cross-run warm cache.
+        if self.panels is not None and self.device is not None:
+            self.panels.release()
 
 
 def _live_cell(
@@ -509,6 +518,62 @@ def _live_cell(
     return cell
 
 
+class _SlotTail:
+    """Per-slot downstream tail (DESIGN.md §15): one FIFO thread that runs
+    payload materialization, checkpoint commit, and result delivery OFF the
+    compute thread's critical path, so D2H pulls and manifest writes of
+    cell k overlap the device step of cell k+1.
+
+    Strict FIFO is the correctness story: the compute thread enqueues each
+    cell's emit task followed by its run's ``complete`` task, so a cell is
+    always committed before its lease is marked done (the shared-fs
+    ordering contract) and per-slot delivery order matches the unpipelined
+    path.  A failing task (commit error, D2H error) is reported through
+    ``on_error`` and all later tasks are drained unexecuted — in
+    particular the run's ``complete`` never fires, so the lease is left to
+    expire exactly as a worker crash would.
+    """
+
+    def __init__(self, *, stop: threading.Event, on_error: Callable, name: str):
+        self._q: queue.Queue = queue.Queue(maxsize=4)
+        self._stop = stop
+        self._on_error = on_error
+        self._failed = False
+        self._thread = threading.Thread(target=self._run, daemon=True, name=name)
+        self._thread.start()
+
+    def submit(self, task: Callable[[], None]) -> None:
+        """Enqueue (bounded: blocks the compute thread when the tail is >4
+        cells behind — host-RAM backpressure) unless teardown started."""
+        while True:
+            try:
+                self._q.put(task, timeout=0.1)
+                return
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+
+    def _run(self) -> None:
+        while True:
+            task = self._q.get()
+            if task is None:
+                return
+            if self._failed:
+                continue
+            try:
+                task()
+            except BaseException as e:  # noqa: BLE001 — reported to consumer
+                self._failed = True
+                self._on_error(e)
+
+    def close(self, *, join_timeout: float = 10.0) -> None:
+        """Drain queued tasks, then stop and join the thread.  The put may
+        block briefly but always lands: the tail consumes unconditionally
+        (even after a failure it drains)."""
+        self._q.put(None)
+        self._thread.join(timeout=join_timeout)
+
+
 class SerialExecutor:
     """The historical single-device grid walk: marker batches outer
     (decode prefetch + H2D double buffer), trait blocks inner (each staged
@@ -530,9 +595,15 @@ class SerialExecutor:
         engine = prep.engine
         blocks = prep.trait_blocks
         slot = _Slot(prep, device=None, step=self._step, label="serial")
+
+        def decode(b):
+            t = time.perf_counter()
+            hb = engine.prepare_batch(prep.study.source, b, prep.ctx)
+            return hb, time.perf_counter() - t
+
         prefetched = Prefetcher(
             todo,
-            lambda b: engine.prepare_batch(prep.study.source, b, prep.ctx),
+            decode,
             depth=cfg.prefetch_depth,
             num_workers=cfg.io_workers,
         )
@@ -540,15 +611,18 @@ class SerialExecutor:
         # block while the device computes the current cell.
         panel_la = PanelPrefetcher(slot.panel_block)
 
-        def stage(host_batch):
+        def stage(item):
             # Staging launches the copy; on accelerators it completes while
             # the device chews on the previous batch (double buffer).
-            return host_batch, slot.stage(host_batch)
+            host_batch, decode_s = item
+            t = time.perf_counter()
+            dev_args = slot.stage(host_batch)
+            return host_batch, dev_args, decode_s, time.perf_counter() - t
 
         stream = double_buffer(prefetched, stage)
         try:
             todo_pos = {b.index: i for i, b in enumerate(todo)}
-            for host_batch, dev_args in stream:
+            for host_batch, dev_args, decode_s, stage_s in stream:
                 batch = host_batch.batch
                 bidx = batch.index
                 # Trait blocks are the INNER loop: one staged genotype batch
@@ -586,6 +660,10 @@ class SerialExecutor:
                         wall_s=t2 - t0,
                         step_s=t1 - t0,
                         extract_s=t2 - t1,
+                        # Attributed to the batch's first cell; later cells
+                        # of the sweep reuse the staged copy.
+                        decode_s=decode_s if pos == 0 else 0.0,
+                        stage_s=stage_s if pos == 0 else 0.0,
                         device=slot.label,
                     )
         finally:
@@ -601,24 +679,53 @@ class SerialExecutor:
 
 class MultiDeviceExecutor:
     """Drain the scan grid across N devices with work stealing
-    (DESIGN.md §12).
+    (DESIGN.md §12) and per-slot streaming pipelines (§15).
 
     One worker thread per device slot; each claims ``CellRun``s from the
     ``CellScheduler`` (lease = runs of cells sharing a marker batch, so a
-    claimed genotype batch is staged once per device and swept), computes
-    cells on its own ``_Slot`` — explicit ``jax.device_put`` placement,
-    per-slot step/prolog memo, per-slot panel and lmm caches — and hands
-    materialized cells to the consuming generator through a bounded queue.
-    Completion order is whatever the fleet produces; the session commits
-    each cell before yielding and the sinks/writers normalize fold order,
-    so outputs are bitwise-identical to the serial executor's.
+    claimed genotype batch is staged once per device and swept) and
+    computes cells on its own ``_Slot`` — explicit ``jax.device_put``
+    placement, per-slot step/prolog memo, per-slot panel and lmm caches.
+
+    With ``slot_prefetch > 0`` each worker runs a three-stage pipeline:
+
+        look-ahead   the worker claims up to ``slot_prefetch`` items BEYOND
+                     the one it is computing (non-blocking claims) and
+                     submits their genotype decode to a shared
+                     ``DecodePool`` of ``io_workers`` threads, then stages
+                     the next batch's H2D copy while the device chews on
+                     the current one; a per-slot ``PanelPrefetcher``
+                     prefetches the next cell's trait-panel block.
+        compute      the device step, fenced on the compute thread
+                     (``step_s`` stays honest).
+        tail         payload materialization (D2H), checkpoint commit, and
+                     result delivery run on a per-slot ``_SlotTail`` FIFO
+                     thread, overlapping the next cell's step.  FIFO order
+                     preserves commit-before-lease-done (the run's
+                     ``complete`` is enqueued after its cells).
+
+    ``slot_prefetch=0`` is the historical unpipelined claim loop.  Either
+    way the math is untouched: compute order per slot, staged arrays, and
+    globally-aligned ``block_p`` tiles are identical — pipelining only
+    moves WHEN host work happens — so outputs stay bitwise-identical to
+    the serial executor.  Completion order is whatever the fleet produces;
+    the session commits each cell before yielding and the sinks/writers
+    normalize fold order.
+
+    ``autotune_lease`` closes the loop at runtime: the consumer loop
+    watches the scheduler's live ``busy_s``/``wait_s`` accounting and
+    shrinks the lease extent toward the tail of the scan (guided
+    self-scheduling), so late slots never idle behind one straggler's fat
+    lease.  Retunes affect future refills only — which items run where is
+    a pure perf question, never a correctness one.
     """
 
     kind = "multi-device"
 
     def __init__(self, prepared: "PreparedScan", *, n_devices: int,
                  placement: str = "marker-major", lease_batches: int = 2,
-                 backend: str = "threads", backend_opts: dict | None = None):
+                 backend: str = "threads", backend_opts: dict | None = None,
+                 slot_prefetch: int = 1, autotune_lease: bool = True):
         visible = jax.devices()
         if n_devices > len(visible):
             raise ValueError(
@@ -632,18 +739,28 @@ class MultiDeviceExecutor:
         self.lease_batches = lease_batches
         self.backend = backend
         self.backend_opts = dict(backend_opts or {})
+        self.slot_prefetch = max(0, int(slot_prefetch))
+        self.autotune_lease = bool(autotune_lease)
         # Under a distributed backend the worker labels are host-qualified
         # (CellTiming.device, summary.json worker stats): N processes share
         # one grid, and "dev0" alone no longer names a unique slot.
         host = self.backend_opts.get("host_id")
         self._label_prefix = f"{host}/" if (backend != "threads" and host) else ""
         self._worker_stats: dict = {}
+        self._autotune: dict = {
+            "enabled": self.autotune_lease,
+            "initial_lease": lease_batches,
+            "final_lease": lease_batches,
+            "adjustments": 0,
+            "wait_share": None,
+            "placement_warning": None,
+        }
         # Distributed-backend commit hook (set by the session): a cell MUST
         # be committed to the checkpoint BEFORE its lease is marked done —
         # peers treat a done lease as "in the manifest", so the reverse
         # order would let a crash between the two lose the cell for good.
-        # Committing on the worker thread (not the consumer) is what makes
-        # the ordering enforceable.
+        # Committing on the worker-side pipeline (not the consumer) is what
+        # makes the ordering enforceable.
         self.commit: Callable[["CellResult"], object] | None = None
 
     def info(self) -> dict:
@@ -652,7 +769,9 @@ class MultiDeviceExecutor:
             "devices": len(self.devices),
             "placement": self.placement,
             "lease_batches": self.lease_batches,
+            "slot_prefetch": self.slot_prefetch,
             "backend": self.backend,
+            "autotune": dict(self._autotune),
             "workers": {
                 w: dataclasses.asdict(st) for w, st in sorted(self._worker_stats.items())
             },
@@ -671,11 +790,14 @@ class MultiDeviceExecutor:
             n_workers=len(self.devices),
             backend=self.backend, backend_opts=self.backend_opts,
         )
+        self._autotune["initial_lease"] = sched.lease_size
+        self._autotune["final_lease"] = sched.lease_size
         # Bounded: in-flight materialized cells are capped per slot, so the
         # fleet cannot outrun a slow consumer into unbounded host RAM.
         results: queue.Queue = queue.Queue(maxsize=4 * len(self.devices))
         stop = threading.Event()
         done = object()
+        depth = self.slot_prefetch
 
         def put(item) -> None:
             # Never blocks forever: once the consumer is gone (stop set) the
@@ -688,49 +810,162 @@ class MultiDeviceExecutor:
                     if stop.is_set():
                         return
 
+        def decode(batch):
+            t = time.perf_counter()
+            hb = engine.prepare_batch(prep.study.source, batch, prep.ctx)
+            return hb, time.perf_counter() - t
+
+        # ONE pool across every slot: total host decode parallelism is
+        # io_workers — the same meaning the knob has under the serial
+        # executor — however many devices drain the grid.
+        pool = DecodePool(decode, num_workers=cfg.io_workers) if depth > 0 else None
+
         def worker(wid: int, device) -> None:
             label = f"{self._label_prefix}dev{wid}"
             slot = _Slot(prep, device=device, label=label)
-            staged: tuple = (None, None, None)  # (batch index, host, dev args)
+            panel_la = (
+                PanelPrefetcher(slot.panel_block, name=f"panel-prefetch-dev{wid}")
+                if depth > 0 else None
+            )
+            tail = (
+                _SlotTail(stop=stop, on_error=put, name=f"slot-tail-{wid}")
+                if depth > 0 else None
+            )
+            # Staged memo, capacity depth+1: the batch being computed plus
+            # the look-ahead batches whose H2D copies landed early.  With
+            # depth=0 this degenerates to the historical one-slot memo.
+            staged: dict[int, tuple] = {}   # batch idx -> (hb, dev, dec_s, stg_s)
+            inflight: set[int] = set()      # batch idxs pending in the pool
+            ahead: deque = deque()          # claimed (idx, run), decode submitted
+
+            def ensure_decode(batch) -> None:
+                if batch.index not in staged and batch.index not in inflight:
+                    pool.submit((wid, batch.index), batch)
+                    inflight.add(batch.index)
+
+            def staged_args(batch) -> tuple:
+                if batch.index not in staged:
+                    if batch.index in inflight:
+                        hb, decode_s = pool.result((wid, batch.index))
+                        inflight.discard(batch.index)
+                    else:
+                        hb, decode_s = decode(batch)
+                    t = time.perf_counter()
+                    dev_args = slot.stage(hb)
+                    staged[batch.index] = (
+                        hb, dev_args, decode_s, time.perf_counter() - t
+                    )
+                    while len(staged) > depth + 1:
+                        oldest = next(iter(staged))
+                        if oldest == batch.index:
+                            break
+                        del staged[oldest]
+                return staged[batch.index]
+
+            def make_emit(hb, out, blk, batch, step_s, decode_s, stage_s):
+                def emit() -> None:
+                    t = time.perf_counter()
+                    cell = _live_cell(hb, out, blk, cfg, prep.dof)
+                    if self.commit is not None:
+                        self.commit(cell)
+                    extract_s = time.perf_counter() - t
+                    put((cell, CellTiming(
+                        batch_index=batch.index,
+                        block_index=blk.index,
+                        n_markers=cell.n_markers,
+                        n_traits=cell.n_traits,
+                        # Not contiguous wall clock under the pipeline: the
+                        # extract ran later, overlapped with another cell's
+                        # step.  step + extract is the cell's true cost.
+                        wall_s=step_s + extract_s,
+                        step_s=step_s,
+                        extract_s=extract_s,
+                        decode_s=decode_s,
+                        stage_s=stage_s,
+                        device=label,
+                    )))
+                return emit
+
             try:
                 while not stop.is_set():
-                    claim = sched.claim(label)
-                    if claim is None:
+                    # Refill the look-ahead window: the item in hand plus up
+                    # to `depth` beyond it, decodes submitted at claim time
+                    # so the pool works while this slot computes.  Only the
+                    # first claim may block (distributed backends poll out
+                    # peers' undone leases): a worker with work in hand
+                    # must never park on the queue.
+                    while len(ahead) < depth + 1:
+                        got = sched.claim(label, block=not ahead)
+                        if got is None:
+                            break
+                        if depth > 0:
+                            ensure_decode(got[1].batch)
+                        ahead.append(got)
+                    if not ahead:
                         break
-                    idx, run = claim
+                    idx, run = ahead.popleft()
                     batch = run.batch
-                    # One-slot staging memo: consecutive claims of the same
-                    # batch (marker-major sweeps; trait-major never) reuse
-                    # the decoded + staged genotypes.
-                    if staged[0] != batch.index:
-                        hb = engine.prepare_batch(prep.study.source, batch, prep.ctx)
-                        staged = (batch.index, hb, slot.stage(hb))
-                    _, hb, dev_args = staged
-                    for blk in run.blocks:
+                    hb, dev_args, decode_s, stage_s = staged_args(batch)
+                    # decode/stage are attributed to the first cell computed
+                    # off a fresh staging, once.
+                    staged[batch.index] = (hb, dev_args, 0.0, 0.0)
+                    for pos, blk in enumerate(run.blocks):
                         if stop.is_set():
                             return
                         t0 = time.perf_counter()
                         out = slot.step(*dev_args, slot.panel_block(batch, blk))
+                        # Overlap windows open between dispatch and fence:
+                        # the next cell's panel block and (first cell of the
+                        # run only) the look-ahead H2D staging.
+                        if panel_la is not None:
+                            if pos + 1 < len(run.blocks):
+                                panel_la.request(batch, run.blocks[pos + 1])
+                            elif ahead:
+                                nrun = ahead[0][1]
+                                panel_la.request(nrun.batch, nrun.blocks[0])
+                        if depth > 0 and ahead:
+                            # Stage the look-ahead batch's H2D copy as soon
+                            # as its decode lands (double buffer) — probed,
+                            # never waited on: an unfinished decode is
+                            # collected at need instead of blocking here.
+                            nxt = ahead[0][1].batch
+                            if nxt.index not in staged and pool.ready(
+                                (wid, nxt.index)
+                            ):
+                                staged_args(nxt)
                         jax.block_until_ready(out)
-                        t1 = time.perf_counter()
-                        cell = _live_cell(hb, out, blk, cfg, prep.dof)
-                        if self.commit is not None:
-                            self.commit(cell)
-                        t2 = time.perf_counter()
-                        put((cell, CellTiming(
-                            batch_index=batch.index,
-                            block_index=blk.index,
-                            n_markers=cell.n_markers,
-                            n_traits=cell.n_traits,
-                            wall_s=t2 - t0,
-                            step_s=t1 - t0,
-                            extract_s=t2 - t1,
-                            device=label,
-                        )))
-                    sched.complete(label, idx)
+                        step_s = time.perf_counter() - t0
+                        emit = make_emit(
+                            hb, out, blk, batch, step_s, decode_s, stage_s
+                        )
+                        if tail is not None:
+                            tail.submit(emit)
+                        else:
+                            emit()
+                        decode_s = stage_s = 0.0
+                    if tail is not None:
+                        tail.submit(
+                            lambda label=label, idx=idx: sched.complete(label, idx)
+                        )
+                    else:
+                        sched.complete(label, idx)
             except BaseException as e:  # noqa: BLE001 — reported to consumer
                 put(e)
             finally:
+                # Error/teardown path: cancel look-ahead decodes, drain the
+                # tail (delivering its finished cells), drop staged copies,
+                # and release the slot's device memory.  Unserved claimed
+                # items are simply never completed — their leases expire
+                # (shared-fs) exactly as a crash would, or die with the
+                # scan (threads backend, where the error kills the run).
+                if pool is not None:
+                    for b in inflight:
+                        pool.discard((wid, b))
+                if tail is not None:
+                    tail.close()
+                if panel_la is not None:
+                    panel_la.shutdown()
+                staged.clear()
                 slot.reset()
                 put(done)
 
@@ -743,6 +978,8 @@ class MultiDeviceExecutor:
         for t in threads:
             t.start()
         finished = 0
+        decode_total = step_total = 0.0
+        last_tune = time.monotonic()
         try:
             while finished < len(threads):
                 item = results.get()
@@ -751,12 +988,22 @@ class MultiDeviceExecutor:
                 elif isinstance(item, BaseException):
                     raise item
                 else:
+                    decode_total += item[1].decode_s
+                    step_total += item[1].step_s
+                    if self.autotune_lease:
+                        now = time.monotonic()
+                        if now - last_tune >= 0.5:
+                            last_tune = now
+                            self._tune_lease(sched)
                     yield item
         finally:
             stop.set()
             # Unblock workers parked in a blocking claim (the shared-fs
-            # backend polls while peers hold undone leases) ...
+            # backend polls while peers hold undone leases) and in decode
+            # waits ...
             sched.stop()
+            if pool is not None:
+                pool.shutdown()
             # ... and producers stuck on the bounded queue, then join.
             for t in threads:
                 while t.is_alive():
@@ -767,6 +1014,51 @@ class MultiDeviceExecutor:
                         pass
                     t.join(timeout=0.1)
             self._worker_stats = sched.stats()
+            self._finish_accounting(decode_total, step_total)
+
+    # ------------------------------------------------------------- autotuning
+
+    def _tune_lease(self, sched: CellScheduler) -> None:
+        """Guided self-scheduling on live accounting: target half the
+        remaining items spread over the fleet (never above the configured
+        initial — big early leases amortize queue traffic, small late ones
+        balance the tail), and halve once when the fleet's wait share says
+        slots are starving behind peers' leases."""
+        stats = sched.stats()
+        busy = sum(s.busy_s for s in stats.values())
+        wait = sum(s.wait_s for s in stats.values())
+        share = wait / (busy + wait) if busy + wait > 0 else 0.0
+        initial = self._autotune["initial_lease"]
+        target = max(1, min(initial, sched.remaining() // (2 * len(self.devices))))
+        if share > 0.3:
+            target = min(target, max(1, sched.lease_size // 2))
+        self._autotune["wait_share"] = round(share, 3)
+        if target != sched.lease_size:
+            sched.set_lease_size(target)
+            self._autotune["adjustments"] += 1
+            self._autotune["final_lease"] = target
+
+    def _finish_accounting(self, decode_total: float, step_total: float) -> None:
+        stats = self._worker_stats
+        busy = sum(s.busy_s for s in stats.values())
+        wait = sum(s.wait_s for s in stats.values())
+        if busy + wait > 0:
+            self._autotune["wait_share"] = round(wait / (busy + wait), 3)
+        if (
+            self.placement == "trait-major"
+            and self.prepared.n_trait_blocks > 1
+            and step_total > 0
+            and decode_total > step_total
+        ):
+            msg = (
+                "trait-major placement re-decodes each genotype batch once "
+                f"per trait block, and this scan spent {decode_total:.1f}s "
+                f"decoding vs {step_total:.1f}s computing — marker-major "
+                "placement (one decode per batch, swept over every block) "
+                "would likely be faster"
+            )
+            self._autotune["placement_warning"] = msg
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
 
 
 class ScanSession:
@@ -922,6 +1214,8 @@ class ScanSession:
                 lease_batches=self.config.lease_batches,
                 backend=self.config.exec_backend,
                 backend_opts=self._backend_opts(),
+                slot_prefetch=self.config.slot_prefetch,
+                autotune_lease=self.config.autotune_lease,
             )
         return SerialExecutor(self.prepared, step=self._step)
 

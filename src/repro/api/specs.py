@@ -114,12 +114,26 @@ class ExecSpec:
     backend: str = "threads"
     host_id: str | None = None     # lease-table identity; None = host-pid
     lease_ttl: float = 60.0        # heartbeat expiry before peers steal (s)
+    # Per-slot pipeline depth (DESIGN.md §15): how many work items a device
+    # worker claims AHEAD of the one it is computing, so decode + H2D of
+    # batch b+1 overlap the step of batch b.  0 disables pipelining (the
+    # historical serial claim loop — decode, stage, compute, commit, repeat).
+    slot_prefetch: int = 1
+    # Runtime lease autotuning (DESIGN.md §15): shrink ``lease_batches``
+    # toward the tail of the scan (guided self-scheduling) using the
+    # scheduler's live busy/wait accounting.  The initial and final values
+    # are reported in summary.json's executor block.
+    autotune_lease: bool = True
 
     def validate(self) -> None:
         from repro.runtime.workqueue import available_backends
 
         if self.devices < 0:
             raise ValueError(f"ExecSpec.devices must be >= 0, got {self.devices}")
+        if self.slot_prefetch < 0:
+            raise ValueError(
+                f"ExecSpec.slot_prefetch must be >= 0, got {self.slot_prefetch}"
+            )
         if self.placement not in PLACEMENTS:
             raise ValueError(
                 f"unknown placement {self.placement!r}; available: {PLACEMENTS}"
@@ -187,6 +201,8 @@ class ScanConfig:
     exec_backend: str = "threads"  # scheduler backend: "threads" | "shared-fs"
     host_id: str | None = None     # shared-fs lease identity (None: host-pid)
     lease_ttl: float = 60.0        # shared-fs heartbeat expiry (seconds)
+    slot_prefetch: int = 1         # per-slot look-ahead depth; 0 = unpipelined
+    autotune_lease: bool = True    # runtime lease_batches tuning (§15)
 
     def fingerprint_payload(self) -> dict:
         d = dataclasses.asdict(self)
@@ -199,6 +215,7 @@ class ScanConfig:
                   "panel_resident_blocks", "spill_dir", "hit_spill_rows",
                   "devices", "placement", "lease_batches",
                   "exec_backend", "host_id", "lease_ttl",
+                  "slot_prefetch", "autotune_lease",
                   # bitwise-neutral epilogue strategy (§13): a scan
                   # checkpointed sparse resumes dense and vice versa
                   "sparse_epilogue", "hit_capacity"):
@@ -300,6 +317,8 @@ class ScanConfig:
             exec_backend=executor.backend,
             host_id=executor.host_id,
             lease_ttl=executor.lease_ttl,
+            slot_prefetch=executor.slot_prefetch,
+            autotune_lease=executor.autotune_lease,
         )
 
     def grid_spec(self) -> GridSpec:
@@ -337,4 +356,6 @@ class ScanConfig:
             backend=self.exec_backend,
             host_id=self.host_id,
             lease_ttl=self.lease_ttl,
+            slot_prefetch=self.slot_prefetch,
+            autotune_lease=self.autotune_lease,
         )

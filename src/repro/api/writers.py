@@ -30,6 +30,8 @@ range.
 from __future__ import annotations
 
 import os
+import queue
+import threading
 from typing import Any, Callable, Sequence
 
 import numpy as np
@@ -126,6 +128,69 @@ def stream_session(session: Any, writers: Sequence[ResultWriter]) -> dict:
 # ----------------------------------------------------------- hit streaming
 
 
+class _AsyncFlusher:
+    """One background thread running the format-specific hit emission
+    (DESIGN.md §15), so writer I/O (TSV ``writelines``, parquet row
+    groups, npz shards) overlaps the consumer's next cells instead of
+    blocking them.
+
+    Strictly FIFO — submission order IS emission order, so the output
+    bytes are identical to the synchronous path.  A failing emission is
+    captured and re-raised on the consumer thread at the next
+    ``submit``/``finish`` (never swallowed); later queued emissions are
+    skipped.  The queue is bounded, so a slow disk backpressures the scan
+    instead of buffering unbounded sorted runs.
+    """
+
+    def __init__(self, emit: Callable[[np.ndarray, np.ndarray], None],
+                 *, name: str = "hit-flush"):
+        self._emit = emit
+        self._q: queue.Queue = queue.Queue(maxsize=4)
+        self._error: BaseException | None = None
+        self._aborted = False
+        self._thread = threading.Thread(target=self._run, daemon=True, name=name)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            if self._error is not None or self._aborted:
+                continue
+            try:
+                self._emit(*item)
+            except BaseException as e:  # noqa: BLE001 — re-raised on consumer
+                self._error = e
+
+    def check(self) -> None:
+        if self._error is not None:
+            err = self._error
+            self._aborted = True      # no further emissions after a failure
+            raise err
+
+    def submit(self, hits: np.ndarray, stats: np.ndarray) -> None:
+        self.check()
+        self._q.put((hits, stats))
+
+    def finish(self) -> None:
+        """Drain every queued emission, join, re-raise any failure."""
+        self._q.put(None)
+        self._thread.join()
+        self.check()
+
+    def abort(self) -> None:
+        """Stop emitting and join (best-effort, never raises: a wedged
+        emission leaves a daemon thread behind rather than hanging the
+        abort path)."""
+        self._aborted = True
+        try:
+            self._q.put(None, timeout=1.0)
+        except queue.Full:
+            pass
+        self._thread.join(timeout=5.0)
+
+
 class _BatchedHitStream:
     """Order-restoring, RAM-bounded hit stream.
 
@@ -154,9 +219,17 @@ class _BatchedHitStream:
         *,
         spill_dir: str,
         spill_rows: int = 2_000_000,
+        async_flush: bool = True,
     ):
         self._expected = max(1, n_blocks)
         self._emit = emit
+        # Async flush (DESIGN.md §15): the order-restoring bookkeeping
+        # (_pending, spill parts, the within-batch sort) stays on the
+        # consumer thread; only the format-specific emission of the
+        # already-sorted arrays moves to the flusher, which preserves
+        # submission order — so the output bytes are identical, the
+        # consumer just stops waiting on the disk.
+        self._flusher = _AsyncFlusher(emit) if async_flush else None
         self._spill_dir = spill_dir
         self._spill_rows = max(1, spill_rows)
         # batch -> {"runs": [(hits, stats)], "parts": [paths], "seen": int}
@@ -172,6 +245,8 @@ class _BatchedHitStream:
         return self._pending.setdefault(b, {"runs": [], "parts": [], "seen": 0})
 
     def add(self, cell: Any) -> None:
+        if self._flusher is not None:
+            self._flusher.check()     # surface an emission failure promptly
         e = self._entry(cell.batch_index)
         e["runs"].append((cell.hits, cell.hit_stats))
         e["seen"] += 1
@@ -222,7 +297,10 @@ class _BatchedHitStream:
         self.peak_flush_rows = max(self.peak_flush_rows, len(hits))
         # One batch's rows, sorted (marker, trait) — the within-batch merge.
         order = np.lexsort((hits[:, 1], hits[:, 0]))
-        self._emit(hits[order], stats[order])
+        if self._flusher is not None:
+            self._flusher.submit(hits[order], stats[order])
+        else:
+            self._emit(hits[order], stats[order])
         self._pending.pop(b)
         self.rows_in_ram -= sum(len(h) for h, _ in e["runs"])
         for part in e["parts"]:
@@ -231,11 +309,17 @@ class _BatchedHitStream:
 
     def finish(self) -> None:
         """Emit whatever is pending (partial batches of an interrupted grid
-        included) in batch order, then stop tracking."""
+        included) in batch order, then drain the flusher — every emission
+        has hit the format layer (and any failure has surfaced) before the
+        writer's own close runs."""
         for b in sorted(self._pending):
             self._flush(b)
+        if self._flusher is not None:
+            self._flusher.finish()
 
     def abort(self) -> None:
+        if self._flusher is not None:
+            self._flusher.abort()
         for e in self._pending.values():
             for part in e["parts"]:
                 if os.path.exists(part):
@@ -254,9 +338,11 @@ class _AccumulatingWriter(ResultWriter):
 
     def __init__(self, out_dir: str, *, spill_rows: int = 2_000_000,
                  marker_ids: Sequence[str] | None = None,
-                 trait_names: Sequence[str] | None = None):
+                 trait_names: Sequence[str] | None = None,
+                 async_flush: bool = True):
         self.out_dir = out_dir
         self.spill_rows = spill_rows
+        self.async_flush = async_flush
         self.marker_ids = marker_ids
         self.trait_names = trait_names
         self._session: Any = None
@@ -291,6 +377,7 @@ class _AccumulatingWriter(ResultWriter):
             self._emit_hits,
             spill_dir=os.path.join(self.out_dir, ".hit_runs"),
             spill_rows=self.spill_rows,
+            async_flush=self.async_flush,
         )
         self._start()
 

@@ -95,6 +95,15 @@ class DeviceLRU:
             for key in [k for k in self._data if pred(k)]:
                 self._data.pop(key)
 
+    def clear(self) -> None:
+        """Drop every staged entry (cascading through ``on_evict``) —
+        executor-slot teardown, so a closed scan pins no device blocks."""
+        with self._lock:
+            for key in list(self._data):
+                self._data.pop(key)
+                if self._on_evict is not None:
+                    self._on_evict(key)
+
     def __len__(self) -> int:
         return len(self._data)
 
@@ -892,6 +901,16 @@ class _LMMDeviceState(EngineDeviceState):
         DESIGN.md §10)."""
         sid = batch.source_id if self.engine._loco else -1
         return self._dev_y.get((sid, block.index))
+
+    def reset(self) -> None:
+        """Slot teardown: the step memo (base) plus this slot's staged
+        rotation pairs and rotated panel blocks — a closed multi-device
+        scan must pin nothing on its devices.  The shared host-side
+        float32 panels on the engine are untouched (amortized state)."""
+        super().reset()
+        if self.device is not None:
+            self._dev_y.clear()
+            self._dev.clear()
 
 
 @register_engine("lmm")

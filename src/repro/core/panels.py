@@ -57,6 +57,12 @@ class PanelView:
         cell's compute."""
         return self._dev.get(block.index)
 
+    def release(self) -> None:
+        """Drop every staged block (executor-slot teardown).  The view
+        stays usable — the next ``device_block`` restages — but a closed
+        scan no longer pins panel blocks on its devices."""
+        self._dev.clear()
+
 
 class PanelStore:
     """Host-resident residualized phenotype panel, tiled on the trait axis.

@@ -111,6 +111,17 @@ def build_scan_parser() -> argparse.ArgumentParser:
                     help="this process's identity in the shared-fs lease "
                          "table (default hostname-pid); must be unique per "
                          "live process")
+    ex.add_argument("--slot-prefetch", type=int, default=1,
+                    help="per-device look-ahead depth: claim and decode the "
+                         "next marker batch while the current one computes "
+                         "(0 = unpipelined worker; output is bitwise-"
+                         "identical either way)")
+    ex.add_argument("--autotune-lease", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="shrink --lease-batches at runtime as the grid "
+                         "drains (guided self-scheduling) and when workers "
+                         "report high wait share; chosen values land in "
+                         "summary.json under executor.autotune")
     ex.add_argument("--lease-ttl", type=float, default=60.0,
                     help="shared-fs heartbeat expiry in seconds: a lease "
                          "not refreshed for this long counts as a dead "
@@ -193,6 +204,8 @@ def cmd_scan(argv) -> None:
                   hit_spill_rows=args.hit_spill_rows),
         executor=ExecSpec(devices=args.devices, placement=args.placement,
                           lease_batches=args.lease_batches,
+                          slot_prefetch=args.slot_prefetch,
+                          autotune_lease=args.autotune_lease,
                           backend=args.exec_backend, host_id=args.host_id,
                           lease_ttl=args.lease_ttl),
         options=AssocOptions(dof_mode=args.dof_mode, precision=args.precision),

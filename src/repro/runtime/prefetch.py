@@ -40,6 +40,7 @@ __all__ = [
     "TraitBlock",
     "TraitBlockPlanner",
     "Prefetcher",
+    "DecodePool",
     "double_buffer",
 ]
 
@@ -170,6 +171,119 @@ def double_buffer(items: Iterable[T], stage: Callable[[T], V]) -> Iterator[V]:
         staged = nxt
     if staged is not _SENTINEL:
         yield staged  # type: ignore[misc]
+
+
+class DecodePool:
+    """Dynamic-submission sibling of ``Prefetcher`` for the pipelined
+    multi-device executor (DESIGN.md §15).
+
+    ``Prefetcher`` walks a *static* item list in order — the serial
+    executor's shape.  Device workers instead discover their items one
+    lease at a time from the scheduler, so they need submit/collect:
+    ``submit(key, item)`` enqueues ``fn(item)`` on the shared worker pool
+    and ``result(key)`` blocks until that result (re-raising the worker's
+    exception, so a decode failure surfaces on the submitting worker's
+    claim loop, not in a log).  The pool is shared across every device
+    slot: total host decode parallelism is ``num_workers`` —
+    ``ScanConfig.io_workers`` means the same thing it means for the serial
+    executor's ``Prefetcher``, however many devices drain the grid.
+
+    Keys are caller-chosen and must be unique among in-flight submissions
+    (the executor uses ``(slot, batch_index)``).  ``shutdown`` drops
+    pending tasks, lets in-flight ones finish, and joins the threads —
+    the error-path teardown contract, same as ``Prefetcher``.
+    """
+
+    def __init__(self, fn: Callable[[Any], Any], *, num_workers: int = 2,
+                 name: str = "slot-decode"):
+        self._fn = fn
+        self._tasks: list[tuple[Any, Any]] = []       # (key, item) FIFO
+        self._results: dict[Any, object] = {}
+        self._errors: dict[Any, BaseException] = {}
+        self._pending: set[Any] = set()               # submitted, unserved
+        self._lock = threading.Lock()
+        self._ready = threading.Condition(self._lock)
+        self._stop = False
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True, name=f"{name}-{i}")
+            for i in range(max(1, num_workers))
+        ]
+        for w in self._workers:
+            w.start()
+
+    def submit(self, key: Any, item: Any) -> None:
+        with self._lock:
+            if self._stop:
+                return
+            if key in self._pending:
+                raise ValueError(f"duplicate in-flight decode key {key!r}")
+            self._pending.add(key)
+            self._tasks.append((key, item))
+            self._ready.notify_all()
+
+    def result(self, key: Any) -> Any:
+        """Block until ``key``'s decode lands, pop it, re-raise its error."""
+        with self._lock:
+            while True:
+                if key in self._errors:
+                    self._pending.discard(key)
+                    raise self._errors.pop(key)
+                if key in self._results:
+                    self._pending.discard(key)
+                    return self._results.pop(key)
+                if self._stop:
+                    raise RuntimeError(f"DecodePool stopped before {key!r} resolved")
+                if key not in self._pending:
+                    raise KeyError(f"decode key {key!r} was never submitted")
+                self._ready.wait()
+
+    def ready(self, key: Any) -> bool:
+        """Non-blocking probe: has ``key``'s decode landed (result or
+        error)?  Lets a pipelined worker stage early without risking a
+        block on an unfinished decode."""
+        with self._lock:
+            return key in self._results or key in self._errors
+
+    def discard(self, key: Any) -> None:
+        """Forget a submission whose result is no longer wanted (teardown
+        of a worker's look-ahead).  In-flight work completes and is dropped;
+        queued work is cancelled."""
+        with self._lock:
+            self._tasks = [(k, it) for k, it in self._tasks if k != key]
+            self._results.pop(key, None)
+            self._errors.pop(key, None)
+            self._pending.discard(key)
+            self._ready.notify_all()
+
+    def _worker(self) -> None:
+        while True:
+            with self._lock:
+                while not self._stop and not self._tasks:
+                    self._ready.wait()
+                if self._stop:
+                    return
+                key, item = self._tasks.pop(0)
+            try:
+                out = self._fn(item)
+                with self._lock:
+                    if key in self._pending:
+                        self._results[key] = out
+                    self._ready.notify_all()
+            except BaseException as e:  # noqa: BLE001 — reported to submitter
+                with self._lock:
+                    if key in self._pending:
+                        self._errors[key] = e
+                    self._ready.notify_all()
+
+    def shutdown(self, *, join_timeout: float = 5.0) -> None:
+        """Stop the pool and join worker threads (idempotent)."""
+        with self._lock:
+            self._stop = True
+            self._tasks.clear()
+            self._ready.notify_all()
+        for w in self._workers:
+            if w.is_alive() and w is not threading.current_thread():
+                w.join(timeout=join_timeout)
 
 
 class Prefetcher:

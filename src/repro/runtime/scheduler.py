@@ -152,16 +152,25 @@ class CellScheduler:
     def n_cells(self) -> int:
         return sum(run.n_cells for run in self.items)
 
-    def claim(self, worker: str) -> tuple[int, CellRun] | None:
+    def claim(self, worker: str, *, block: bool = True) -> tuple[int, CellRun] | None:
         """Next work item for ``worker`` (lease refill / steal inside), or
-        None when the grid is drained."""
-        idx = self._queue.claim(worker)
+        None when the grid is drained.  ``block=False`` is the pipelined
+        executor's look-ahead probe: distributed backends return
+        immediately instead of polling out peers' undone leases, so a
+        worker with a cell in flight never parks on the queue."""
+        idx = self._queue.claim(worker, block=block)
         if idx is None:
             return None
         return idx, self.items[idx]
 
     def complete(self, worker: str, idx: int) -> None:
         self._queue.complete(worker, idx)
+
+    def set_lease_size(self, n: int) -> None:
+        """Runtime retune of the per-refill lease extent (autotuning hook;
+        future refills only)."""
+        self.lease_size = max(1, int(n))
+        self._queue.set_lease_size(n)
 
     def remaining(self) -> int:
         return self._queue.remaining()

@@ -86,6 +86,51 @@ class WorkerStats:
     stolen_by: int = 0
     reclaimed: int = 0     # expired foreign leases taken over (shared-fs only)
     busy_s: float = 0.0
+    wait_s: float = 0.0    # idle between completing everything and the next item
+
+
+class _WorkerClock:
+    """Busy/wait accounting shared by both queue backends.
+
+    A worker is *busy* while it holds at least one claimed-but-uncompleted
+    item and *waiting* otherwise — the pipelined executor claims its next
+    item before completing the current one (look-ahead), so intervals are
+    attributed by the outstanding count at the time they elapsed, not by
+    which call happened to end them.  Every fold advances the worker's
+    mark, so no interval is ever counted twice (idle polling folds each
+    gap exactly once, into ``wait_s``).  All methods assume the owning
+    queue's lock is held.
+    """
+
+    def __init__(self) -> None:
+        self._mark: dict[str, float] = {}
+        self._outstanding: dict[str, int] = {}
+
+    def fold(self, worker: str, st: WorkerStats, now: float) -> None:
+        mark = self._mark.get(worker)
+        if mark is not None:
+            if self._outstanding.get(worker, 0) > 0:
+                st.busy_s += now - mark
+            else:
+                st.wait_s += now - mark
+        self._mark[worker] = now
+
+    def claimed(self, worker: str) -> None:
+        self._outstanding[worker] = self._outstanding.get(worker, 0) + 1
+
+    def completed(self, worker: str) -> None:
+        n = self._outstanding.get(worker, 0)
+        self._outstanding[worker] = max(0, n - 1)
+
+    def snapshot_into(self, worker: str, snap: WorkerStats, now: float) -> None:
+        """Fold the in-flight interval into a stats *copy* (never the live
+        state), so busy/wait stay monotone across snapshots."""
+        mark = self._mark.get(worker)
+        if mark is not None:
+            if self._outstanding.get(worker, 0) > 0:
+                snap.busy_s += now - mark
+            else:
+                snap.wait_s += now - mark
 
 
 @register_backend("threads")
@@ -117,7 +162,18 @@ class WorkQueue:
         self._stats: dict[str, WorkerStats] = {}
         self._lease_size = max(1, lease_size)
         self._lock = threading.Lock()
-        self._t0: dict[str, float] = {}
+        self._clock = _WorkerClock()
+
+    @property
+    def lease_size(self) -> int:
+        return self._lease_size
+
+    def set_lease_size(self, n: int) -> None:
+        """Retune the per-refill lease (runtime autotuning hook).  Only
+        future refills are affected — already-leased runs keep their
+        extent, so correctness never depends on when this lands."""
+        with self._lock:
+            self._lease_size = max(1, int(n))
 
     def stats(self) -> dict[str, WorkerStats]:
         """Point-in-time *snapshot* of per-worker accounting.
@@ -126,16 +182,15 @@ class WorkQueue:
         the result across further claims (progress lines, summary.json),
         and handing out the mutable internals would let them corrupt — or
         observe mid-update — the queue's own accounting.  The in-flight
-        interval of a worker mid-claim is folded into its *copy* (never
-        the live state), so ``busy_s`` is monotone across snapshots and a
-        long cell shows up in ``--progress`` utilization while it runs."""
+        interval of a worker is folded into its *copy* (never the live
+        state), so ``busy_s``/``wait_s`` are monotone across snapshots and
+        a long cell shows up in ``--progress`` utilization while it runs."""
         with self._lock:
             now = time.monotonic()
             out: dict[str, WorkerStats] = {}
             for w, st in self._stats.items():
                 snap = dataclasses.replace(st)
-                if w in self._t0:
-                    snap.busy_s += now - self._t0[w]
+                self._clock.snapshot_into(w, snap, now)
                 out[w] = snap
             return out
 
@@ -143,18 +198,19 @@ class WorkQueue:
         with self._lock:
             return len(self._pending) + sum(len(v) for v in self._leases.values())
 
-    def claim(self, worker: str) -> int | None:
-        """Next batch index for ``worker``, refilling or stealing as needed."""
+    def claim(self, worker: str, *, block: bool = True) -> int | None:
+        """Next batch index for ``worker``, refilling or stealing as needed.
+        (``block`` is accepted for backend uniformity; in-process claims
+        never block.)"""
+        del block
         with self._lock:
             st = self._stats.setdefault(worker, WorkerStats())
-            now = time.monotonic()
-            # Fold the busy interval since the last claim and POP the mark:
-            # a drained/unstealable claim below returns None, and a polling
-            # worker must not re-fold the same interval (idle spin is not
-            # busy time).  The mark is re-armed only when an item is handed
-            # out.
-            if worker in self._t0:
-                st.busy_s += now - self._t0.pop(worker)
+            # Attribute the interval since the worker's last event by its
+            # outstanding count THEN: a pipelined worker polling for its
+            # look-ahead while a cell is still in flight stays busy; a
+            # worker with nothing in hand accrues wait.  Each fold advances
+            # the mark, so no interval is ever double-counted.
+            self._clock.fold(worker, st, time.monotonic())
             lease = self._leases.setdefault(worker, [])
             if not lease:
                 if self._pending:
@@ -175,7 +231,7 @@ class WorkQueue:
                 return None
             idx = lease.pop(0)
             st.claimed += 1
-            self._t0[worker] = time.monotonic()
+            self._clock.claimed(worker)
             return idx
 
     def _pick_victim(self, thief: str) -> str | None:
@@ -191,8 +247,8 @@ class WorkQueue:
         with self._lock:
             st = self._stats.setdefault(worker, WorkerStats())
             st.completed += 1
-            if worker in self._t0:
-                st.busy_s += time.monotonic() - self._t0.pop(worker)
+            self._clock.fold(worker, st, time.monotonic())
+            self._clock.completed(worker)
 
     def stop(self) -> None:
         """Teardown hook (no-op: in-process claims never block)."""
@@ -337,7 +393,7 @@ class FsWorkQueue:
         self._write_lock = threading.Lock()
         self._stop = threading.Event()
         self._stats: dict[str, WorkerStats] = {}
-        self._t0: dict[str, float] = {}
+        self._clock = _WorkerClock()
         self._leases: dict[str, list[str]] = {}   # worker -> claimed, unserved
         self._held: set[str] = set()              # our live FS leases
         self._records: dict[str, dict] = {}       # held key -> last lease JSON
@@ -441,13 +497,11 @@ class FsWorkQueue:
         while True:
             with self._lock:
                 st = self._stats.setdefault(worker, WorkerStats())
-                now = time.monotonic()
-                if worker in self._t0:
-                    st.busy_s += now - self._t0.pop(worker)
+                self._clock.fold(worker, st, time.monotonic())
                 idx = None if self._stop.is_set() else self._serve_locked(worker, st)
                 if idx is not None:
                     st.claimed += 1
-                    self._t0[worker] = time.monotonic()
+                    self._clock.claimed(worker)
                     return idx
                 drained = not self._not_done
             if drained or self._stop.is_set():
@@ -613,8 +667,8 @@ class FsWorkQueue:
         with self._lock:
             st = self._stats.setdefault(worker, WorkerStats())
             st.completed += 1
-            if worker in self._t0:
-                st.busy_s += time.monotonic() - self._t0.pop(worker)
+            self._clock.fold(worker, st, time.monotonic())
+            self._clock.completed(worker)
             rec = self._records.pop(key, None) or self._record(key, worker, "done")
             rec["state"] = "done"
             rec["heartbeat"] = time.time()
@@ -665,10 +719,20 @@ class FsWorkQueue:
             out: dict[str, WorkerStats] = {}
             for w, st in self._stats.items():
                 snap = dataclasses.replace(st)
-                if w in self._t0:
-                    snap.busy_s += now - self._t0[w]
+                self._clock.snapshot_into(w, snap, now)
                 out[w] = snap
             return out
+
+    @property
+    def lease_size(self) -> int:
+        return self._lease_size
+
+    def set_lease_size(self, n: int) -> None:
+        """Retune future lease refills (host-local; peers tune themselves).
+        Already-claimed keys are unaffected, so cross-host correctness
+        cannot depend on when — or whether — a retune lands."""
+        with self._lock:
+            self._lease_size = max(1, int(n))
 
     def stop(self) -> None:
         """Unblock polling claims and stop the heartbeat thread.  Held

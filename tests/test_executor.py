@@ -211,6 +211,27 @@ def test_multi_executor_machinery_matches_serial(study):
                 np.testing.assert_array_equal(v, cell.arrays[k], err_msg=f"{key}:{k}")
 
 
+_PIPELINE_THREADS = (
+    "scan-device", "slot-decode", "slot-tail", "panel-prefetch-dev"
+)
+
+
+def _leaked_pipeline_threads():
+    import time as _time
+
+    # teardown joins everything before the generator's close() returns;
+    # the brief poll only absorbs scheduler jitter on loaded CI boxes
+    for _ in range(50):
+        alive = [
+            t for t in threading.enumerate()
+            if t.name.startswith(_PIPELINE_THREADS) and t.is_alive()
+        ]
+        if not alive:
+            return []
+        _time.sleep(0.02)
+    return alive
+
+
 def test_multi_executor_propagates_worker_errors(study):
     plan = study.plan(grid=_grid(trait_block=4))
     prep = plan.prepare()
@@ -231,7 +252,7 @@ def test_multi_executor_propagates_worker_errors(study):
             list(ex.cells(prep.batches, None))
     finally:
         prep.engine.prepare_batch = real_prepare
-    assert not [t for t in threading.enumerate() if t.name.startswith("scan-device")]
+    assert not _leaked_pipeline_threads()
 
 
 def test_multi_executor_early_close_joins_workers(study):
@@ -240,7 +261,48 @@ def test_multi_executor_early_close_joins_workers(study):
     gen = MultiDeviceExecutor(prep, n_devices=1).cells(prep.batches, None)
     next(gen)
     gen.close()
-    assert not [t for t in threading.enumerate() if t.name.startswith("scan-device")]
+    assert not _leaked_pipeline_threads()
+
+
+def test_pipelined_teardown_releases_slots_mid_stream(study, monkeypatch):
+    """Closing ``events()`` mid-scan tears down the whole per-slot
+    pipeline: decode pool, tail, and panel look-ahead threads are joined,
+    and every slot is reset (dropping its staged device panel blocks and
+    engine arrays — nothing stays pinned on the devices)."""
+    import repro.api.session as session_mod
+
+    plan = study.plan(grid=_grid(trait_block=4))
+    prep = plan.prepare()
+    resets = []
+    real_reset = session_mod._Slot.reset
+
+    def spy(self):
+        resets.append(self.label)
+        return real_reset(self)
+
+    monkeypatch.setattr(session_mod._Slot, "reset", spy)
+    ex = MultiDeviceExecutor(prep, n_devices=1, slot_prefetch=2)
+    gen = ex.cells(prep.batches, None)
+    next(gen)
+    gen.close()
+    assert resets  # every worker's finally ran its slot teardown
+    assert not _leaked_pipeline_threads()
+
+
+def test_panel_view_release_drops_staged_blocks(study):
+    """The slot-teardown primitive: release() empties the per-device LRU
+    (no pinned panel buffers survive the scan) but the view restages on
+    demand with identical bytes."""
+    import jax
+
+    prep = study.plan(grid=_grid(trait_block=4)).prepare()
+    view = prep.panels.device_view(jax.devices()[0])
+    blk = prep.trait_blocks[0]
+    before = np.asarray(view.device_block(blk))
+    assert len(view._dev) == 1
+    view.release()
+    assert len(view._dev) == 0
+    np.testing.assert_array_equal(np.asarray(view.device_block(blk)), before)
 
 
 # ----------------------------------------------------------------- metrics
@@ -396,6 +458,19 @@ _CHILD = textwrap.dedent(
             out["dense_trait_major_identical"] = tm == ref
             stolen = sum(w["stolen_by"] for w in info["workers"].values())
             out["dense_steals"] = stolen  # informational; may be 0
+            # forced-unpipelined worker (slot_prefetch=0, autotune off) is
+            # the same bytes as both the serial walk and the pipelined run
+            unp, _ = scan(f"{name}_unpiped", executor=ExecSpec(
+                devices=3, slot_prefetch=0, autotune_lease=False), **kw)
+            out["dense_unpipelined_identical"] = unp == ref
+            out["dense_autotune"] = info["autotune"]
+            out["dense_slot_prefetch"] = info["slot_prefetch"]
+            md = session.metrics.summary()
+            out["dense_per_device_decode"] = all(
+                "decode_s" in v and "stage_s" in v
+                for v in md["per_device"].values()
+            )
+            out["dense_decode_total"] = md["decode_s"]
 
     # Resume with a DIFFERENT device count: full 2-device checkpointed run,
     # cut one whole batch plus a mid-panel cell, resume on 4 devices.
@@ -444,6 +519,25 @@ def test_multi_device_bitwise_identical(child_results, engine):
 
 def test_trait_major_placement_bitwise_identical(child_results):
     assert child_results["dense_trait_major_identical"] is True
+
+
+def test_unpipelined_fallback_bitwise_identical(child_results):
+    """--slot-prefetch 0 (the historical one-staged-batch worker) and the
+    pipelined default produce the same bytes — pipelining only moves WHEN
+    host work happens, never what is computed."""
+    assert child_results["dense_unpipelined_identical"] is True
+
+
+def test_autotune_and_pipeline_reported(child_results):
+    at = child_results["dense_autotune"]
+    assert at["enabled"] is True
+    assert at["initial_lease"] >= 1 and at["final_lease"] >= 1
+    assert at["final_lease"] <= at["initial_lease"]  # tuner only shrinks
+    assert at["adjustments"] >= 0
+    assert child_results["dense_slot_prefetch"] == 1
+    # decode/stage time is attributed per device in the metrics summary
+    assert child_results["dense_per_device_decode"] is True
+    assert child_results["dense_decode_total"] > 0
 
 
 def test_resume_across_device_counts(child_results):

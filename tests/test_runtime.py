@@ -113,24 +113,51 @@ def test_workqueue_victim_tie_break_deterministic():
 
 
 def test_workqueue_idle_polling_is_not_busy():
-    """A polling worker must not re-fold the same interval every None
-    claim: busy marks are popped on EVERY claim path, so idle spin on a
-    drained queue adds ~nothing to busy_s (the bug inflated utilization
-    by the stale interval once per poll)."""
+    """A polling worker with NOTHING in flight must not inflate busy_s:
+    every interval is attributed exactly once, by the worker's outstanding
+    count at the time — busy while it holds a claimed-uncompleted item
+    (the pipelined look-ahead probes while computing), wait when it is
+    empty-handed (idle spin on a drained queue)."""
     q = WorkQueue(1, lease_size=1)
     idx = q.claim("w")
     time.sleep(0.05)
-    assert q.claim("w") is None       # drained: folds the real interval once
+    q.complete("w", idx)              # folds the real interval as busy
     base = q.stats()["w"].busy_s
     assert base >= 0.04
     for _ in range(5):
         time.sleep(0.01)
-        assert q.claim("w") is None
-    assert q.stats()["w"].busy_s - base < 0.04   # bug added ~50ms per poll
-    # the mark was popped: complete() after the None claims must not
-    # double-count the long-gone interval either
+        assert q.claim("w") is None   # drained, empty-handed: wait, not busy
+    st = q.stats()["w"]
+    assert st.busy_s - base < 0.04    # the bug added ~50ms per poll
+    assert st.wait_s >= 0.04          # the idle spin is accounted — as wait
+
+
+def test_workqueue_polling_with_item_in_flight_is_busy():
+    """The pipelined worker's shape: look-ahead claims issued WHILE a cell
+    is in flight stay busy time — only empty-handed intervals are wait."""
+    q = WorkQueue(1, lease_size=1)
+    idx = q.claim("w")
+    for _ in range(3):
+        time.sleep(0.01)
+        assert q.claim("w") is None   # look-ahead probe, item still in hand
+    st = q.stats()["w"]
+    assert st.busy_s >= 0.02
+    assert st.wait_s < 0.005
     q.complete("w", idx)
-    assert q.stats()["w"].busy_s - base < 0.04
+
+
+def test_workqueue_set_lease_size():
+    """Runtime retune affects future refills only; already-leased items
+    keep their extent."""
+    q = WorkQueue(10, lease_size=4)
+    a0 = q.claim("a")                 # leases 4 (serves 1, holds 3)
+    q.set_lease_size(1)
+    b0 = q.claim("b")                 # fresh refill: leases exactly 1
+    assert q._leases["b"] == []       # served its single item immediately
+    assert len(q._leases["a"]) == 3   # a's fat lease is untouched
+    assert q.lease_size == 1
+    q.complete("a", a0)
+    q.complete("b", b0)
 
 
 def test_workqueue_stats_fold_in_flight_busy():
