@@ -16,8 +16,15 @@
     pipeline      — per-slot pipelining before/after (§15): unpipelined vs
                     prefetched/double-buffered workers at 2 and 4 devices,
                     decode/stage shares of step time
+    serve         — scan-as-a-service (§16): warm window-query latency
+                    p50/p95/p99 through the full request path (admission,
+                    fair-share queue, resident-state reuse), cold-query
+                    cost, and 2-client concurrent panel throughput
     kernels       — us/call of the association GEMM across batch geometries
     scaling_n     — runtime vs cohort size N (linear, §2.2)
+
+Run with ``--sections serve,kernels`` to re-measure a subset; rows for the
+other sections are carried over from the existing ``BENCH_scan.json``.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes the same data as
 ``BENCH_scan.json`` (per-section us/call + derived metrics) so the perf
@@ -486,6 +493,98 @@ def bench_epilogue() -> None:
          f"lanes={m * p}")
 
 
+def bench_serve() -> None:
+    """Scan-as-a-service (DESIGN.md §16): request latency through the full
+    serve path — admission, fair-share queueing on the persistent
+    WorkQueue, resident-state reuse, request-scoped TSV writers.  The row
+    that matters for an interactive service is the WARM window-query
+    latency: the resident study already holds the residualized panel,
+    compiled step, and device slots, so a query pays only decode + step +
+    epilogue + write.  ``serve_window_cold`` keeps the one-time cost
+    (first decode/compile for the window shape) visible, and
+    ``serve_concurrent_panels`` measures two interleaved panel uploads
+    sharing the executor — the multi-tenant case."""
+    import os
+    import tempfile
+
+    from repro.api import GridSpec, Study
+    from repro.serve import ServeHost
+
+    co = synth.make_cohort(n_samples=512, n_markers=2048, n_traits=64,
+                           n_causal=6, seed=9)
+    d = tempfile.mkdtemp()
+    paths = synth.write_cohort_files(co, os.path.join(d, "bench_serve"))
+    study = Study.from_files(paths["bed"], paths["pheno"], paths["cov"])
+    host = ServeHost(devices=1, max_resident_slots=4,
+                     out_root=os.path.join(d, "serve_out"))
+    try:
+        host.admit_study(
+            "bench", study,
+            grid=GridSpec(batch_markers=256, trait_block=16,
+                          block_m=64, block_n=128, block_p=16),
+            hit_threshold_nlp=2.0,
+        )
+        warm = host.warm_study("bench")
+        emit("serve_warm_study", warm["prepare_s"] * 1e6,
+             "one_time=source_scan+residualize+compile")
+
+        def window(lo: int, hi: int) -> float:
+            t0 = time.perf_counter()
+            info = host.wait(host.submit_window("bench", lo, hi), timeout=600)
+            assert info["status"] == "done", info
+            return time.perf_counter() - t0
+
+        cold_s = window(0, 256)  # first query still pays step compile
+        lats = []
+        m_total = co.dosages.shape[0]
+        for i in range(15):
+            lo = (i * 256) % m_total
+            lats.append(window(lo, lo + 256))
+        p50, p95, p99 = (float(np.percentile(lats, q)) for q in (50, 95, 99))
+        emit("serve_window_cold", cold_s * 1e6,
+             f"first_query_extra_vs_warm_p50={cold_s / max(p50, 1e-9):.1f}x")
+        emit("serve_window_warm", float(np.mean(lats)) * 1e6,
+             f"n=15,p50_ms={p50 * 1e3:.0f},p95_ms={p95 * 1e3:.0f},"
+             f"p99_ms={p99 * 1e3:.0f}")
+
+        import threading
+
+        rng = np.random.default_rng(11)
+        errs: list[str] = []
+
+        def panel_client(seed_off: int) -> None:
+            panel = np.asarray(co.phenotypes) + rng.normal(
+                scale=1e-3, size=co.phenotypes.shape
+            ).astype(np.float32) * seed_off
+            info = host.wait(
+                host.submit_panel("bench", panel), timeout=600
+            )
+            if info["status"] != "done":
+                errs.append(str(info))
+
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=panel_client, args=(i,))
+              for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        dt = time.perf_counter() - t0
+        assert not errs, errs
+        summary = host.metrics_summary()
+        lat = summary["serve"]["latency"]
+        cache = summary["serve"]["caches"]["device_state"]
+        tm = 2 * m_total * co.phenotypes.shape[1]
+        emit("serve_concurrent_panels", dt * 1e6,
+             f"requests=2,trait_markers_per_s={tm / dt:.0f},"
+             f"device_state_hit_rate={cache['hit_rate']}")
+        emit("serve_latency_all", 0.0,
+             f"n={lat['n']},p50_s={lat['p50_s']},p95_s={lat['p95_s']},"
+             f"p99_s={lat['p99_s']}")
+    finally:
+        host.shutdown()
+
+
 def bench_kernels() -> None:
     """Association GEMM across geometries (us/call + achieved GFLOP/s)."""
     rng = np.random.default_rng(0)
@@ -521,9 +620,10 @@ def bench_scaling_n() -> None:
         emit(f"scaling_N{n}", us, f"us_per_sample={us / n:.2f}")
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     global _SECTION
-    print("name,us_per_call,derived")
+    import argparse
+
     sections = [
         ("concordance", bench_concordance),
         ("throughput", bench_throughput),
@@ -533,22 +633,52 @@ def main() -> None:
         ("executor", bench_executor),
         ("pipeline", bench_pipeline),
         ("epilogue", bench_epilogue),
+        ("serve", bench_serve),
         ("kernels", bench_kernels),
         ("scaling_n", bench_scaling_n),
     ]
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--sections", default=None, metavar="A,B,...",
+        help="run only these sections and merge the rest from the existing "
+             f"BENCH_scan.json (default: all of {','.join(n for n, _ in sections)})",
+    )
+    args = ap.parse_args(argv)
+    wanted = None if args.sections is None else set(args.sections.split(","))
+    if wanted:
+        unknown = wanted - {n for n, _ in sections}
+        if unknown:
+            ap.error(f"unknown sections: {sorted(unknown)}")
+
+    print("name,us_per_call,derived")
     for name, fn in sections:
+        if wanted is not None and name not in wanted:
+            continue
         _SECTION = name
         fn()
+    rows = list(ROWS)
+    if wanted is not None:
+        # Partial run: keep every row of sections we did not re-run, in the
+        # canonical section order, so the JSON stays a full snapshot.
+        try:
+            with open("BENCH_scan.json") as f:
+                kept = [r for r in json.load(f)["rows"]
+                        if r["section"] not in wanted]
+        except (OSError, KeyError, ValueError):
+            kept = []
+        order = {n: i for i, (n, _) in enumerate(sections)}
+        rows = sorted(kept + rows,
+                      key=lambda r: order.get(r["section"], len(order)))
     payload = {
         "schema": 1,
         "device": jax.devices()[0].platform,
         "jax": jax.__version__,
-        "sections": sorted({r["section"] for r in ROWS}),
-        "rows": ROWS,
+        "sections": sorted({r["section"] for r in rows}),
+        "rows": rows,
     }
     with open("BENCH_scan.json", "w") as f:
         json.dump(payload, f, indent=1)
-    print(f"wrote BENCH_scan.json ({len(ROWS)} rows)")
+    print(f"wrote BENCH_scan.json ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -39,7 +39,14 @@ from repro.api.session import (
     ScanSession,
     SerialExecutor,
 )
-from repro.api.specs import ExecSpec, GridSpec, IOSpec, LmmSpec, ScanConfig
+from repro.api.specs import (
+    ExecSpec,
+    GridSpec,
+    IOSpec,
+    LmmSpec,
+    ScanConfig,
+    ServeSpec,
+)
 from repro.api.study import Study
 from repro.api.writers import (
     NpzShardWriter,
@@ -57,6 +64,7 @@ __all__ = [
     "LmmSpec",
     "IOSpec",
     "ExecSpec",
+    "ServeSpec",
     "ScanConfig",
     "ScanPlan",
     "ScanSession",

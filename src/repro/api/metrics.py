@@ -77,6 +77,13 @@ class ScanMetrics:
         self._decode_s = 0.0
         self._stage_s = 0.0
         self._per_device: dict[str, dict] = {}     # label -> cells/busy_s/...
+        # Serve-mode observability (repro.serve): per-request wall-clock
+        # latencies (requests are few relative to cells, so retaining them
+        # for exact percentiles is cheap), a queue-depth gauge, and cache
+        # counter snapshots (device-state slots, panel blocks).
+        self._request_lat: dict[str, list[float]] = {}
+        self._queue_depth = 0
+        self._caches: dict[str, dict] = {}
 
     # ------------------------------------------------------------ recording
 
@@ -113,6 +120,69 @@ class ScanMetrics:
         dilutes the reported throughput."""
         if self._t0 is not None and self.wall_s == 0.0:
             self.wall_s = time.perf_counter() - self._t0
+
+    # ------------------------------------------------------------ serve mode
+
+    def record_request(self, wall_s: float, *, kind: str = "panel") -> None:
+        """One served request's end-to-end latency (admission to final
+        result), bucketed by request kind (``panel`` upload vs resident
+        ``window`` query — their cost profiles differ by design)."""
+        self._request_lat.setdefault(kind, []).append(float(wall_s))
+
+    def set_queue_depth(self, depth: int) -> None:
+        """Gauge: work items pending + leased on the serve queue."""
+        self._queue_depth = int(depth)
+
+    def set_cache_stats(self, name: str, stats: dict) -> None:
+        """Counter snapshot of one warm cache (``device_state`` slots,
+        ``panel`` blocks) — taken from ``DeviceLRU.stats()``."""
+        self._caches[name] = dict(stats)
+
+    @staticmethod
+    def _percentile(xs: list[float], q: float) -> float:
+        """Linear-interpolated percentile of a non-empty sample."""
+        s = sorted(xs)
+        if len(s) == 1:
+            return s[0]
+        pos = (len(s) - 1) * q
+        lo = int(pos)
+        frac = pos - lo
+        hi = min(lo + 1, len(s) - 1)
+        return s[lo] * (1.0 - frac) + s[hi] * frac
+
+    def request_latency(self, kind: str | None = None) -> dict | None:
+        """p50/p95/p99/max/mean over recorded request walls (one kind, or
+        all kinds pooled); ``None`` until a request completes."""
+        if kind is None:
+            xs = [x for v in self._request_lat.values() for x in v]
+        else:
+            xs = list(self._request_lat.get(kind, ()))
+        if not xs:
+            return None
+        return {
+            "n": len(xs),
+            "p50_s": round(self._percentile(xs, 0.50), 4),
+            "p95_s": round(self._percentile(xs, 0.95), 4),
+            "p99_s": round(self._percentile(xs, 0.99), 4),
+            "max_s": round(max(xs), 4),
+            "mean_s": round(sum(xs) / len(xs), 4),
+        }
+
+    def serve_summary(self) -> dict | None:
+        """The ``summary()`` ``serve`` block; ``None`` when this metrics
+        object never saw serve traffic."""
+        if not self._request_lat and not self._caches:
+            return None
+        by_kind = {
+            kind: self.request_latency(kind) for kind in sorted(self._request_lat)
+        }
+        return {
+            "requests": sum(len(v) for v in self._request_lat.values()),
+            "latency": self.request_latency(),
+            "latency_by_kind": by_kind,
+            "queue_depth": self._queue_depth,
+            "caches": dict(self._caches),
+        }
 
     # -------------------------------------------------------------- reading
 
@@ -165,7 +235,10 @@ class ScanMetrics:
         markers = self.markers_done()
         tm = self.trait_markers_done()
         share = self.extract_share()
+        serve = self.serve_summary()
+        extra = {"serve": serve} if serve is not None else {}
         return {
+            **extra,
             "cells": self.cells_done,
             "cells_total": self.n_cells_total,
             "live_cells": self._live_cells,

@@ -423,9 +423,24 @@ class ScanPlan:
 
     # ----------------------------------------------------------------- run
 
-    def run(self, *, resume: bool = True) -> "ScanSession":
-        """Prepare (if not already) and open an executable session."""
-        return ScanSession(self.prepare(), resume=resume)
+    def run(
+        self,
+        *,
+        resume: bool = True,
+        executor=None,
+        marker_window: tuple[int, int] | None = None,
+    ) -> "ScanSession":
+        """Prepare (if not already) and open an executable session.
+
+        ``executor`` injects a pre-built executor handle (the serve
+        subsystem's shared worker pool — DESIGN.md §16) instead of the
+        session constructing its own; ``marker_window`` restricts the run
+        to the batch-aligned sub-grid covering ``[lo, hi)`` markers.
+        """
+        return ScanSession(
+            self.prepare(), resume=resume, executor=executor,
+            marker_window=marker_window,
+        )
 
 
 # ------------------------------------------------------------------ executors
@@ -1078,6 +1093,8 @@ class ScanSession:
         *,
         resume: bool = True,
         step: Callable[..., dict] | None = None,
+        executor=None,
+        marker_window: tuple[int, int] | None = None,
     ):
         self.prepared = prepared
         self.study = prepared.study
@@ -1085,6 +1102,32 @@ class ScanSession:
         self.resume = resume
         self._step = step if step is not None else prepared.step
         self._consumed = False
+        # An injected executor handle (duck-typed: ``cells(todo, pending)``
+        # generator + ``info()``) replaces the session-owned executor — the
+        # seam that lets N concurrent serve sessions share ONE long-lived
+        # worker pool and work queue (each session gets a request-scoped
+        # view of the pool, so sinks and writers stay per-session).
+        self._executor = executor
+        # A batch-aligned sub-grid: only marker batches overlapping
+        # [lo, hi) are computed (serve's marker-window queries).  The
+        # window is widened to batch boundaries — ``window_covered`` is
+        # the exact extent — so every computed cell is bit-identical to
+        # the same cell of a full scan.
+        self.marker_window = marker_window
+        if marker_window is not None:
+            lo, hi = int(marker_window[0]), int(marker_window[1])
+            if not (0 <= lo < hi <= self.study.n_markers):
+                raise ValueError(
+                    f"marker_window [{lo}, {hi}) outside "
+                    f"[0, {self.study.n_markers})"
+                )
+            self._batches = [
+                b for b in prepared.batches if b.hi > lo and b.lo < hi
+            ]
+            self.window_covered = (self._batches[0].lo, self._batches[-1].hi)
+        else:
+            self._batches = list(prepared.batches)
+            self.window_covered = None
 
         # Executor selection (DESIGN.md §12).  devices=0 means every
         # visible device; 1 is the serial walk.  Resolved here, NOT in the
@@ -1100,7 +1143,7 @@ class ScanSession:
                 "drop the mesh to scale by grid cells)"
             )
         self.metrics = ScanMetrics(
-            n_cells_total=prepared.n_batches * prepared.n_trait_blocks
+            n_cells_total=len(self._batches) * prepared.n_trait_blocks
         )
         # Optional observer called after every recorded cell — the CLI's
         # progress line; must be cheap, runs on the consumer thread.
@@ -1191,6 +1234,11 @@ class ScanSession:
         }
 
     def _make_executor(self):
+        if self._executor is not None:
+            # Injected handle (the serve pool's request-scoped view): the
+            # pool owns workers, devices, and the shared queue; this
+            # session only consumes its own cells.
+            return self._executor
         # A distributed backend routes through the scheduler even on one
         # device: the lease table is what coordinates this process with its
         # peers, and the serial walk never touches it.
@@ -1232,7 +1280,7 @@ class ScanSession:
         self._consumed = True
         ckpt = self.checkpoint
 
-        todo = self.prepared.batches
+        todo = self._batches
         pending: set[tuple[int, int]] | None = None   # (batch, block) cells
         if ckpt is not None and self.resume:
             # Fold in cells peer processes committed since we opened the
@@ -1243,7 +1291,7 @@ class ScanSession:
             # completed cells of a re-staged batch are skipped by the
             # executor and replayed from their shards below.
             batches_pending = {b for b, _ in pending}
-            todo = [b for b in self.prepared.batches if b.index in batches_pending]
+            todo = [b for b in self._batches if b.index in batches_pending]
 
         executor = self._make_executor()
         distributed = getattr(executor, "backend", "threads") != "threads"
@@ -1286,7 +1334,15 @@ class ScanSession:
         # COMPLETE grid (that is what makes N hosts' outputs identical).
         if ckpt is not None:
             ckpt.refresh()
+            # A windowed session replays only its own batches: cells other
+            # sessions committed outside the window are not its grid.
+            window_b = (
+                {b.index for b in self._batches}
+                if self.marker_window is not None else None
+            )
             for bidx, kidx in sorted(ckpt.completed_cells() - computed):
+                if window_b is not None and bidx not in window_b:
+                    continue
                 t0 = time.perf_counter()
                 cell = CellResult.from_shard(bidx, kidx, ckpt.load_cell(bidx, kidx))
                 self.metrics.record(CellTiming(

@@ -23,7 +23,7 @@ from dataclasses import dataclass
 from repro.core.association import AssocOptions
 from repro.runtime.scheduler import PLACEMENTS
 
-__all__ = ["GridSpec", "LmmSpec", "IOSpec", "ExecSpec", "ScanConfig"]
+__all__ = ["GridSpec", "LmmSpec", "IOSpec", "ExecSpec", "ServeSpec", "ScanConfig"]
 
 
 @dataclass(frozen=True)
@@ -150,6 +150,59 @@ class ExecSpec:
         if self.lease_ttl <= 0:
             raise ValueError(
                 f"ExecSpec.lease_ttl must be positive, got {self.lease_ttl}"
+            )
+
+
+@dataclass(frozen=True)
+class ServeSpec:
+    """The serve subsystem (DESIGN.md §16): a persistent multi-tenant scan
+    service over the warm executor stack.
+
+    Nothing here touches the scan math — serve requests run the same grid,
+    engines, and sinks as an offline scan, so served results are
+    byte-identical to offline outputs by construction.  These knobs size
+    the *service*: the shared worker pool, the warm-slot cache, and the
+    fair-share scheduler.
+    """
+
+    host: str = "127.0.0.1"
+    port: int = 0                  # 0 = OS-assigned ephemeral port
+    devices: int = 1               # shared pool slots; 0 = every visible device
+    # Warm executor-slot cache capacity: (study-state, slot) entries held
+    # device-resident across requests; LRU-evicted past this, pinned while
+    # a request is mid-cell (DeviceLRU pinning).
+    max_resident_slots: int = 8
+    # Work items leased per claim on the shared serve queue.  Small leases
+    # keep the deficit-round-robin responsive (a big lease would let one
+    # request's cells monopolize a worker between scheduling decisions).
+    lease_size: int = 1
+    # Deficit-round-robin quantum: cells credited to a request queue per
+    # scheduling round, scaled by the study's weight (serve/fair.py).
+    drr_quantum: float = 2.0
+    default_weight: float = 1.0
+
+    def validate(self) -> None:
+        if not (0 <= self.port <= 65535):
+            raise ValueError(f"ServeSpec.port must be in [0, 65535], got {self.port}")
+        if self.devices < 0:
+            raise ValueError(f"ServeSpec.devices must be >= 0, got {self.devices}")
+        if self.max_resident_slots < 1:
+            raise ValueError(
+                f"ServeSpec.max_resident_slots must be >= 1, "
+                f"got {self.max_resident_slots}"
+            )
+        if self.lease_size < 1:
+            raise ValueError(
+                f"ServeSpec.lease_size must be >= 1, got {self.lease_size}"
+            )
+        if self.drr_quantum <= 0:
+            raise ValueError(
+                f"ServeSpec.drr_quantum must be positive, got {self.drr_quantum}"
+            )
+        if self.default_weight <= 0:
+            raise ValueError(
+                f"ServeSpec.default_weight must be positive, "
+                f"got {self.default_weight}"
             )
 
 

@@ -61,12 +61,20 @@ __all__ = [
 class DeviceLRU:
     """Small keyed cache of device-staged arrays with LRU eviction.
 
-    One idiom, three users (the driver's ``PanelStore`` blocks, the lmm
-    engine's per-(scope, block) panels and per-scope rotation pairs): stage
-    through ``loader`` on miss, refresh recency on hit, evict the least
-    recently used entry past ``capacity``.  ``on_evict`` lets dependent
-    caches cascade (a LOCO scope's panel blocks die with its rotation).
-    Thread-safe: loaders may be reached from prefetch workers.
+    One idiom, four users (the driver's ``PanelStore`` blocks, the lmm
+    engine's per-(scope, block) panels and per-scope rotation pairs, the
+    serve registry's warm executor slots): stage through ``loader`` on
+    miss, refresh recency on hit, evict the least recently used entry past
+    ``capacity``.  ``on_evict`` lets dependent caches cascade (a LOCO
+    scope's panel blocks die with its rotation).  Thread-safe: loaders may
+    be reached from prefetch workers.
+
+    ``pin``/``unpin`` hold a ref-count per key: pinned entries are never
+    chosen for eviction (capacity may be transiently exceeded while every
+    resident entry is pinned), which is what lets a long-lived serve
+    request keep its device state resident while other requests churn the
+    cache.  Hit/miss/eviction counters feed the serve cache-hit-rate
+    observability and cost nothing on the scan hot path.
     """
 
     def __init__(self, capacity: int, loader: Callable[[Any], Any],
@@ -75,20 +83,69 @@ class DeviceLRU:
         self._loader = loader
         self._on_evict = on_evict
         self._data: dict[Any, Any] = {}
+        self._pins: dict[Any, int] = {}
         self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
     def get(self, key: Any) -> Any:
         with self._lock:
             if key in self._data:
+                self.hits += 1
                 self._data[key] = self._data.pop(key)  # refresh recency
             else:
+                self.misses += 1
                 while len(self._data) >= self.capacity:
-                    gone = next(iter(self._data))
+                    gone = next(
+                        (k for k in self._data if k not in self._pins), None
+                    )
+                    if gone is None:
+                        break  # everything resident is pinned: overshoot
                     self._data.pop(gone)
+                    self.evictions += 1
                     if self._on_evict is not None:
                         self._on_evict(gone)
                 self._data[key] = self._loader(key)
             return self._data[key]
+
+    def pin(self, key: Any) -> None:
+        """Hold ``key`` resident (ref-counted): eviction skips it until the
+        matching ``unpin``.  Pinning a not-yet-loaded key is allowed — the
+        pin protects the entry the next ``get`` stages."""
+        with self._lock:
+            self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, key: Any) -> None:
+        with self._lock:
+            if key not in self._pins:
+                raise KeyError(f"unpin of {key!r} without a matching pin")
+            n = self._pins[key] - 1
+            if n <= 0:
+                del self._pins[key]
+            else:
+                self._pins[key] = n
+
+    def pinned(self, key: Any) -> bool:
+        with self._lock:
+            return key in self._pins
+
+    @property
+    def n_pinned(self) -> int:
+        return len(self._pins)
+
+    def stats(self) -> dict:
+        """Counter snapshot for cache observability (serve metrics)."""
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "resident": len(self._data),
+                "pinned": len(self._pins),
+                "hit_rate": round(self.hits / total, 4) if total else None,
+            }
 
     def drop_if(self, pred: Callable[[Any], bool]) -> None:
         with self._lock:
@@ -97,12 +154,15 @@ class DeviceLRU:
 
     def clear(self) -> None:
         """Drop every staged entry (cascading through ``on_evict``) —
-        executor-slot teardown, so a closed scan pins no device blocks."""
+        executor-slot teardown, so a closed scan pins no device blocks.
+        Deliberately ignores pins: teardown outranks residency, and the
+        pin table is cleared with the data."""
         with self._lock:
             for key in list(self._data):
                 self._data.pop(key)
                 if self._on_evict is not None:
                     self._on_evict(key)
+            self._pins.clear()
 
     def __len__(self) -> int:
         return len(self._data)

@@ -57,6 +57,19 @@ class PanelView:
         cell's compute."""
         return self._dev.get(block.index)
 
+    def pin_block(self, block: TraitBlock) -> None:
+        """Ref-count-pin one staged block against LRU eviction (serve
+        keeps a resident study's hot blocks warm across requests)."""
+        self._dev.pin(block.index)
+
+    def unpin_block(self, block: TraitBlock) -> None:
+        self._dev.unpin(block.index)
+
+    def cache_stats(self) -> dict:
+        """Hit/miss/eviction counters of this view's staging LRU — the
+        panel-cache observability surfaced in serve metrics."""
+        return self._dev.stats()
+
     def release(self) -> None:
         """Drop every staged block (executor-slot teardown).  The view
         stays usable — the next ``device_block`` restages — but a closed
@@ -118,6 +131,10 @@ class PanelStore:
         """Device array for one block on the default device (the serial
         executor's path — see ``PanelView``)."""
         return self._default.device_block(block)
+
+    def cache_stats(self) -> dict:
+        """The shared default view's staging-LRU counters."""
+        return self._default.cache_stats()
 
     def device_view(self, device=None, *, max_resident: int | None = None) -> PanelView:
         """A per-executor-slot view staging blocks onto ``device``.

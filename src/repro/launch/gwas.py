@@ -13,6 +13,10 @@
 
     python -m repro.launch.gwas report --out results/ [--top 20]
 
+    python -m repro.launch.gwas serve \
+        --genotypes cohort.bed --pheno panel.tsv [--covar covars.tsv] \
+        [--port 8763] [--devices 2] [--ready-file serve.addr]
+
 ``scan`` binds a Study, plans the grid, and streams the session's events
 through result writers — hits land in sorted ``hits.tsv`` batch by batch
 (never held as a dense table in RAM), per-trait best and per-marker QC
@@ -44,8 +48,9 @@ import numpy as np
 
 from repro.core.association import AssocOptions
 from repro.core.engines import available_engines
+from repro.runtime.workqueue import available_backends
 
-SUBCOMMANDS = ("scan", "grm", "merge", "report")
+SUBCOMMANDS = ("scan", "grm", "merge", "report", "serve")
 
 
 # ------------------------------------------------------------------- scan
@@ -101,12 +106,14 @@ def build_scan_parser() -> argparse.ArgumentParser:
                     help="work items leased per scheduler claim (work "
                          "stealing splits at marker-batch granularity)")
     ex.add_argument("--exec-backend", default="threads",
-                    choices=["threads", "shared-fs"],
-                    help="scheduler backend: threads keeps the lease table "
-                         "in-process; shared-fs puts it on the filesystem "
-                         "next to --checkpoint-dir so N independent "
-                         "processes (across hosts) drain one grid — run the "
-                         "same command on each host")
+                    choices=sorted(available_backends()),
+                    help="scheduler backend, one of: "
+                         f"{', '.join(sorted(available_backends()))}.  "
+                         "threads keeps the lease table in-process; "
+                         "shared-fs puts it on the filesystem next to "
+                         "--checkpoint-dir so N independent processes "
+                         "(across hosts) drain one grid — run the same "
+                         "command on each host")
     ex.add_argument("--host-id", default=None,
                     help="this process's identity in the shared-fs lease "
                          "table (default hostname-pid); must be unique per "
@@ -445,6 +452,121 @@ def cmd_report(argv) -> None:
         print(f"  {r[0]:<14} {r[1]:<12} {r[2]:>8} {r[3]:>9} {r[4]:>9}")
 
 
+# ------------------------------------------------------------------ serve
+
+
+def build_serve_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.gwas serve",
+        description="Persistent multi-tenant scan service (DESIGN.md §16): "
+                    "keep a cohort resident — open source, residualized "
+                    "panel, GRM spectrum, warm device slots — and serve "
+                    "phenotype-panel scans and marker-window queries over "
+                    "HTTP, byte-identical to the offline `scan` subcommand.",
+    )
+    ap.add_argument("--genotypes", required=True,
+                    help="resident study genotypes (.bed/.bgen/.npy/.npz, "
+                         "glob, or comma list)")
+    ap.add_argument("--pheno", required=True, help="resident phenotype table")
+    ap.add_argument("--covar", default=None, help="covariate table")
+    ap.add_argument("--study-id", default="default",
+                    help="name the resident study registers under")
+    ap.add_argument("--engine", default="dense", choices=available_engines())
+    ap.add_argument("--batch-markers", type=int, default=8192)
+    ap.add_argument("--trait-block", type=int, default=0)
+    ap.add_argument("--block-p", type=int, default=256)
+    ap.add_argument("--hit-threshold", type=float, default=7.301)
+    ap.add_argument("--maf-min", type=float, default=0.0)
+    sv = ap.add_argument_group("service")
+    sv.add_argument("--host", default="127.0.0.1")
+    sv.add_argument("--port", type=int, default=0,
+                    help="listen port (0 = ephemeral; the bound port is "
+                         "printed and written to --ready-file)")
+    sv.add_argument("--devices", type=int, default=1,
+                    help="serve worker slots (0 = every visible device)")
+    sv.add_argument("--max-resident-slots", type=int, default=8,
+                    help="warm device-state cache capacity (LRU-evicted "
+                         "beyond this; pinned slots never evict)")
+    sv.add_argument("--lease-size", type=int, default=1,
+                    help="cells leased per worker claim from the fair-share "
+                         "queue (1 = finest-grained interleaving)")
+    sv.add_argument("--drr-quantum", type=float, default=2.0,
+                    help="deficit-round-robin quantum: cells credited per "
+                         "request queue per scheduling round, scaled by "
+                         "study weight")
+    sv.add_argument("--weight", type=float, default=1.0,
+                    help="fair-share weight of the resident study")
+    sv.add_argument("--out-root", default=None,
+                    help="directory for per-request result bundles "
+                         "(default: a fresh temp dir)")
+    sv.add_argument("--ready-file", default=None,
+                    help="write '<host> <port>' here once listening "
+                         "(atomic; lets scripts wait for boot)")
+    sv.add_argument("--no-warm", action="store_true",
+                    help="skip the eager resident-panel prepare at boot "
+                         "(first window query pays it instead)")
+    sv.add_argument("--verbose", action="store_true",
+                    help="log HTTP requests to stderr")
+    return ap
+
+
+def cmd_serve(argv) -> None:
+    import signal
+
+    from repro.api import GridSpec, ServeSpec, Study
+    from repro.serve import ServeHost, ServeServer
+
+    args = build_serve_parser().parse_args(argv)
+    spec = ServeSpec(
+        host=args.host, port=args.port, devices=args.devices,
+        max_resident_slots=args.max_resident_slots,
+        lease_size=args.lease_size, drr_quantum=args.drr_quantum,
+        default_weight=args.weight,
+    )
+    spec.validate()
+    study = Study.from_files(args.genotypes, args.pheno, args.covar)
+    host = ServeHost(
+        devices=spec.devices,
+        max_resident_slots=spec.max_resident_slots,
+        lease_size=spec.lease_size,
+        drr_quantum=spec.drr_quantum,
+        default_weight=spec.default_weight,
+        out_root=args.out_root,
+    )
+    host.admit_study(
+        args.study_id, study,
+        engine=args.engine,
+        grid=GridSpec(batch_markers=args.batch_markers,
+                      trait_block=args.trait_block, block_p=args.block_p),
+        hit_threshold_nlp=args.hit_threshold,
+        maf_min=args.maf_min,
+    )
+    boot: dict = {"study": args.study_id, "warm": not args.no_warm}
+    if not args.no_warm:
+        boot["prepare_s"] = host.warm_study(args.study_id)["prepare_s"]
+    server = ServeServer(
+        host, bind=spec.host, port=spec.port, verbose=args.verbose
+    ).start()
+    bound_host, bound_port = server.address
+    boot.update({"host": bound_host, "port": bound_port,
+                 "out_root": host.out_root})
+    print(json.dumps({"serving": boot}), flush=True)
+    if args.ready_file:
+        tmp = args.ready_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{bound_host} {bound_port}\n")
+        os.replace(tmp, args.ready_file)
+
+    def _stop(signum, frame):  # noqa: ARG001 — signal signature
+        server.shutdown_async()
+
+    signal.signal(signal.SIGTERM, _stop)
+    signal.signal(signal.SIGINT, _stop)
+    server.wait()
+    print(json.dumps({"stopped": {"requests": host.metrics_summary()["requests"]}}),
+          flush=True)
+
+
 # ------------------------------------------------------------------- main
 
 
@@ -458,6 +580,7 @@ def main(argv=None) -> None:
                 "grm": cmd_grm,
                 "merge": cmd_merge,
                 "report": cmd_report,
+                "serve": cmd_serve,
             }[cmd](rest)
         # Historical flags-only invocation == `scan` (kept until the
         # GenomeScan shim is removed).

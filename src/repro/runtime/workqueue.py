@@ -37,6 +37,7 @@ from typing import Callable
 __all__ = [
     "WorkQueue",
     "FsWorkQueue",
+    "LeasePolicy",
     "WorkerStats",
     "register_backend",
     "get_backend",
@@ -133,6 +134,27 @@ class _WorkerClock:
                 snap.wait_s += now - mark
 
 
+class LeasePolicy:
+    """Protocol for pluggable lease-refill order (duck-typed, never
+    instantiated): a policy OWNS the pending set and decides which items a
+    refilling worker leases next — the fair-share claim path the serve
+    layer builds its deficit-round-robin on (``repro.serve.fair``).
+
+    Both methods are invoked with the owning queue's lock held, so
+    implementations must be non-blocking and must never call back into the
+    queue.  Feeding a policy happens out-of-band (its own ``enroll``-style
+    API); after feeding, call ``WorkQueue.kick()`` to wake blocked
+    claimers.
+    """
+
+    def select(self, k: int) -> list[int]:  # pragma: no cover - protocol
+        """Up to ``k`` item indices to lease next, removed from pending."""
+        raise NotImplementedError
+
+    def pending_count(self) -> int:  # pragma: no cover - protocol
+        raise NotImplementedError
+
+
 @register_backend("threads")
 class WorkQueue:
     """Lease-based batch distribution with work stealing.
@@ -140,6 +162,16 @@ class WorkQueue:
     ``lease_size`` batches are claimed at a time (amortizes coordination);
     when a worker exhausts its lease it steals the largest remaining tail
     from the slowest worker.  Thread-safe; deterministic completion set.
+
+    Two optional extensions carry the serve subsystem (both default off,
+    leaving the batch executor's behavior byte-identical):
+
+    * ``policy`` — a ``LeasePolicy`` that owns the pending set and decides
+      refill order (priority / fair share) instead of the FIFO list.
+    * ``persistent`` — a long-lived queue: ``claim(block=True)`` WAITS
+      when nothing is available (new items arrive via ``extend``/a policy
+      feed + ``kick``) instead of returning ``None``; only ``stop()``
+      releases claimers with ``None``.
     """
 
     def __init__(
@@ -150,6 +182,8 @@ class WorkQueue:
         skip: set[int] | None = None,
         keys: list[str] | None = None,
         done_check: Callable[[str], bool] | None = None,
+        policy: "LeasePolicy | None" = None,
+        persistent: bool = False,
     ):
         # ``keys`` and ``done_check`` are the cross-host item identity and
         # completion arbiter used by distributed backends; the in-process
@@ -162,7 +196,11 @@ class WorkQueue:
         self._stats: dict[str, WorkerStats] = {}
         self._lease_size = max(1, lease_size)
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
         self._clock = _WorkerClock()
+        self._policy = policy
+        self._persistent = persistent
+        self._stopped = False
 
     @property
     def lease_size(self) -> int:
@@ -196,14 +234,36 @@ class WorkQueue:
 
     def remaining(self) -> int:
         with self._lock:
-            return len(self._pending) + sum(len(v) for v in self._leases.values())
+            pend = (
+                self._policy.pending_count()
+                if self._policy is not None
+                else len(self._pending)
+            )
+            return pend + sum(len(v) for v in self._leases.values())
+
+    def extend(self, items) -> None:
+        """Append work items to a live queue (the serve feed path: request
+        admission turns grid cells into new indices on the SAME queue the
+        workers drain) and wake blocked claimers.  With a ``policy``
+        installed, feed the policy instead and call ``kick()``."""
+        with self._cv:
+            self._pending.extend(int(i) for i in items)
+            self._cv.notify_all()
+
+    def kick(self) -> None:
+        """Wake blocked claimers after an out-of-band feed (a
+        ``LeasePolicy`` enrollment happens outside the queue's lock)."""
+        with self._cv:
+            self._cv.notify_all()
 
     def claim(self, worker: str, *, block: bool = True) -> int | None:
         """Next batch index for ``worker``, refilling or stealing as needed.
-        (``block`` is accepted for backend uniformity; in-process claims
-        never block.)"""
-        del block
-        with self._lock:
+
+        On a batch (non-persistent) queue claims never block and ``None``
+        means drained.  On a persistent queue ``block=True`` waits for new
+        items; ``None`` means ``stop()`` was called.
+        """
+        with self._cv:
             st = self._stats.setdefault(worker, WorkerStats())
             # Attribute the interval since the worker's last event by its
             # outstanding count THEN: a pipelined worker polling for its
@@ -211,28 +271,40 @@ class WorkQueue:
             # worker with nothing in hand accrues wait.  Each fold advances
             # the mark, so no interval is ever double-counted.
             self._clock.fold(worker, st, time.monotonic())
-            lease = self._leases.setdefault(worker, [])
+            while True:
+                idx = self._next_locked(worker, st)
+                if idx is not None:
+                    st.claimed += 1
+                    self._clock.claimed(worker)
+                    return idx
+                if self._stopped or not (self._persistent and block):
+                    return None
+                self._cv.wait(timeout=0.25)
+                self._clock.fold(worker, st, time.monotonic())
+
+    def _next_locked(self, worker: str, st: WorkerStats) -> int | None:
+        """Refill-or-steal under the lock: one attempt, no waiting."""
+        lease = self._leases.setdefault(worker, [])
+        if not lease:
+            if self._policy is not None:
+                lease.extend(self._policy.select(self._lease_size))
+            elif self._pending:
+                take = min(self._lease_size, len(self._pending))
+                lease.extend(self._pending[:take])
+                del self._pending[:take]
             if not lease:
-                if self._pending:
-                    take = min(self._lease_size, len(self._pending))
-                    lease.extend(self._pending[:take])
-                    del self._pending[:take]
-                else:
-                    victim = self._pick_victim(worker)
-                    if victim is not None:
-                        vlease = self._leases[victim]
-                        steal = len(vlease) // 2
-                        if steal:
-                            lease.extend(vlease[-steal:])
-                            del vlease[-steal:]
-                            self._stats[victim].stolen_from += steal
-                            st.stolen_by += steal
-            if not lease:
-                return None
-            idx = lease.pop(0)
-            st.claimed += 1
-            self._clock.claimed(worker)
-            return idx
+                victim = self._pick_victim(worker)
+                if victim is not None:
+                    vlease = self._leases[victim]
+                    steal = len(vlease) // 2
+                    if steal:
+                        lease.extend(vlease[-steal:])
+                        del vlease[-steal:]
+                        self._stats[victim].stolen_from += steal
+                        st.stolen_by += steal
+        if not lease:
+            return None
+        return lease.pop(0)
 
     def _pick_victim(self, thief: str) -> str | None:
         """Largest remaining lease loses half its tail; equal-length leases
@@ -251,7 +323,11 @@ class WorkQueue:
             self._clock.completed(worker)
 
     def stop(self) -> None:
-        """Teardown hook (no-op: in-process claims never block)."""
+        """Teardown: release blocked claimers with ``None``.  (A no-op on
+        batch queues, whose claims never block.)"""
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
 
 
 # -------------------------------------------------------- shared-fs backend

@@ -1,0 +1,242 @@
+"""Resident cohort state for the serve subsystem (DESIGN.md §16).
+
+``StudyRegistry`` is the warm half of scan-as-a-service: everything that
+does not change across requests stays resident —
+
+    open genotype sources       a ``ResidentStudy`` holds the bound
+                                ``Study`` (source stays open, keep mask
+                                and covariates stay parsed);
+    prepared scan state         the resident panel's ``PreparedScan``
+                                (residualized covariate basis, GRM
+                                spectrum + REML for the lmm engine,
+                                compiled step) built once, lazily, and
+                                reused by every marker-window query;
+    warm per-slot device state  ``_Slot``s (``EngineDeviceState`` +
+                                ``PanelView``) cached in a ``DeviceLRU``
+                                keyed by (state, slot), ref-count-pinned
+                                while a worker computes a cell, and
+                                LRU-evicted (``slot.reset()``) when
+                                capacity is exceeded by other studies'
+                                traffic.
+
+Eviction rules: a slot is evictable iff no in-flight cell pins it; the
+registry allows transient capacity overshoot rather than block a worker
+on a fully-pinned cache.  Evicting a slot frees its device arrays but no
+host state — the next request on that study pays one re-staging, not a
+re-prepare (cache hit/miss/eviction counters are surfaced through serve
+metrics so this is observable).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any
+
+from repro.core.engines import DeviceLRU
+
+__all__ = ["ResidentStudy", "StudyRegistry"]
+
+
+class ResidentStudy:
+    """One admitted cohort: the bound study, its plan kwargs, and the
+    lazily-built resident ``PreparedScan`` (the cold cost every later
+    window query on this study skips)."""
+
+    def __init__(self, study_id: str, study, *, weight: float = 1.0,
+                 plan_kwargs: dict | None = None):
+        if weight <= 0:
+            raise ValueError(f"study weight must be positive, got {weight}")
+        self.study_id = study_id
+        self.study = study
+        self.weight = float(weight)
+        self.plan_kwargs = dict(plan_kwargs or {})
+        self.admitted_at = time.time()
+        self.state_key = f"study:{study_id}"
+        self._plan = None
+        self._lock = threading.Lock()
+
+    def plan(self):
+        with self._lock:
+            if self._plan is None:
+                self._plan = self.study.plan(**self.plan_kwargs)
+            return self._plan
+
+    def prepared(self):
+        """The resident panel's prepared scan (``ScanPlan.prepare`` is
+        memoized; concurrent first callers serialize on the plan lock so
+        setup cost is paid exactly once)."""
+        plan = self.plan()
+        with self._lock:
+            return plan.prepare()
+
+    def describe(self) -> dict:
+        return {
+            "study_id": self.study_id,
+            "n_samples": self.study.n_samples,
+            "n_markers": self.study.n_markers,
+            "n_traits": self.study.n_traits,
+            "weight": self.weight,
+            "admitted_at": self.admitted_at,
+            "prepared": self._plan is not None and self._plan._prepared is not None,
+        }
+
+
+class StudyRegistry:
+    """Multi-tenant resident state: admitted studies plus the warm
+    executor-slot cache shared by every serve worker.
+
+    Slot cache keys are ``(state_key, slot_index)`` where ``state_key``
+    names one prepared scan state — ``study:<id>`` for a resident study
+    (shared by all its window queries: the warm path) or ``req:<id>`` for
+    an uploaded panel (ephemeral; dropped when the request finishes).
+    ``acquire_slot``/``release_slot`` bracket one cell's compute with a
+    pin, so concurrent requests can never evict a slot mid-step.
+    """
+
+    def __init__(self, *, devices: int = 1, max_resident_slots: int = 8):
+        import jax
+
+        n = devices if devices > 0 else len(jax.devices())
+        # One worker slot per device; n == 1 uses the implicit default
+        # device (device=None), byte-for-byte the serial executor's slot.
+        self.n_slots = n
+        self._devices = [None] if n == 1 else list(jax.devices()[:n])
+        self._studies: dict[str, ResidentStudy] = {}
+        self._states: dict[str, Any] = {}       # state_key -> PreparedScan
+        self._live: dict[Any, Any] = {}          # (state_key, slot) -> _Slot
+        self._lock = threading.RLock()
+        self._slots = DeviceLRU(
+            max_resident_slots, self._load_slot, on_evict=self._evict_slot
+        )
+
+    # ------------------------------------------------------------- studies
+
+    def admit(self, study_id: str, study, *, weight: float = 1.0,
+              **plan_kwargs) -> ResidentStudy:
+        with self._lock:
+            if study_id in self._studies:
+                raise ValueError(f"study {study_id!r} already admitted")
+            res = ResidentStudy(
+                study_id, study, weight=weight, plan_kwargs=plan_kwargs
+            )
+            self._studies[study_id] = res
+            return res
+
+    def resident(self, study_id: str) -> ResidentStudy:
+        with self._lock:
+            if study_id not in self._studies:
+                raise KeyError(
+                    f"unknown study {study_id!r}; admitted: "
+                    f"{sorted(self._studies)}"
+                )
+            return self._studies[study_id]
+
+    def studies(self) -> list[dict]:
+        with self._lock:
+            return [s.describe() for s in self._studies.values()]
+
+    # ---------------------------------------------------------- slot cache
+
+    def register_state(self, state_key: str, prepared) -> None:
+        """Bind a prepared scan under ``state_key`` so slot loads can find
+        it.  Resident studies stay registered for their lifetime; uploaded
+        panels register for the request and ``drop_state`` after."""
+        with self._lock:
+            self._states[state_key] = prepared
+
+    def drop_state(self, state_key: str) -> None:
+        """Unbind a state and reset its cached slots (ephemeral panel
+        teardown — its device arrays must not outlive the request)."""
+        self._slots.drop_if(lambda k: k[0] == state_key)
+        with self._lock:
+            self._states.pop(state_key, None)
+            for key in [k for k in self._live if k[0] == state_key]:
+                self._live.pop(key).reset()
+
+    def _load_slot(self, key):
+        from repro.api.session import _Slot
+
+        state_key, slot_idx = key
+        with self._lock:
+            prepared = self._states.get(state_key)
+            if prepared is None:
+                raise KeyError(f"state {state_key!r} not registered")
+        slot = _Slot(
+            prepared,
+            device=self._devices[slot_idx],
+            label=f"serve/dev{slot_idx}",
+        )
+        with self._lock:
+            self._live[key] = slot
+        return slot
+
+    def _evict_slot(self, key) -> None:
+        with self._lock:
+            slot = self._live.pop(key, None)
+        if slot is not None:
+            slot.reset()
+
+    def acquire_slot(self, state_key: str, slot_idx: int):
+        """The warm slot for (state, slot), pinned: the caller MUST pair
+        with ``release_slot`` (cell compute bracket)."""
+        key = (state_key, slot_idx)
+        self._slots.pin(key)
+        try:
+            return self._slots.get(key)
+        except BaseException:
+            self._slots.unpin(key)
+            raise
+
+    def release_slot(self, state_key: str, slot_idx: int) -> None:
+        self._slots.unpin((state_key, slot_idx))
+
+    def device(self, slot_idx: int):
+        return self._devices[slot_idx]
+
+    # ------------------------------------------------------------- metrics
+
+    def slot_cache_stats(self) -> dict:
+        return self._slots.stats()
+
+    def panel_cache_stats(self) -> dict:
+        """Aggregate hit/miss/eviction counters over every live slot's
+        panel view plus each registered state's shared default view."""
+        agg = {"hits": 0, "misses": 0, "evictions": 0}
+        with self._lock:
+            views = [
+                s.panels for s in self._live.values() if s.panels is not None
+            ]
+            stores = {
+                id(p.panels): p.panels
+                for p in self._states.values()
+                if getattr(p, "panels", None) is not None
+            }
+        for view in views:
+            st = view.cache_stats()
+            for k in agg:
+                agg[k] += st[k]
+        for store in stores.values():
+            st = store.cache_stats()
+            for k in agg:
+                agg[k] += st[k]
+        total = agg["hits"] + agg["misses"]
+        agg["hit_rate"] = round(agg["hits"] / total, 4) if total else None
+        return agg
+
+    # ------------------------------------------------------------ teardown
+
+    def shutdown(self) -> None:
+        """Reset every cached slot and drop all resident state.  Pins are
+        ignored (teardown outranks residency — workers are already joined
+        when the serve host calls this)."""
+        self._slots.clear()
+        with self._lock:
+            for slot in self._live.values():
+                slot.reset()
+            self._live.clear()
+            self._states.clear()
+            self._studies.clear()
+
+    @property
+    def n_pinned(self) -> int:
+        return self._slots.n_pinned

@@ -3,10 +3,30 @@ must see the real single-CPU device; only launch/dryrun.py forces the
 512-device placeholder topology (in a subprocess)."""
 from __future__ import annotations
 
+import os
+
 import numpy as np
 import pytest
 
 from repro.io import synth
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# Tooling byproducts that may legitimately appear in the checkout.
+_TREE_IGNORED = {".pytest_cache", "__pycache__", ".hypothesis"}
+
+
+@pytest.fixture(autouse=True)
+def _no_repo_tree_dirt():
+    """Fail any test that leaves new entries in the repo root (e.g. a
+    subprocess child running with a repo cwd and writing relative paths —
+    the historical ``hostB/`` leak).  Write under ``tmp_path`` instead."""
+    before = set(os.listdir(_REPO_ROOT)) - _TREE_IGNORED
+    yield
+    new = (set(os.listdir(_REPO_ROOT)) - _TREE_IGNORED) - before
+    assert not new, (
+        f"test dirtied the repo root with {sorted(new)}; tests and their "
+        "subprocesses must write under tmp_path"
+    )
 
 
 @pytest.fixture(scope="session")

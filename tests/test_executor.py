@@ -500,11 +500,16 @@ _CHILD = textwrap.dedent(
 
 
 @pytest.fixture(scope="module")
-def child_results():
-    env = dict(os.environ, PYTHONPATH="src")
+def child_results(tmp_path_factory):
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    env = dict(os.environ, PYTHONPATH=src)
+    # Scratch cwd under the test tmp tree: a child's relative writes must
+    # never land in the repo checkout (see the conftest guard).
     proc = subprocess.run(
         [sys.executable, "-c", _CHILD], capture_output=True, text=True,
-        timeout=900, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=900, env=env, cwd=str(tmp_path_factory.mktemp("exec_child")),
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     return json.loads(proc.stdout.strip().splitlines()[-1])

