@@ -493,6 +493,73 @@ def bench_epilogue() -> None:
          f"lanes={m * p}")
 
 
+def bench_io() -> None:
+    """Packed genotype staging (DESIGN.md §17): the same scan drained with
+    dense float32 staging vs 2-bit packed bytes as the H2D currency.  Wall
+    time on CPU is not the point (fake-device H2D is a memcpy); the rows
+    that matter are ``h2d_bytes_per_marker`` — ceil(N/4) packed vs 4N
+    dense, the ~16x reduction the acceptance gate checks — ``decode_s``
+    (host prep collapses to a slab memcpy + stat LUTs), and
+    ``identical=True`` (packed staging is bitwise-neutral).  The cache row
+    re-runs the packed scan against a warm ``PackedSlabCache``: every slab
+    is a hit, so host prep pays zero disk reads."""
+    import os
+    import tempfile
+
+    from repro.api import GridSpec, IOSpec, Study, TsvWriter
+    from repro.io import open_genotypes
+    from repro.io.packed_cache import default_cache
+
+    co = synth.make_cohort(
+        n_samples=1003, n_markers=2048, n_traits=32, missing_rate=0.02, seed=5
+    )
+    d = tempfile.mkdtemp()
+    beds = synth.write_split_plink(co, os.path.join(d, "bench"), n_shards=3)
+    src = open_genotypes(",".join(beds))
+    study = Study.from_arrays(src, co.phenotypes, co.covariates)
+    grid = GridSpec(batch_markers=512, block_m=64, block_n=128, block_p=64)
+
+    def scan(tag, staging):
+        default_cache().clear()
+        plan = study.plan(grid=grid, io=IOSpec(genotype_staging=staging),
+                          hit_threshold_nlp=2.0)
+        t0 = time.perf_counter()
+        session = plan.run()
+        out = os.path.join(d, tag)
+        session.stream_to(TsvWriter(out))
+        dt = time.perf_counter() - t0
+        files = {
+            f: open(os.path.join(out, f)).read()
+            for f in ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+        }
+        return dt, session.metrics.summary(), files
+
+    dt_d, m_d, files_d = scan("stage_dense", "dense")
+    dt_p, m_p, files_p = scan("stage_packed", "packed")
+    emit("io_dense_staging", dt_d * 1e6,
+         f"h2d_bytes_per_marker={m_d['h2d_bytes_per_marker']:.0f},"
+         f"decode_s={m_d['decode_s']:.3f}")
+    emit("io_packed_staging", dt_p * 1e6,
+         f"h2d_bytes_per_marker={m_p['h2d_bytes_per_marker']:.0f},"
+         f"decode_s={m_p['decode_s']:.3f},"
+         f"identical={files_p == files_d}")
+    emit("io_h2d_reduction", 0.0,
+         f"bytes_ratio={m_d['h2d_bytes_per_marker'] / m_p['h2d_bytes_per_marker']:.1f}x,"
+         f"n_samples={co.phenotypes.shape[0]}")
+
+    # Warm-cache rerun: the whole genotype stream is slab-cache hits.
+    plan = study.plan(grid=grid, io=IOSpec(genotype_staging="packed"),
+                      hit_threshold_nlp=2.0)
+    t0 = time.perf_counter()
+    session = plan.run()
+    session.stream_to(TsvWriter(os.path.join(d, "stage_packed_warm")))
+    dt_w = time.perf_counter() - t0
+    cs = default_cache().stats()
+    emit("io_packed_warm_cache", dt_w * 1e6,
+         f"cache_hits={cs['hits']},cache_misses={cs['misses']},"
+         f"decode_s={session.metrics.summary()['decode_s']:.3f}")
+
+
 def bench_serve() -> None:
     """Scan-as-a-service (DESIGN.md §16): request latency through the full
     serve path — admission, fair-share queueing on the persistent
@@ -633,6 +700,7 @@ def main(argv: list[str] | None = None) -> None:
         ("executor", bench_executor),
         ("pipeline", bench_pipeline),
         ("epilogue", bench_epilogue),
+        ("io", bench_io),
         ("serve", bench_serve),
         ("kernels", bench_kernels),
         ("scaling_n", bench_scaling_n),

@@ -53,6 +53,11 @@ class CellTiming:
     # visible.
     decode_s: float = 0.0
     stage_s: float = 0.0
+    # Bytes of host batch payload staged over H2D for this cell, attributed
+    # like ``stage_s`` (first cell per fresh staging, 0 on reuse/replay).
+    # The observable packed genotype staging (DESIGN.md §17) drives down
+    # ~16x: ceil(N/4) packed bytes/marker vs 4N decoded float32.
+    h2d_bytes: int = 0
 
 
 class ScanMetrics:
@@ -76,6 +81,7 @@ class ScanMetrics:
         self._extract_s = 0.0
         self._decode_s = 0.0
         self._stage_s = 0.0
+        self._h2d_bytes = 0
         self._per_device: dict[str, dict] = {}     # label -> cells/busy_s/...
         # Serve-mode observability (repro.serve): per-request wall-clock
         # latencies (requests are few relative to cells, so retaining them
@@ -104,14 +110,17 @@ class ScanMetrics:
             self._extract_s += row.extract_s
             self._decode_s += row.decode_s
             self._stage_s += row.stage_s
+            self._h2d_bytes += row.h2d_bytes
             d = self._per_device.setdefault(
                 row.device,
-                {"cells": 0, "busy_s": 0.0, "decode_s": 0.0, "stage_s": 0.0},
+                {"cells": 0, "busy_s": 0.0, "decode_s": 0.0, "stage_s": 0.0,
+                 "h2d_bytes": 0},
             )
             d["cells"] += 1
             d["busy_s"] += row.wall_s
             d["decode_s"] += row.decode_s
             d["stage_s"] += row.stage_s
+            d["h2d_bytes"] += row.h2d_bytes
 
     def finish(self) -> None:
         """Freeze the stream's wall clock — once.  The session calls this
@@ -214,6 +223,17 @@ class ScanMetrics:
     def decode_s_total(self) -> float:
         return self._decode_s
 
+    @property
+    def h2d_bytes_total(self) -> int:
+        return self._h2d_bytes
+
+    def h2d_bytes_per_marker(self) -> float | None:
+        """Staged batch-payload bytes per distinct live marker — the §17
+        staging-currency observable (~4N dense vs ~N/4 packed)."""
+        if self._markers <= 0:
+            return None
+        return self._h2d_bytes / self._markers
+
     def _wall(self) -> float:
         if self.wall_s > 0:
             return self.wall_s
@@ -229,6 +249,7 @@ class ScanMetrics:
                 "utilization": round(d["busy_s"] / wall, 3) if wall > 0 else None,
                 "decode_s": round(d.get("decode_s", 0.0), 4),
                 "stage_s": round(d.get("stage_s", 0.0), 4),
+                "h2d_bytes": d.get("h2d_bytes", 0),
             }
             for label, d in self._per_device.items()
         }
@@ -250,6 +271,10 @@ class ScanMetrics:
             "extract_s": round(self._extract_s, 4),
             "decode_s": round(self._decode_s, 4),
             "stage_s": round(self._stage_s, 4),
+            "h2d_bytes": self._h2d_bytes,
+            "h2d_bytes_per_marker": (
+                round(self._h2d_bytes / markers, 1) if markers > 0 else None
+            ),
             "extract_share": round(share, 3) if share is not None else None,
             "per_device": per_device,
         }

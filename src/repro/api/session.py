@@ -365,6 +365,19 @@ class ScanPlan:
             n_covariates = 0 if cov is None else (1 if cov.ndim == 1 else cov.shape[1])
 
         dof = config.options.dof(n_samples, n_covariates)
+        # Negotiate the H2D staging currency per source (DESIGN.md §17) and
+        # size the shared packed-slab cache the prepare workers read through.
+        from repro.core.engines import resolve_genotype_staging
+        from repro.io.packed_cache import configure_default as _configure_packed_cache
+
+        genotype_staging = resolve_genotype_staging(
+            config.genotype_staging,
+            study.source,
+            excluded_samples=study.excluded_samples,
+            mesh=mesh,
+        )
+        if genotype_staging == "packed":
+            _configure_packed_cache(config.packed_cache_mb)
         ctx = EngineContext(
             n_samples=n_samples,
             n_covariates=n_covariates,
@@ -393,6 +406,7 @@ class ScanPlan:
             io_workers=config.io_workers,
             sparse_epilogue=config.sparse_epilogue,
             hit_capacity=config.hit_capacity,
+            genotype_staging=genotype_staging,
         )
         engine.validate(ctx)
         # Amortized engine setup (LMM: streamed GRM + eigendecomposition +
@@ -632,12 +646,13 @@ class SerialExecutor:
             host_batch, decode_s = item
             t = time.perf_counter()
             dev_args = slot.stage(host_batch)
-            return host_batch, dev_args, decode_s, time.perf_counter() - t
+            h2d = sum(int(getattr(a, "nbytes", 0)) for a in host_batch.device_args)
+            return host_batch, dev_args, decode_s, time.perf_counter() - t, h2d
 
         stream = double_buffer(prefetched, stage)
         try:
             todo_pos = {b.index: i for i, b in enumerate(todo)}
-            for host_batch, dev_args, decode_s, stage_s in stream:
+            for host_batch, dev_args, decode_s, stage_s, h2d_bytes in stream:
                 batch = host_batch.batch
                 bidx = batch.index
                 # Trait blocks are the INNER loop: one staged genotype batch
@@ -679,6 +694,7 @@ class SerialExecutor:
                         # of the sweep reuse the staged copy.
                         decode_s=decode_s if pos == 0 else 0.0,
                         stage_s=stage_s if pos == 0 else 0.0,
+                        h2d_bytes=h2d_bytes if pos == 0 else 0,
                         device=slot.label,
                     )
         finally:
@@ -849,7 +865,7 @@ class MultiDeviceExecutor:
             # Staged memo, capacity depth+1: the batch being computed plus
             # the look-ahead batches whose H2D copies landed early.  With
             # depth=0 this degenerates to the historical one-slot memo.
-            staged: dict[int, tuple] = {}   # batch idx -> (hb, dev, dec_s, stg_s)
+            staged: dict[int, tuple] = {}   # idx -> (hb, dev, dec_s, stg_s, h2d)
             inflight: set[int] = set()      # batch idxs pending in the pool
             ahead: deque = deque()          # claimed (idx, run), decode submitted
 
@@ -867,8 +883,11 @@ class MultiDeviceExecutor:
                         hb, decode_s = decode(batch)
                     t = time.perf_counter()
                     dev_args = slot.stage(hb)
+                    h2d = sum(
+                        int(getattr(a, "nbytes", 0)) for a in hb.device_args
+                    )
                     staged[batch.index] = (
-                        hb, dev_args, decode_s, time.perf_counter() - t
+                        hb, dev_args, decode_s, time.perf_counter() - t, h2d
                     )
                     while len(staged) > depth + 1:
                         oldest = next(iter(staged))
@@ -877,7 +896,8 @@ class MultiDeviceExecutor:
                         del staged[oldest]
                 return staged[batch.index]
 
-            def make_emit(hb, out, blk, batch, step_s, decode_s, stage_s):
+            def make_emit(hb, out, blk, batch, step_s, decode_s, stage_s,
+                          h2d_bytes):
                 def emit() -> None:
                     t = time.perf_counter()
                     cell = _live_cell(hb, out, blk, cfg, prep.dof)
@@ -897,6 +917,7 @@ class MultiDeviceExecutor:
                         extract_s=extract_s,
                         decode_s=decode_s,
                         stage_s=stage_s,
+                        h2d_bytes=h2d_bytes,
                         device=label,
                     )))
                 return emit
@@ -920,10 +941,10 @@ class MultiDeviceExecutor:
                         break
                     idx, run = ahead.popleft()
                     batch = run.batch
-                    hb, dev_args, decode_s, stage_s = staged_args(batch)
+                    hb, dev_args, decode_s, stage_s, h2d_bytes = staged_args(batch)
                     # decode/stage are attributed to the first cell computed
                     # off a fresh staging, once.
-                    staged[batch.index] = (hb, dev_args, 0.0, 0.0)
+                    staged[batch.index] = (hb, dev_args, 0.0, 0.0, 0)
                     for pos, blk in enumerate(run.blocks):
                         if stop.is_set():
                             return
@@ -951,13 +972,15 @@ class MultiDeviceExecutor:
                         jax.block_until_ready(out)
                         step_s = time.perf_counter() - t0
                         emit = make_emit(
-                            hb, out, blk, batch, step_s, decode_s, stage_s
+                            hb, out, blk, batch, step_s, decode_s, stage_s,
+                            h2d_bytes,
                         )
                         if tail is not None:
                             tail.submit(emit)
                         else:
                             emit()
                         decode_s = stage_s = 0.0
+                        h2d_bytes = 0
                     if tail is not None:
                         tail.submit(
                             lambda label=label, idx=idx: sched.complete(label, idx)
@@ -1076,6 +1099,38 @@ class MultiDeviceExecutor:
             warnings.warn(msg, RuntimeWarning, stacklevel=2)
 
 
+def _adapt_swapped_step(step, prepared: PreparedScan):
+    """A swapped step (the shim's historical ``_step`` hook) speaks the
+    decoded staging currency; under packed staging (DESIGN.md §17) the
+    staged first argument is raw PLINK bytes.  Interpose the same jitted
+    device-side front the engine prologs use — its output is bit-identical
+    to the historical host decode, so the caller's patched math sees
+    exactly the inputs it always has."""
+    ctx = prepared.ctx
+    if getattr(ctx, "genotype_staging", "dense") != "packed":
+        return step
+    import functools
+
+    from repro.kernels.gwas_dot import ops as kops
+
+    if prepared.config.engine == "fused":
+        front = functools.partial(
+            kops.repack_plink_tiled_device, n_samples=ctx.n_samples,
+            block_n=ctx.block_n, block_m=ctx.block_m,
+        )
+    else:
+        front = functools.partial(
+            kops.decode_packed_device, n_samples=ctx.n_samples
+        )
+
+    def adapted(g_raw, *rest):
+        return step(front(g_raw), *rest)
+
+    if hasattr(step, "reset"):
+        adapted.reset = step.reset
+    return adapted
+
+
 class ScanSession:
     """One executable pass over the scan grid, streaming ``CellResult``s.
 
@@ -1100,6 +1155,8 @@ class ScanSession:
         self.study = prepared.study
         self.config = prepared.config
         self.resume = resume
+        if step is not None and step is not prepared.step:
+            step = _adapt_swapped_step(step, prepared)
         self._step = step if step is not None else prepared.step
         self._consumed = False
         # An injected executor handle (duck-typed: ``cells(todo, pending)``

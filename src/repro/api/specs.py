@@ -83,12 +83,25 @@ class IOSpec:
     io_workers: int = 2
     spill_dir: str | None = None       # HitSink spill location (None: in RAM)
     hit_spill_rows: int = 2_000_000
+    # H2D staging currency (DESIGN.md §17): "auto" stages raw 2-bit PLINK
+    # bytes with device-side decode whenever the source supports it (16x
+    # less transfer, bitwise-identical output), "dense" forces decoded
+    # float32, "packed" demands the packed path (raises if unavailable).
+    genotype_staging: str = "auto"
+    packed_cache_mb: int = 256         # shared packed-slab LRU budget
 
     def validate(self) -> None:
         if self.prefetch_depth < 1 or self.io_workers < 1:
             raise ValueError("IOSpec.prefetch_depth and io_workers must be >= 1")
         if self.hit_spill_rows < 1:
             raise ValueError("IOSpec.hit_spill_rows must be >= 1")
+        if self.genotype_staging not in ("auto", "packed", "dense"):
+            raise ValueError(
+                f"IOSpec.genotype_staging must be auto|packed|dense, "
+                f"got {self.genotype_staging!r}"
+            )
+        if self.packed_cache_mb < 0:
+            raise ValueError("IOSpec.packed_cache_mb must be >= 0")
 
 
 @dataclass(frozen=True)
@@ -256,6 +269,10 @@ class ScanConfig:
     lease_ttl: float = 60.0        # shared-fs heartbeat expiry (seconds)
     slot_prefetch: int = 1         # per-slot look-ahead depth; 0 = unpipelined
     autotune_lease: bool = True    # runtime lease_batches tuning (§15)
+    # H2D staging currency (DESIGN.md §17); bitwise-neutral like the
+    # epilogue strategy, so never fingerprinted
+    genotype_staging: str = "auto"
+    packed_cache_mb: int = 256
 
     def fingerprint_payload(self) -> dict:
         d = dataclasses.asdict(self)
@@ -271,7 +288,10 @@ class ScanConfig:
                   "slot_prefetch", "autotune_lease",
                   # bitwise-neutral epilogue strategy (§13): a scan
                   # checkpointed sparse resumes dense and vice versa
-                  "sparse_epilogue", "hit_capacity"):
+                  "sparse_epilogue", "hit_capacity",
+                  # bitwise-neutral staging currency (§17): a scan
+                  # checkpointed packed resumes dense and vice versa
+                  "genotype_staging", "packed_cache_mb"):
             d.pop(k)
         d["options"].pop("sparse_epilogue", None)
         return d
@@ -372,6 +392,8 @@ class ScanConfig:
             lease_ttl=executor.lease_ttl,
             slot_prefetch=executor.slot_prefetch,
             autotune_lease=executor.autotune_lease,
+            genotype_staging=io.genotype_staging,
+            packed_cache_mb=io.packed_cache_mb,
         )
 
     def grid_spec(self) -> GridSpec:
@@ -399,6 +421,8 @@ class ScanConfig:
             io_workers=self.io_workers,
             spill_dir=self.spill_dir,
             hit_spill_rows=self.hit_spill_rows,
+            genotype_staging=self.genotype_staging,
+            packed_cache_mb=self.packed_cache_mb,
         )
 
     def exec_spec(self) -> ExecSpec:

@@ -19,6 +19,7 @@ exported from ``core.screening``) for tests and external harnesses.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -209,6 +210,56 @@ class EngineContext:
     # under a sharding mesh (data-dependent gathers don't shard).
     sparse_epilogue: bool = False
     hit_capacity: int = 4096
+    # H2D staging currency (DESIGN.md §17): "dense" stages decoded float32
+    # (the historical path), "packed" stages raw PLINK 2-bit bytes and
+    # decodes on device — ~16x less H2D traffic, bitwise-identical results.
+    # Drivers resolve "auto"/"packed" via ``resolve_genotype_staging``
+    # before building the context; engines trust the resolved value.
+    genotype_staging: str = "dense"
+
+
+GENOTYPE_STAGINGS = ("auto", "packed", "dense")
+
+
+def resolve_genotype_staging(
+    requested: str,
+    source: Any,
+    *,
+    excluded_samples: int = 0,
+    mesh: Mesh | None = None,
+) -> str:
+    """Negotiate the staging currency per source (DESIGN.md §17).
+
+    "auto" picks packed whenever it is exactly equivalent and actually
+    cheaper: the source speaks native 2-bit bytes (PlinkBed, MultiFileSource
+    of beds — numpy/BGEN fall back decoded, unchanged), no host-side sample
+    subsetting (relatedness exclusion slices the decoded matrix before
+    staging), and no sharding mesh (staged shardings are declared over the
+    decoded layout).  Explicit "packed" raises instead of silently falling
+    back; "dense" is always honored.
+    """
+    if requested not in GENOTYPE_STAGINGS:
+        raise ValueError(
+            f"unknown genotype staging {requested!r}; expected one of {GENOTYPE_STAGINGS}"
+        )
+    if requested == "dense":
+        return "dense"
+    blockers = []
+    if not getattr(source, "supports_packed", False):
+        blockers.append(
+            f"{type(source).__name__} has no native 2-bit layout"
+        )
+    if excluded_samples:
+        blockers.append("relatedness exclusion subsets samples on host")
+    if mesh is not None:
+        blockers.append("sharding mesh stages the decoded layout")
+    if not blockers:
+        return "packed"
+    if requested == "packed":
+        raise ValueError(
+            "genotype_staging='packed' unavailable: " + "; ".join(blockers)
+        )
+    return "dense"
 
 
 @dataclass
@@ -427,8 +478,15 @@ def build_dense_step(
     split_prolog: bool = True,
     sparse_epilogue: bool = False,
     hit_capacity: int = 4096,
+    packed_input: bool = False,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Paper-faithful dense step: float dosages in, summary tiles out.
+
+    ``packed_input`` accepts raw PLINK 2-bit bytes ``(M, ceil(N/4)) uint8``
+    instead of float dosages and decodes them on device (DESIGN.md §17).
+    The decode runs as its *own* jitted executable in front of the
+    unchanged prolog/cell programs, so every downstream compiled artifact —
+    and therefore every emitted bit — is identical to dense staging.
     ``trait_tile`` fixes the panel-axis GEMM tile (the scan passes its
     ``block_p``) so every trait-block decomposition computes identical
     tiles — the §10 bitwise contract.
@@ -454,6 +512,12 @@ def build_dense_step(
     standardization is elementwise/per-marker, so materializing it at the
     jit boundary cannot change a bit.
     """
+    if packed_input and mesh is not None:
+        raise ValueError("packed_input requires mesh=None (see resolve_genotype_staging)")
+    if packed_input:
+        from repro.kernels.gwas_dot import ops as kops
+
+        decode = functools.partial(kops.decode_packed_device, n_samples=n_samples)
     dof = options.dof(n_samples, n_covariates)
     sparse = _resolve_sparse(
         sparse_epilogue, mesh, options, hit_threshold, dof, hit_capacity,
@@ -503,7 +567,12 @@ def build_dense_step(
 
     if mesh is None:
         if not split_prolog:
-            return jax.jit(step_monolithic)
+            mono_j = jax.jit(step_monolithic)
+            if not packed_input:
+                return mono_j
+            # Decode-then-mono as two executables: the mono program is the
+            # exact compiled artifact dense staging runs.
+            return lambda g_raw, y_std: mono_j(decode(g_raw), y_std)
         prolog_j = jax.jit(prolog)
         cell_j = jax.jit(cell)
     else:
@@ -545,7 +614,10 @@ def build_dense_step(
 
     def step(g_raw: jax.Array, y_std: jax.Array) -> dict[str, jax.Array]:
         if memo["g"] is not g_raw:
-            memo["out"] = prolog_j(g_raw)
+            # Packed staging: the device decode (its own executable) feeds
+            # the identical prolog program — the decoded f32 never exists
+            # on host and lives on device only for this batch's prolog.
+            memo["out"] = prolog_j(decode(g_raw) if packed_input else g_raw)
             memo["g"] = g_raw
         return cell_j(*memo["out"], y_std)
 
@@ -570,6 +642,7 @@ def build_fused_step(
     input_dtype: str | None = None,
     sparse_epilogue: bool = False,
     hit_capacity: int = 4096,
+    packed_input: bool = False,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Beyond-paper fused step: 2-bit packed slabs in (kernel layout),
     summary tiles out.  'mp' sharding only — the in-kernel epilogue requires
@@ -580,9 +653,18 @@ def build_fused_step(
     float32 either way — the GEMM-bf16 / epilogue-fp32 split audited by the
     oracle suite.  ``None`` defers to ``options.precision`` (the historical
     plumbing).  ``sparse_epilogue`` — see ``build_dense_step``; the kernel
-    still emits the full r/t tiles, only the p-value work is compacted."""
+    still emits the full r/t tiles, only the p-value work is compacted.
+
+    ``packed_input`` takes raw PLINK bytes ``(M, ceil(N/4))`` instead of the
+    kernel's tile-local layout and performs the tile repack *on device* as
+    its own jitted byte shuffle (DESIGN.md §17) — killing the host
+    ``unpack_plink_to_codes`` + ``pack_tiled`` round trip, so host prep is
+    a memcpy plus the LUT marker-stat pass.  The kernel step itself is the
+    unchanged compiled program; output bits are identical."""
     from repro.kernels.gwas_dot.gwas_dot import build_gwas_dot
 
+    if packed_input and mesh is not None:
+        raise ValueError("packed_input requires mesh=None (see resolve_genotype_staging)")
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
     dof = options.dof(n_samples, n_covariates)
@@ -641,7 +723,29 @@ def build_fused_step(
         return out
 
     if mesh is None:
-        return jax.jit(step)
+        step_j = jax.jit(step)
+        if not packed_input:
+            return step_j
+        from repro.kernels.gwas_dot import ops as kops
+
+        # One-slot memo like the dense/lmm prologs: the device repack runs
+        # once per staged batch, then every trait-block cell reuses the
+        # tiled bytes through the unchanged kernel step.
+        memo: dict[str, Any] = {"g": None, "tiled": None}
+
+        def step_packed(plink_packed, mean2d, inv2d, valid, y_std):
+            if memo["g"] is not plink_packed:
+                memo["tiled"] = kops.repack_plink_tiled_device(
+                    plink_packed,
+                    n_samples=n_samples,
+                    block_n=block_n,
+                    block_m=block_m,
+                )
+                memo["g"] = plink_packed
+            return step_j(memo["tiled"], mean2d, inv2d, valid, y_std)
+
+        step_packed.reset = lambda: memo.update(g=None, tiled=None)
+        return step_packed
     sh = gwas_shardings(mesh, mode="mp")
     model_vec = NamedSharding(mesh, P("model"))
     return jax.jit(
@@ -672,6 +776,7 @@ def build_lmm_step(
     block_p: int = 256,
     sparse_epilogue: bool = False,
     hit_capacity: int = 4096,
+    packed_input: bool = False,
 ) -> Callable[..., dict[str, jax.Array]]:
     """Mixed-model step: standardize -> rotate into the (whitened) GRM
     eigenbasis -> project out the whitened design -> the unchanged
@@ -706,6 +811,12 @@ def build_lmm_step(
     """
     if epilogue not in ("dense", "fused"):
         raise ValueError(f"unknown lmm epilogue {epilogue!r}")
+    if packed_input and mesh is not None:
+        raise ValueError("packed_input requires mesh=None (see resolve_genotype_staging)")
+    if packed_input:
+        from repro.kernels.gwas_dot import ops as kops
+
+        decode = functools.partial(kops.decode_packed_device, n_samples=n_samples)
     opts = dataclasses.replace(options, dof_mode="exact")
     dof = opts.dof(n_samples, n_covariates)
     sparse = _resolve_sparse(
@@ -810,7 +921,10 @@ def build_lmm_step(
 
     def step(g_raw, rotation, qhat, y_std):
         if memo["g"] is not g_raw:
-            memo["out"] = prolog_j(g_raw, rotation, qhat)
+            # See build_dense_step: under packed staging the device decode
+            # is its own executable in front of the unchanged prolog.
+            g_in = decode(g_raw) if packed_input else g_raw
+            memo["out"] = prolog_j(g_in, rotation, qhat)
             memo["g"] = g_raw
         return cell_j(*memo["out"], y_std)
 
@@ -843,9 +957,16 @@ class DenseEngine(ScanEngine):
             trait_tile=ctx.block_p,
             sparse_epilogue=ctx.sparse_epilogue,
             hit_capacity=ctx.hit_capacity,
+            packed_input=ctx.genotype_staging == "packed",
         )
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
+        if ctx.genotype_staging == "packed":
+            # Stage ceil(N/4) bytes/marker through the shared slab cache;
+            # the step's device decode front-end expands them (§17).
+            from repro.io.packed_cache import read_packed_cached
+
+            return HostBatch(batch, (read_packed_cached(source, batch.lo, batch.hi),))
         dosages = source.read_dosages(batch.lo, batch.hi)
         if ctx.excluded_samples:
             dosages = dosages[:, ctx.keep]
@@ -877,12 +998,41 @@ class FusedEngine(ScanEngine):
             input_dtype="bf16" if ctx.input_dtype == "bf16" else None,
             sparse_epilogue=ctx.sparse_epilogue,
             hit_capacity=ctx.hit_capacity,
+            packed_input=ctx.genotype_staging == "packed",
         )
 
     def prepare_batch(self, source: Any, batch: MarkerBatch, ctx: EngineContext) -> HostBatch:
         from repro.kernels.gwas_dot import ops as kops
 
         m_batch = batch.n_markers
+        if ctx.genotype_staging == "packed":
+            # Host prep at memcpy cost: cached raw slab + LUT marker stats.
+            # The unpack/re-pack byte shuffle moved onto the device (§17);
+            # stat vectors still pad to the block_m geometry the kernel
+            # step expects (the device repack pads its rows to match).
+            from repro.io.packed_cache import read_packed_cached
+
+            plink_packed = read_packed_cached(source, batch.lo, batch.hi)
+            mean, inv_std, valid = kops.marker_stats_from_packed(
+                plink_packed, ctx.n_samples
+            )
+            if ctx.maf_min > 0:
+                af = mean / 2.0
+                maf = np.minimum(af, 1.0 - af)
+                valid &= maf >= ctx.maf_min
+                inv_std = np.where(valid, inv_std, 0.0).astype(np.float32)
+            pad_m = (-m_batch) % ctx.block_m
+            if pad_m:
+                mean = np.pad(mean, (0, pad_m))
+                inv_std = np.pad(inv_std, (0, pad_m))
+                valid = np.pad(valid, (0, pad_m))
+            maf = np.minimum(mean / 2.0, 1.0 - mean / 2.0)
+            return HostBatch(
+                batch,
+                (plink_packed, mean.reshape(-1, 1), inv_std.reshape(-1, 1), valid),
+                host_maf=maf[:m_batch],
+                host_valid=valid[:m_batch],
+            )
         n_total = len(ctx.keep) if ctx.keep is not None else ctx.n_samples
         plink_packed = source.read_packed(batch.lo, batch.hi)
         codes = kops.unpack_plink_to_codes(plink_packed, n_total)
@@ -1021,6 +1171,10 @@ class LMMEngine(ScanEngine):
             method=ctx.grm_method,
             maf_min=ctx.maf_min,
             io_workers=ctx.io_workers,
+            # Same currency as the scan: packed batches flow through the
+            # shared slab cache + device decode, so GRM and scan share one
+            # read per batch (satellite of §17).
+            staging=ctx.genotype_staging,
         )
         if ctx.loco and grm.n_shards < 2:
             raise ValueError(
@@ -1075,6 +1229,7 @@ class LMMEngine(ScanEngine):
             block_p=ctx.block_p,
             sparse_epilogue=ctx.sparse_epilogue,
             hit_capacity=ctx.hit_capacity,
+            packed_input=ctx.genotype_staging == "packed",
         )
 
     def make_device_state(
@@ -1087,6 +1242,10 @@ class LMMEngine(ScanEngine):
         """Host side only: read and subset dosages.  The scope's rotation
         pair is attached at staging time by the slot's device state (it is
         device-resident state, not host batch payload)."""
+        if ctx.genotype_staging == "packed":
+            from repro.io.packed_cache import read_packed_cached
+
+            return HostBatch(batch, (read_packed_cached(source, batch.lo, batch.hi),))
         dosages = source.read_dosages(batch.lo, batch.hi)
         if ctx.excluded_samples:
             dosages = dosages[:, ctx.keep]

@@ -129,6 +129,7 @@ def stream_grm(
     maf_min: float = 0.0,
     io_workers: int = 2,
     prefetch_depth: int = 3,
+    staging: str = "auto",
 ) -> StreamedGRM:
     """Accumulate the GRM in one streamed pass over ``source``.
 
@@ -136,26 +137,57 @@ def stream_grm(
     Batches follow the same plan the scan itself uses, so multi-file
     sources stream per-chromosome shards concurrently and the partial sums
     land in per-shard slots for LOCO.
+
+    ``staging`` selects the H2D currency like the scan's
+    ``--genotype-staging`` (DESIGN.md §17): under "packed" the worker
+    threads fetch raw 2-bit slabs through the shared ``PackedSlabCache``
+    (so the GRM pass and the scan share one read per batch) and the device
+    decode front-end expands them *in front of* the unchanged jitted block
+    accumulator — same compiled GEMM program, bit-identical partial sums.
+    "auto" falls back to the decoded path when the source has no native
+    packed layout or ``keep`` actually drops samples.
     """
     if method not in GRM_METHODS:
         raise ValueError(f"unknown grm method {method!r}; expected one of {GRM_METHODS}")
+    from repro.core.engines import resolve_genotype_staging
+
+    # keep=None or an all-true mask never subsets, so packed staging stays
+    # eligible; an excluding mask forces the host-side decoded path.
+    excluding = int(keep is not None and not bool(np.asarray(keep).all()))
+    staging = resolve_genotype_staging(
+        staging, source, excluded_samples=excluding, mesh=None
+    )
     plan = BatchPlanner(batch_markers).plan(source)
     n_shards = max((b.source_id for b in plan), default=0) + 1
     n = int(keep.sum()) if keep is not None else source.n_samples
+
     sums = np.zeros((n_shards, n, n), np.float64)
     norms = np.zeros(n_shards, np.float64)
 
-    def read(batch):
-        d = source.read_dosages(batch.lo, batch.hi)
-        if keep is not None and not keep.all():
-            d = d[:, keep]
-        return batch, np.asarray(d, np.float32)
+    if staging == "packed":
+        from repro.io.packed_cache import read_packed_cached
+        from repro.kernels.gwas_dot import ops as kops
+
+        def read(batch):
+            return batch, read_packed_cached(source, batch.lo, batch.hi)
+
+        def to_device(slab):
+            return kops.decode_packed_device(slab, n_samples=n)
+    else:
+        def read(batch):
+            d = source.read_dosages(batch.lo, batch.hi)
+            if keep is not None and not keep.all():
+                d = d[:, keep]
+            return batch, np.asarray(d, np.float32)
+
+        def to_device(dosages):
+            return dosages
 
     block = _grm_block_centered if method == "centered" else _grm_block_std
     gate = jnp.float32(maf_min)
     prefetched = Prefetcher(plan, read, depth=prefetch_depth, num_workers=io_workers)
-    for batch, dosages in prefetched:
-        s, c = block(dosages, gate)
+    for batch, payload in prefetched:
+        s, c = block(to_device(payload), gate)
         sums[batch.source_id] += np.asarray(s, np.float64)
         norms[batch.source_id] += float(c)
     return StreamedGRM(shard_sums=sums, shard_norms=norms, n_samples=n, method=method)

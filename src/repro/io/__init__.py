@@ -8,17 +8,26 @@ All backends expose the same protocol (``GenotypeSource``):
 
     n_samples, n_markers, sample_ids, marker_ids
     read_dosages(lo, hi)  -> int8 (markers, samples), -9 missing
-    read_packed(lo, hi)   -> uint8 2-bit packed slab for the fused kernel
-                             (PLINK only; others raise)
+    read_packed(lo, hi)   -> uint8 2-bit packed slab (PLINK native; numpy
+                             re-packs hardcalls; BGEN raises)
+    supports_packed       -> True when 2-bit bytes are the *native* layout,
+                             enabling packed H2D staging (DESIGN.md §17)
+
+Packed slabs flow through the shared ``PackedSlabCache`` so scan, GRM, and
+serve warm windows share one read per (source, batch).
 """
 from repro.io.plink import PlinkBed, write_plink
 from repro.io.bgen import BgenFile, write_bgen
 from repro.io.numpy_io import NumpyGenotypes
 from repro.io.multifile import MultiFileSource, expand_genotype_paths
+from repro.io.packed_cache import PackedSlabCache, default_cache, read_packed_cached
 from repro.io.pheno import PhenotypeTable, align_tables, read_table
 from repro.io.synth import SyntheticCohort, make_cohort
 
 __all__ = [
+    "PackedSlabCache",
+    "default_cache",
+    "read_packed_cached",
     "PlinkBed",
     "write_plink",
     "BgenFile",

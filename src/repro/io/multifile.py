@@ -93,6 +93,21 @@ class MultiFileSource:
     def n_shards(self) -> int:
         return len(self.sources)
 
+    @property
+    def supports_packed(self) -> bool:
+        """Packed staging needs every shard to speak native 2-bit bytes
+        (rows are ceil(N/4) bytes for all shards, so slabs concatenate)."""
+        return all(getattr(s, "supports_packed", False) for s in self.sources)
+
+    def packed_cache_key(self) -> tuple:
+        keys = []
+        for s in self.sources:
+            fn = getattr(s, "packed_cache_key", None)
+            if fn is None:
+                raise ValueError(f"{_describe(s)} has no stable packed identity")
+            keys.append(fn())
+        return ("multi", tuple(keys))
+
     def _segments(self, lo: int, hi: int) -> list[tuple[int, int, int]]:
         """Split global [lo, hi) into (shard_id, local_lo, local_hi) runs."""
         if not (0 <= lo <= hi <= self.n_markers):

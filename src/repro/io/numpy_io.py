@@ -16,6 +16,11 @@ __all__ = ["NumpyGenotypes"]
 
 
 class NumpyGenotypes:
+    # ``read_packed`` re-packs decoded hardcalls on host (and raises on true
+    # dosages), so packed *staging* would cost more than it saves — staging
+    # negotiation (DESIGN.md §17) keeps numpy sources on the decoded path.
+    supports_packed = False
+
     def __init__(self, path: str):
         self.path = path
         if path.endswith(".npz"):

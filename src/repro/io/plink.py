@@ -83,6 +83,10 @@ class Marker:
 class PlinkBed:
     """Streaming reader over a .bed/.bim/.fam fileset."""
 
+    # PLINK bytes are the native layout: ``read_packed`` is a memmap view,
+    # so packed staging (DESIGN.md §17) can make 2-bit bytes the H2D currency.
+    supports_packed = True
+
     bed_path: str
     n_samples: int = field(init=False)
     n_markers: int = field(init=False)
@@ -132,6 +136,14 @@ class PlinkBed:
         bpm = self._bytes_per_marker
         slab = self._mmap[lo * bpm : hi * bpm]
         return np.asarray(slab).reshape(hi - lo, bpm)
+
+    def packed_cache_key(self) -> tuple:
+        """Stable identity for the shared packed-slab cache: same fileset on
+        disk (by realpath/size/mtime) -> same cached slabs across source
+        instances, which is what lets serve warm windows and resumed scans
+        reuse reads."""
+        st = os.stat(self.bed_path)
+        return ("plink", os.path.realpath(self.bed_path), st.st_size, st.st_mtime_ns)
 
     def read_dosages(self, lo: int, hi: int) -> np.ndarray:
         """Decoded ``(hi-lo, N) int8`` dosages, -9 missing — the reference path."""

@@ -20,6 +20,9 @@ __all__ = [
     "unpack_plink_to_codes",
     "repack_plink_tiled",
     "marker_stats_from_codes",
+    "marker_stats_from_packed",
+    "decode_packed_device",
+    "repack_plink_tiled_device",
     "gwas_dot",
 ]
 
@@ -94,6 +97,104 @@ def marker_stats_from_codes(codes: np.ndarray) -> tuple[np.ndarray, np.ndarray, 
     valid = (var > 1e-10) & (n_present > 0)
     inv_std = np.where(valid, 1.0 / np.sqrt(np.maximum(var, 1e-10)), 0.0)
     return mean.astype(np.float32), inv_std.astype(np.float32), valid
+
+
+_PARTIAL_CODE_COUNTS = np.zeros((5, 256, 3), np.uint8)
+for _r in range(1, 5):
+    for _b in range(256):
+        for _s in range(_r):
+            _c = (_b >> (2 * _s)) & 0b11
+            if _c == 0b00:
+                _PARTIAL_CODE_COUNTS[_r, _b, 0] += 1
+            elif _c == 0b10:
+                _PARTIAL_CODE_COUNTS[_r, _b, 1] += 1
+            elif _c == 0b11:
+                _PARTIAL_CODE_COUNTS[_r, _b, 2] += 1
+
+
+def marker_stats_from_packed(
+    plink_packed: np.ndarray, n_samples: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``marker_stats_from_codes`` evaluated straight off PLINK bytes.
+
+    A 256-entry count LUT tallies (n00, n10, n11) per byte — with a partial
+    LUT for the tail byte when ``n_samples % 4 != 0`` so pad slots never
+    count — then feeds the *identical* float64 count identities.  Bitwise
+    equal to ``marker_stats_from_codes(unpack_plink_to_codes(p, n))`` at
+    memcpy-level cost: the float decode of the genotype matrix never happens.
+    """
+    p = np.asarray(plink_packed, np.uint8)
+    full, rem = divmod(int(n_samples), 4)
+    counts = _PARTIAL_CODE_COUNTS[4][p[:, :full]].sum(axis=1, dtype=np.int64)
+    if rem:
+        counts = counts + _PARTIAL_CODE_COUNTS[rem][p[:, full]]
+    n00 = counts[:, 0].astype(np.float64)
+    n10 = counts[:, 1].astype(np.float64)
+    n11 = counts[:, 2].astype(np.float64)
+    n_present = n00 + n10 + n11
+    sum_d = 2.0 * n00 + n10
+    sum_d2 = 4.0 * n00 + n10
+    mean = sum_d / np.maximum(n_present, 1.0)
+    var = (sum_d2 - n_present * mean**2) / n_samples
+    valid = (var > 1e-10) & (n_present > 0)
+    inv_std = np.where(valid, 1.0 / np.sqrt(np.maximum(var, 1e-10)), 0.0)
+    return mean.astype(np.float32), inv_std.astype(np.float32), valid
+
+
+@functools.partial(jax.jit, static_argnames=("n_samples",))
+def decode_packed_device(plink_packed, *, n_samples: int):
+    """PLINK bytes ``(M, ceil(N/4)) uint8`` -> dosages ``(M, N) float32`` with
+    missing as -9.0, decoded on device by XLA shift/mask ops.
+
+    The code->dosage map matches the host ``_BYTE_LUT`` exactly
+    (0b00 -> 2, 0b01 -> -9, 0b10 -> 1, 0b11 -> 0): pure integer arithmetic,
+    so the emitted f32 values are bit-identical to the host decode.  Runs as
+    its own jitted executable — downstream prolog/step programs stay the
+    same compiled artifacts they were under dense staging, which is what
+    makes packed staging bitwise-neutral (§17).
+    """
+    c = (plink_packed[:, :, None].astype(jnp.int32) >> (2 * jnp.arange(4))) & 0b11
+    c = c.reshape(plink_packed.shape[0], -1)[:, :n_samples]
+    dose = (2 - c + (c >> 1)).astype(jnp.float32)
+    return jnp.where(c == 0b01, jnp.float32(-9.0), dose)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_samples", "block_n", "block_m")
+)
+def repack_plink_tiled_device(
+    plink_packed, *, n_samples: int, block_n: int, block_m: int
+):
+    """Disk layout -> kernel tile-local layout, as a device byte shuffle.
+
+    Mirrors host ``repack_plink_tiled`` + the ``block_m`` row padding the
+    fused step expects: unpack to codes, slice real samples, re-pad samples
+    to a ``block_n`` multiple and rows to a ``block_m`` multiple with the
+    missing code 0b01 (standardizes to exactly 0 under the padded
+    mean/inv_std of 0), then interleave 4 slot-planes per tile.  Integer
+    ops only — output bytes equal the host path's bit-for-bit.
+    """
+    if block_n % 4:
+        raise ValueError("block_n must be a multiple of 4")
+    m = plink_packed.shape[0]
+    c = (plink_packed[:, :, None].astype(jnp.uint8) >> (2 * jnp.arange(4, dtype=jnp.uint8))) & 0b11
+    c = c.reshape(m, -1)[:, :n_samples]
+    n_pad = n_samples + (-n_samples) % block_n
+    m_pad = m + (-m) % block_m
+    c = jnp.pad(
+        c,
+        ((0, m_pad - m), (0, n_pad - n_samples)),
+        constant_values=np.uint8(0b01),
+    )
+    quarter = block_n // 4
+    tiles = c.reshape(m_pad, n_pad // block_n, 4, quarter)
+    packed = (
+        tiles[:, :, 0, :]
+        | (tiles[:, :, 1, :] << 2)
+        | (tiles[:, :, 2, :] << 4)
+        | (tiles[:, :, 3, :] << 6)
+    )
+    return packed.reshape(m_pad, n_pad // 4).astype(jnp.uint8)
 
 
 @functools.partial(

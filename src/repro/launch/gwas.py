@@ -160,6 +160,16 @@ def build_scan_parser() -> argparse.ArgumentParser:
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--io-workers", type=int, default=2)
+    ap.add_argument("--genotype-staging", default="auto",
+                    choices=["auto", "packed", "dense"],
+                    help="H2D staging currency (DESIGN.md §17): 'packed' "
+                         "stages raw 2-bit PLINK bytes with device-side "
+                         "decode (~16x less transfer, bitwise-identical "
+                         "output), 'dense' stages decoded float32; 'auto' "
+                         "picks packed whenever the source supports it")
+    ap.add_argument("--packed-cache-mb", type=int, default=256,
+                    help="shared packed-slab host cache budget (scan, GRM, "
+                         "and serve warm windows share one read per batch)")
     return ap
 
 
@@ -208,7 +218,9 @@ def cmd_scan(argv) -> None:
             if args.engine == "lmm" else None
         ),
         io=IOSpec(io_workers=args.io_workers, spill_dir=args.out,
-                  hit_spill_rows=args.hit_spill_rows),
+                  hit_spill_rows=args.hit_spill_rows,
+                  genotype_staging=args.genotype_staging,
+                  packed_cache_mb=args.packed_cache_mb),
         executor=ExecSpec(devices=args.devices, placement=args.placement,
                           lease_batches=args.lease_batches,
                           slot_prefetch=args.slot_prefetch,
@@ -259,6 +271,8 @@ def cmd_scan(argv) -> None:
         "markers_per_s": session.n_markers / wall,
         "engine": args.engine,
         "sparse_epilogue": not args.no_sparse_epilogue,
+        # The *resolved* staging currency ("auto" negotiates per source)
+        "genotype_staging": session.prepared.ctx.genotype_staging,
         "writers": [w.name for w in writers],
         "genotype_shards": getattr(study.source, "n_shards", 1),
         "trait_block": args.trait_block,
@@ -313,6 +327,9 @@ def cmd_grm(argv) -> None:
                          "(needs a multi-file fileset)")
     ap.add_argument("--spectrum", action="store_true",
                     help="also eigendecompose and store (s, u)")
+    ap.add_argument("--genotype-staging", default="auto",
+                    choices=["auto", "packed", "dense"],
+                    help="H2D currency of the GRM pass (see scan --help)")
     args = ap.parse_args(argv)
 
     source = open_genotypes(args.genotypes)
@@ -320,6 +337,7 @@ def cmd_grm(argv) -> None:
     grm = stream_grm(
         source, batch_markers=args.batch_markers, method=args.method,
         maf_min=args.maf_min, io_workers=args.io_workers,
+        staging=args.genotype_staging,
     )
     k = grm.full()
     arrays: dict[str, np.ndarray] = {

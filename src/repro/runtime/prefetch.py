@@ -23,6 +23,13 @@ Four cooperating pieces (DESIGN.md §3, §10):
 The GWAS scan is IO-bound on the genotype stream when the fused kernel path
 is active (2-bit slabs are only N/4 bytes per marker), so a shallow queue and
 one or two decode workers keep the device saturated; both knobs are config.
+
+Under packed genotype staging (DESIGN.md §17) the currency these workers
+carry is the raw 2-bit slab itself: ``prepare_batch`` reads through the
+shared ``repro.io.packed_cache`` LRU (one disk read per (source, batch)
+across scan, GRM, and serve consumers) and the float decode happens on
+device, so a "decode" worker's cost drops to a memcpy plus per-marker stat
+LUTs.  The pipeline shape here is unchanged — only the payload shrinks ~16x.
 """
 from __future__ import annotations
 

@@ -1,0 +1,414 @@
+"""Packed genotype residency (DESIGN.md §17): device-side decode exactness,
+the shared packed-slab cache, staging negotiation, and end-to-end bitwise
+identity of packed vs dense staging across every engine."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import GridSpec, IOSpec, LmmSpec, Study, TsvWriter
+from repro.core.engines import resolve_genotype_staging
+from repro.core.grm import stream_grm
+from repro.io import NumpyGenotypes, open_genotypes, synth
+from repro.io.packed_cache import PackedSlabCache
+from repro.io.plink import PlinkBed, pack_dosages, write_plink
+from repro.kernels.gwas_dot import ops as kops
+
+TSVS = ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+
+
+@pytest.fixture(scope="module")
+def ragged_cohort():
+    # N % 4 == 3 so every packed row has a partial tail byte.
+    return synth.make_cohort(
+        n_samples=403, n_markers=300, n_traits=8, n_causal=6,
+        missing_rate=0.05, seed=11,
+    )
+
+
+@pytest.fixture(scope="module")
+def ragged_beds(ragged_cohort, tmp_path_factory):
+    stem = str(tmp_path_factory.mktemp("packed") / "toy")
+    return synth.write_split_plink(ragged_cohort, stem, n_shards=3)
+
+
+# ------------------------------------------------------------ device decode
+
+
+def test_device_decode_matches_host_lut(ragged_cohort, ragged_beds):
+    src = PlinkBed(ragged_beds[0])
+    packed = src.read_packed(0, src.n_markers)
+    host = src.read_dosages(0, src.n_markers).astype(np.float32)
+    dev = np.asarray(kops.decode_packed_device(packed, n_samples=src.n_samples))
+    assert dev.dtype == np.float32
+    np.testing.assert_array_equal(dev, host)
+
+
+@pytest.mark.parametrize("n_samples", [1, 2, 3, 4, 5, 7, 8, 403])
+def test_device_decode_ragged_tail(n_samples):
+    rng = np.random.default_rng(n_samples)
+    d = rng.choice(np.int8([-9, 0, 1, 2]), size=(6, n_samples))
+    packed = pack_dosages(d)
+    dev = np.asarray(kops.decode_packed_device(packed, n_samples=n_samples))
+    np.testing.assert_array_equal(dev, d.astype(np.float32))
+
+
+def test_device_repack_matches_host_tile_pack(ragged_beds):
+    src = PlinkBed(ragged_beds[1])
+    m, n = src.n_markers, src.n_samples
+    packed = src.read_packed(0, m)
+    codes = kops.unpack_plink_to_codes(packed, n)
+    host = kops.pack_tiled(codes, 128)
+    dev = np.asarray(
+        kops.repack_plink_tiled_device(packed, n_samples=n, block_n=128, block_m=64)
+    )
+    # Real rows are byte-identical; device pad rows use the all-missing byte
+    # (every slot 0b01) where the host pads with 0x01 — both standardize to
+    # exactly 0 under padded mean/inv_std of 0, and rows are independent.
+    assert dev.shape[0] == m + (-m) % 64
+    np.testing.assert_array_equal(dev[:m], host[:m])
+
+
+def test_marker_stats_from_packed_bitwise(ragged_beds):
+    src = PlinkBed(ragged_beds[2])
+    packed = src.read_packed(0, src.n_markers)
+    codes = kops.unpack_plink_to_codes(packed, src.n_samples)
+    want = kops.marker_stats_from_codes(codes)
+    got = kops.marker_stats_from_packed(packed, src.n_samples)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(g, w)
+        assert g.dtype == w.dtype
+
+
+def test_marker_stats_from_packed_edge_markers():
+    # all-missing, monomorphic, and pad-slot contamination candidates
+    d = np.array(
+        [
+            [-9, -9, -9, -9, -9],   # no present samples -> invalid
+            [2, 2, 2, 2, 2],        # monomorphic -> zero variance -> invalid
+            [0, 1, 2, -9, 1],
+            [1, 1, 1, 1, 0],
+        ],
+        np.int8,
+    )
+    packed = pack_dosages(d)
+    mean, inv, valid = kops.marker_stats_from_packed(packed, d.shape[1])
+    w_mean, w_inv, w_valid = kops.marker_stats_from_codes(
+        kops.unpack_plink_to_codes(packed, d.shape[1])
+    )
+    np.testing.assert_array_equal(mean, w_mean)
+    np.testing.assert_array_equal(inv, w_inv)
+    np.testing.assert_array_equal(valid, w_valid)
+    assert not valid[0] and not valid[1] and valid[2] and valid[3]
+
+
+# -------------------------------------------------------------- slab cache
+
+
+class _CountingBed(PlinkBed):
+    def __post_init__(self):
+        super().__post_init__()
+        self.reads = 0
+
+    def read_packed(self, lo, hi):
+        self.reads += 1
+        return super().read_packed(lo, hi)
+
+
+def test_cache_hits_and_key_stability(ragged_beds):
+    cache = PackedSlabCache(capacity_bytes=1 << 20)
+    a = _CountingBed(ragged_beds[0])
+    s1 = cache.read(a, 0, 10)
+    s2 = cache.read(a, 0, 10)
+    assert a.reads == 1 and s1 is s2 and not s1.flags.writeable
+    # A different instance over the same fileset shares the entry (serve's
+    # per-request sources, resumed scans).
+    b = _CountingBed(ragged_beds[0])
+    s3 = cache.read(b, 0, 10)
+    assert b.reads == 0 and s3 is s1
+    st = cache.stats()
+    assert st["hits"] == 2 and st["misses"] == 1
+
+
+def test_cache_lru_eviction(ragged_beds):
+    src = PlinkBed(ragged_beds[0])
+    row = (src.n_samples + 3) // 4
+    cache = PackedSlabCache(capacity_bytes=row * 25)  # fits two 10-marker slabs
+    cache.read(src, 0, 10)
+    cache.read(src, 10, 20)
+    cache.read(src, 20, 30)   # evicts [0, 10)
+    assert cache.stats()["evictions"] == 1
+    counting = _CountingBed(ragged_beds[0])
+    cache.read(counting, 0, 10)
+    assert counting.reads == 1  # was evicted -> re-read
+    cache.read(counting, 20, 30)
+    assert counting.reads == 1  # still resident
+
+
+def test_cache_bypasses_unkeyed_sources(ragged_cohort, tmp_path):
+    path = str(tmp_path / "g.npy")
+    np.save(path, ragged_cohort.dosages)
+    src = NumpyGenotypes(path)
+
+    class Unkeyed:
+        def read_packed(self, lo, hi):
+            return src.read_packed(lo, hi)
+
+    cache = PackedSlabCache()
+    cache.read(Unkeyed(), 0, 5)
+    assert cache.stats()["bypasses"] == 1 and cache.stats()["entries"] == 0
+
+
+# -------------------------------------------------------- staging negotiation
+
+
+def test_resolution_matrix(ragged_cohort, ragged_beds, tmp_path):
+    plink_src = PlinkBed(ragged_beds[0])
+    multi = open_genotypes(",".join(ragged_beds))
+    path = str(tmp_path / "g.npy")
+    np.save(path, ragged_cohort.dosages)
+    numpy_src = NumpyGenotypes(path)
+
+    assert resolve_genotype_staging("auto", plink_src) == "packed"
+    assert resolve_genotype_staging("auto", multi) == "packed"
+    assert resolve_genotype_staging("dense", plink_src) == "dense"
+    assert resolve_genotype_staging("auto", numpy_src) == "dense"
+    # blockers force the decoded path under auto ...
+    assert resolve_genotype_staging("auto", plink_src, excluded_samples=3) == "dense"
+    assert resolve_genotype_staging("auto", plink_src, mesh=object()) == "dense"
+    # ... and refuse an explicit packed request loudly
+    with pytest.raises(ValueError, match="no native 2-bit layout"):
+        resolve_genotype_staging("packed", numpy_src)
+    with pytest.raises(ValueError, match="exclusion"):
+        resolve_genotype_staging("packed", plink_src, excluded_samples=3)
+    with pytest.raises(ValueError, match="unknown genotype staging"):
+        resolve_genotype_staging("bogus", plink_src)
+
+
+def test_iospec_validates_staging():
+    with pytest.raises(ValueError, match="genotype_staging"):
+        IOSpec(genotype_staging="nope").validate()
+    IOSpec(genotype_staging="packed").validate()
+
+
+def test_staging_never_enters_fingerprint():
+    from repro.api.specs import ScanConfig
+
+    a = ScanConfig(genotype_staging="packed", packed_cache_mb=64)
+    b = ScanConfig(genotype_staging="dense")
+    assert a.fingerprint_payload() == b.fingerprint_payload()
+
+
+# ------------------------------------------------- end-to-end bitwise identity
+
+
+def _scan(source, cohort, out, *, staging, engine="dense", devices=1, **plan_kw):
+    study = Study.from_arrays(source, cohort.phenotypes, cohort.covariates)
+    plan_kw.setdefault("grid", GridSpec(batch_markers=128, trait_block=5))
+    if devices != 1:
+        from repro.api import ExecSpec
+
+        plan_kw["executor"] = ExecSpec(devices=devices)
+    plan = study.plan(io=IOSpec(genotype_staging=staging), engine=engine,
+                      hit_threshold_nlp=2.0, **plan_kw)
+    session = plan.run()
+    session.stream_to(TsvWriter(str(out)))
+    return plan, session
+
+
+def _read(out):
+    return {f: (out / f).read_text() for f in TSVS}
+
+
+@pytest.mark.parametrize(
+    "engine,extra",
+    [
+        ("dense", {}),
+        ("fused", {}),
+        ("lmm", {"lmm": LmmSpec(loco=True, grm_batch_markers=128)}),
+    ],
+)
+def test_packed_vs_dense_bitwise(engine, extra, ragged_cohort, ragged_beds, tmp_path):
+    """Ragged N (403), missing codes, multi-file shard boundaries: packed
+    staging emits byte-identical TSVs for every engine."""
+    src = open_genotypes(",".join(ragged_beds))
+    plan_d, _ = _scan(src, ragged_cohort, tmp_path / "dense",
+                      staging="dense", engine=engine, **extra)
+    plan_p, sess_p = _scan(src, ragged_cohort, tmp_path / "packed",
+                           staging="packed", engine=engine, **extra)
+    assert plan_d.prepare().ctx.genotype_staging == "dense"
+    assert plan_p.prepare().ctx.genotype_staging == "packed"
+    assert _read(tmp_path / "packed") == _read(tmp_path / "dense")
+    m = sess_p.metrics.summary()
+    assert m["h2d_bytes"] > 0
+    # ceil(403/4)=101 packed bytes vs 4*403=1612 dense bytes per marker
+    # (plus small stat vectors on the fused path) — well past the 8x floor.
+    assert m["h2d_bytes_per_marker"] < 1612 / 8
+
+
+def test_numpy_source_auto_falls_back_dense(ragged_cohort, tmp_path):
+    np.save(tmp_path / "g.npy", ragged_cohort.dosages)
+    src = NumpyGenotypes(str(tmp_path / "g.npy"))
+    plan, _ = _scan(src, ragged_cohort, tmp_path / "np_auto", staging="auto")
+    assert plan.prepare().ctx.genotype_staging == "dense"
+    with pytest.raises(ValueError, match="packed.*unavailable"):
+        _scan(src, ragged_cohort, tmp_path / "np_packed", staging="packed")
+
+
+def test_h2d_bytes_accounting_ratio(ragged_cohort, ragged_beds, tmp_path):
+    src = open_genotypes(",".join(ragged_beds))
+    _, dense = _scan(src, ragged_cohort, tmp_path / "d", staging="dense")
+    _, packed = _scan(src, ragged_cohort, tmp_path / "p", staging="packed")
+    bd = dense.metrics.summary()["h2d_bytes_per_marker"]
+    bp = packed.metrics.summary()["h2d_bytes_per_marker"]
+    assert bd / bp >= 8.0
+
+
+# ----------------------------------------------------------------- GRM path
+
+
+@pytest.mark.parametrize("method", ["std", "centered"])
+def test_grm_packed_bitwise(method, ragged_beds):
+    multi = open_genotypes(",".join(ragged_beds))
+    dense = stream_grm(multi, batch_markers=128, method=method, staging="dense")
+    packed = stream_grm(multi, batch_markers=128, method=method, staging="packed")
+    np.testing.assert_array_equal(packed.shard_sums, dense.shard_sums)
+    np.testing.assert_array_equal(packed.shard_norms, dense.shard_norms)
+    np.testing.assert_array_equal(packed.full(), dense.full())
+
+
+def test_grm_keep_mask_falls_back(ragged_beds):
+    src = PlinkBed(ragged_beds[0])
+    keep = np.ones(src.n_samples, bool)
+    keep[:5] = False
+    # auto + excluding mask -> decoded path, same numbers as before this PR
+    g = stream_grm(src, keep=keep, batch_markers=128, staging="auto")
+    assert g.n_samples == src.n_samples - 5
+    with pytest.raises(ValueError, match="exclusion"):
+        stream_grm(src, keep=keep, batch_markers=128, staging="packed")
+    # an all-true mask never subsets, so packed stays eligible
+    g2 = stream_grm(src, keep=np.ones(src.n_samples, bool),
+                    batch_markers=128, staging="packed")
+    assert g2.n_samples == src.n_samples
+
+
+# ------------------------------------------------- resume / replay reuse
+
+
+def test_resume_hits_packed_cache(ragged_cohort, ragged_beds, tmp_path):
+    """A resumed scan re-preps only pending batches, and those reads hit the
+    shared slab cache instead of the disk (satellite: replay/resume should
+    not re-prep)."""
+    from repro.io.packed_cache import default_cache
+
+    default_cache().clear()
+    src = _CountingBed(ragged_beds[0])
+    cohort_slice = ragged_cohort
+    study = Study.from_arrays(src, cohort_slice.phenotypes, cohort_slice.covariates)
+    ck = tmp_path / "ck"
+    grid = GridSpec(batch_markers=64, trait_block=5)
+
+    plan = study.plan(grid=grid, io=IOSpec(genotype_staging="packed"),
+                      checkpoint_dir=str(ck), hit_threshold_nlp=2.0)
+    session = plan.run()
+    session.stream_to(TsvWriter(str(tmp_path / "full")))
+    first_reads = src.reads
+    assert first_reads > 0
+
+    # Cut one mid-grid cell from the manifest and resume: only that batch
+    # re-preps, and its slab comes from the cache (no new disk read).
+    mpath = ck / "manifest.json"
+    mani = json.loads(mpath.read_text())
+    # trait_block=5 rounds up past n_traits, so cell keys are bare batch ids
+    assert "1" in mani["completed"]
+    mani["completed"].pop("1")
+    mpath.write_text(json.dumps(mani))
+
+    before = default_cache().stats()["hits"]
+    plan2 = study.plan(grid=grid, io=IOSpec(genotype_staging="packed"),
+                       checkpoint_dir=str(ck), hit_threshold_nlp=2.0)
+    session2 = plan2.run()
+    session2.stream_to(TsvWriter(str(tmp_path / "resumed")))
+    assert src.reads == first_reads           # zero new disk reads
+    assert default_cache().stats()["hits"] > before
+    assert _read(tmp_path / "resumed") == _read(tmp_path / "full")
+
+
+# ------------------------------------------- multi-device (4 fake devices)
+
+
+_CHILD = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json, tempfile
+    import os.path as osp
+    from repro.api import ExecSpec, GridSpec, IOSpec, Study, TsvWriter
+    from repro.io import open_genotypes, synth
+
+    co = synth.make_cohort(n_samples=203, n_markers=320, n_traits=10,
+                           n_causal=4, missing_rate=0.04, seed=9)
+    d = tempfile.mkdtemp()
+    beds = synth.write_split_plink(co, osp.join(d, "toy"), n_shards=3)
+    src = open_genotypes(",".join(beds))
+    study = Study.from_arrays(src, co.phenotypes, co.covariates)
+    grid = GridSpec(batch_markers=96, block_m=64, block_n=128, trait_block=5)
+    FILES = ("hits.tsv", "per_trait_best.tsv", "qc.tsv")
+
+    def scan(tag, staging, devices, engine="dense"):
+        plan = study.plan(
+            engine=engine, grid=grid, hit_threshold_nlp=2.0,
+            io=IOSpec(genotype_staging=staging),
+            executor=ExecSpec(devices=devices),
+        )
+        session = plan.run()
+        out = osp.join(d, tag)
+        session.stream_to(TsvWriter(out))
+        files = {f: open(osp.join(out, f)).read() for f in FILES}
+        return files, session
+
+    out = {}
+    for engine in ("dense", "fused"):
+        ref, _ = scan(f"{engine}_serial_dense", "dense", 1, engine)
+        pk1, s1 = scan(f"{engine}_serial_packed", "packed", 1, engine)
+        pk4, s4 = scan(f"{engine}_md_packed", "packed", 4, engine)
+        out[f"{engine}_serial_identical"] = pk1 == ref
+        out[f"{engine}_md_identical"] = pk4 == ref
+        out[f"{engine}_md_devices"] = len(
+            s4.metrics.summary()["per_device"]
+        )
+        out[f"{engine}_md_h2d_per_marker"] = s4.metrics.summary()[
+            "h2d_bytes_per_marker"
+        ]
+    print(json.dumps(out))
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def packed_md_results(tmp_path_factory):
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    env = dict(os.environ, PYTHONPATH=src)
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        timeout=900, env=env, cwd=str(tmp_path_factory.mktemp("packed_md")),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("engine", ["dense", "fused"])
+def test_multi_device_packed_bitwise(packed_md_results, engine):
+    assert packed_md_results[f"{engine}_serial_identical"] is True
+    assert packed_md_results[f"{engine}_md_identical"] is True
+    assert packed_md_results[f"{engine}_md_devices"] >= 2
+    # 203 samples: ceil(203/4)=51 packed vs 812 dense f32 bytes/marker
+    assert packed_md_results[f"{engine}_md_h2d_per_marker"] < 812 / 4
